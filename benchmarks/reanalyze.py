@@ -1,0 +1,39 @@
+"""Re-run the HLO analyzer over cached .hlo.gz dry-run artifacts (no
+recompile) and update the JSON records in place.
+
+    PYTHONPATH=src python -m benchmarks.reanalyze
+"""
+
+import glob
+import gzip
+import json
+import os
+
+from repro.launch.hlo_analysis import analyze
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def main():
+    for jpath in sorted(glob.glob(os.path.join(RESULTS, "*", "*.json"))):
+        hpath = jpath.replace(".json", ".hlo.gz")
+        if not os.path.exists(hpath):
+            print("no hlo for", jpath)
+            continue
+        with open(jpath) as f:
+            rec = json.load(f)
+        with gzip.open(hpath, "rt") as f:
+            hlo = f.read()
+        st = analyze(hlo, rec["n_devices"])
+        rec["flops"] = st["flops_per_device"]
+        rec["bytes_accessed"] = st["bytes_per_device"]
+        rec["collectives"] = {**st["collective_bytes_per_device"],
+                              "ops": st["collective_op_counts"],
+                              "total": st["collective_total"]}
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        print("reanalyzed", os.path.basename(jpath))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""End-to-end multi-expert serving driver — the paper's headline scenario.
+
+Builds a base model + several ComPEFT-compressed experts, then serves a
+mixed batch of requests through the LRU expert cache, reporting swap bytes
+vs the uncompressed baseline (paper Table 5 quantities).
+
+    PYTHONPATH=src python examples/serve_experts.py [--experts 4] [--requests 12]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import Runtime, build
+from repro.peft import compress_expert, task_vector
+from repro.peft.lora import _path_str
+from repro.serve import (EngineConfig, ExpertStore, Request, ServeEngine,
+                         uncompressed_baseline_bytes)
+
+RT = Runtime(attn_chunk_q=16, attn_chunk_k=16, remat_policy="none")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--experts", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--density", type=float, default=0.1)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("qwen2_5_3b", d_model=96, n_units=2)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+
+    # expert library: base + per-task deltas, ComPEFT-compressed
+    store = ExpertStore()
+    for i in range(args.experts):
+        leaves, tdef = jax.tree_util.tree_flatten(base)
+        keys = jax.random.split(jax.random.PRNGKey(100 + i), len(leaves))
+        ft = jax.tree_util.tree_unflatten(tdef, [
+            (l.astype(jnp.float32)
+             + 0.01 * jax.random.normal(k, l.shape)).astype(l.dtype)
+            for l, k in zip(leaves, keys)])
+        tau = task_vector(base, ft)
+        flat, _ = jax.tree_util.tree_flatten_with_path(tau)
+        art = compress_expert(f"expert{i}", "full",
+                              {_path_str(p): l for p, l in flat},
+                              density=args.density, alpha=1.0)
+        store.put(art)
+        if i == 0:
+            dense = uncompressed_baseline_bytes(art)
+            print(f"expert artifact: {art.nbytes:,} B compressed vs "
+                  f"{dense:,} B dense bf16 ({dense/art.nbytes:.1f}x)")
+
+    engine = ServeEngine(api, RT, base, store,
+                         EngineConfig(max_batch=4, cache_len=64,
+                                      device_cache_bytes=1 << 26))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, expert=f"expert{i % args.experts}",
+                    prompt=jnp.asarray(rng.integers(1, cfg.vocab, 16),
+                                       jnp.int32),
+                    max_new_tokens=6)
+            for i in range(args.requests)]
+
+    t0 = time.perf_counter()
+    engine.run(reqs)
+    dt = time.perf_counter() - t0
+    print(f"served {len(reqs)} requests across {args.experts} experts "
+          f"in {dt:.1f}s")
+    for r in reqs[:3]:
+        print(f"  req{r.uid} [{r.expert}]: {r.out_tokens}")
+    s = engine.swap_summary()
+    print("swap stats:", {k: v for k, v in s.items()
+                          if k in ('hits', 'misses', 'promotions',
+                                   'store_to_host_bytes',
+                                   'host_to_device_bytes', 'n_swaps')})
+    print(f"wire bytes saved by ComPEFT per miss: "
+          f"{s['host_to_device_bytes'] // max(s['misses'],1):,} dense-equiv "
+          f"vs {s['store_to_host_bytes'] // max(s['misses'],1):,} compressed")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

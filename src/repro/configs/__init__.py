@@ -1,0 +1,8 @@
+from repro.configs.base import (AttnCfg, BlockCfg, FFNCfg, FrontendCfg,
+                                MambaCfg, ModelConfig, MoECfg, RWKVCfg,
+                                ShardingOverrides, reduce_for_smoke)
+from repro.configs.registry import ARCHS, get_config, get_smoke_config
+
+__all__ = ["AttnCfg", "BlockCfg", "FFNCfg", "FrontendCfg", "MambaCfg",
+           "ModelConfig", "MoECfg", "RWKVCfg", "ShardingOverrides",
+           "reduce_for_smoke", "ARCHS", "get_config", "get_smoke_config"]

@@ -1,0 +1,117 @@
+"""Compression baselines the paper compares against (§4.1, App. C.1).
+
+* ``pruned``   — sparsify only; surviving entries keep their magnitudes.
+* ``stc``      — Sparse Ternary Compression (Sattler et al. 2019): top-k +
+                 ternary with the *mean magnitude of survivors* as scale
+                 (no tuned alpha).
+* ``bitdelta`` — sign of every entry (density 1.0), scale = mean |tau|
+                 ("No Training" variant of Liu et al. 2024).
+* ``dare``     — DARE(-x) random dropping with 1/(1-p) rescale of survivors
+                 (Yu et al. 2023 / Deng et al. 2024).
+
+All return dense task-vector pytrees of the original dtype so they can be
+evaluated through the identical pipeline as ComPEFT.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compeft import (CompressedTensor, CompressionConfig,
+                                _topk_threshold, compress)
+
+PyTree = Any
+
+
+def pruned(tau: PyTree, density: float) -> PyTree:
+    """Top-k magnitude pruning, magnitudes kept (paper's 'Pruned' ablation)."""
+
+    def f(t):
+        mag = jnp.abs(t.astype(jnp.float32))
+        thr = _topk_threshold(mag, density)
+        return jnp.where(mag >= thr, t.astype(jnp.float32), 0.0).astype(t.dtype)
+
+    return jax.tree_util.tree_map(f, tau)
+
+
+def stc(tau: PyTree, density: float) -> PyTree:
+    """Sparse Ternary Compression: scale = mean |survivors| (no alpha tune)."""
+
+    def f(t):
+        t32 = t.astype(jnp.float32)
+        mag = jnp.abs(t32)
+        thr = _topk_threshold(mag, density)
+        keep = mag >= thr
+        n_keep = jnp.maximum(jnp.sum(keep.astype(jnp.float32)), 1.0)
+        scale = jnp.sum(jnp.where(keep, mag, 0.0)) / n_keep
+        return (jnp.where(keep, jnp.sign(t32), 0.0) * scale).astype(t.dtype)
+
+    return jax.tree_util.tree_map(f, tau)
+
+
+def bitdelta(tau: PyTree) -> PyTree:
+    """Sign of every entry, scale = mean |tau| per tensor (density 1)."""
+
+    def f(t):
+        t32 = t.astype(jnp.float32)
+        scale = jnp.mean(jnp.abs(t32))
+        return (jnp.sign(t32) * scale).astype(t.dtype)
+
+    return jax.tree_util.tree_map(f, tau)
+
+
+def dare(tau: PyTree, density: float, key: jax.Array) -> PyTree:
+    """DARE: drop entries i.i.d. with prob (1-density), rescale by 1/density."""
+    leaves, treedef = jax.tree_util.tree_flatten(tau)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for t, k in zip(leaves, keys):
+        keep = jax.random.bernoulli(k, p=density, shape=t.shape)
+        out.append(jnp.where(keep, t.astype(jnp.float32) / density, 0.0
+                             ).astype(t.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def compeft_dense(tau: PyTree, density: float, alpha: float) -> PyTree:
+    """ComPEFT returned as a dense pytree (for like-for-like eval)."""
+    from repro.core.compeft import decompress
+    return decompress(compress(tau, CompressionConfig(density=density,
+                                                      alpha=alpha)))
+
+
+METHODS = ("compeft", "stc", "pruned", "bitdelta", "dare")
+
+
+def run_method(name: str, tau: PyTree, density: float, alpha: float = 1.0,
+               key: jax.Array | None = None) -> PyTree:
+    if name == "compeft":
+        return compeft_dense(tau, density, alpha)
+    if name == "stc":
+        return stc(tau, density)
+    if name == "pruned":
+        return pruned(tau, density)
+    if name == "bitdelta":
+        return bitdelta(tau)
+    if name == "dare":
+        return dare(tau, density, key if key is not None else jax.random.PRNGKey(0))
+    raise ValueError(f"unknown method {name!r}")
+
+
+def method_bits(name: str, n: int, density: float) -> float:
+    """Storage cost model per method (bits), matching the paper's accounting:
+    Golomb for ternary codes, bitmask for BitDelta, COO for DARE/Pruned."""
+    from repro.core import packing
+    if name in ("compeft", "stc"):
+        return packing.golomb_total_bits(n, density)
+    if name == "bitdelta":
+        return float(n) + 16.0  # one sign bit per param + scale
+    if name == "pruned":
+        # positions via Golomb + 16-bit magnitude per survivor
+        return density * n * (packing.golomb_bits_per_position(density) + 16.0) + 16.0
+    if name == "dare":
+        # COO: 32-bit index + 16-bit value per survivor
+        return density * n * 48.0
+    raise ValueError(name)

@@ -1,0 +1,146 @@
+"""Host-side Golomb-Rice codec for sparse ternary vectors (§2.2).
+
+Encodes the *gaps* between consecutive non-zero positions with Golomb-Rice
+coding (parameter ``b`` chosen per the paper's footnote-2 rule) plus one sign
+bit per non-zero.  This is the storage/network format; the on-device format
+is the bitplane pair in :mod:`repro.core.packing`.
+
+Deliberately numpy-only: variable-length bitstreams are a host job (see
+DESIGN.md §3 — porting branchy VLC decode to the TPU VPU would be a
+degenerate port of a CPU algorithm).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core.packing import golomb_bits_per_position
+
+
+class BitWriter:
+    def __init__(self):
+        self._bits: list[int] = []
+
+    def write(self, bit: int) -> None:
+        self._bits.append(bit & 1)
+
+    def write_unary(self, q: int) -> None:
+        self._bits.extend([1] * q)
+        self._bits.append(0)
+
+    def write_uint(self, v: int, nbits: int) -> None:
+        for i in range(nbits):
+            self._bits.append((v >> i) & 1)
+
+    def getvalue(self) -> bytes:
+        bits = np.array(self._bits, dtype=np.uint8)
+        return np.packbits(bits, bitorder="little").tobytes()
+
+    def __len__(self) -> int:  # number of bits
+        return len(self._bits)
+
+
+class BitReader:
+    def __init__(self, data: bytes, nbits: int):
+        arr = np.frombuffer(data, dtype=np.uint8)
+        self._bits = np.unpackbits(arr, bitorder="little")[:nbits]
+        self._pos = 0
+
+    def read(self) -> int:
+        b = int(self._bits[self._pos])
+        self._pos += 1
+        return b
+
+    def read_unary(self) -> int:
+        q = 0
+        while self.read() == 1:
+            q += 1
+        return q
+
+    def read_uint(self, nbits: int) -> int:
+        v = 0
+        for i in range(nbits):
+            v |= self.read() << i
+        return v
+
+
+def rice_parameter(density: float) -> int:
+    """Paper footnote 2: b* = 1 + floor(log2(log(phi-1)/log(1-p)))."""
+    p = min(max(density, 1e-12), 1.0 - 1e-12)
+    phi = (math.sqrt(5.0) + 1.0) / 2.0
+    return max(1, 1 + int(math.floor(math.log2(math.log(phi - 1.0) / math.log(1.0 - p)))))
+
+
+def encode(signs: np.ndarray, scale: float) -> bytes:
+    """Encode an int8 {-1,0,1} array + f32 scale into a Golomb-Rice stream.
+
+    Layout: [u64 n][u32 nnz][u8 b][f32 scale][payload bits...].
+    """
+    flat = np.asarray(signs, dtype=np.int8).reshape(-1)
+    n = flat.size
+    idx = np.nonzero(flat)[0]
+    nnz = idx.size
+    density = nnz / max(n, 1)
+    b = rice_parameter(density if nnz else 0.5)
+    m = 1 << b
+
+    w = BitWriter()
+    prev = -1
+    for i in idx:
+        gap = int(i - prev - 1)  # zeros skipped since last nnz
+        q, r = divmod(gap, m)
+        w.write_unary(q)
+        w.write_uint(r, b)
+        w.write(1 if flat[i] > 0 else 0)
+        prev = int(i)
+
+    header = (
+        np.uint64(n).tobytes()
+        + np.uint32(nnz).tobytes()
+        + np.uint8(b).tobytes()
+        + np.uint64(len(w)).tobytes()
+        + np.float32(scale).tobytes()
+    )
+    return header + w.getvalue()
+
+
+def decode(data: bytes) -> tuple[np.ndarray, float]:
+    """Inverse of :func:`encode` -> (int8 signs, scale)."""
+    n = int(np.frombuffer(data[0:8], np.uint64)[0])
+    nnz = int(np.frombuffer(data[8:12], np.uint32)[0])
+    b = int(np.frombuffer(data[12:13], np.uint8)[0])
+    nbits = int(np.frombuffer(data[13:21], np.uint64)[0])
+    scale = float(np.frombuffer(data[21:25], np.float32)[0])
+    r = BitReader(data[25:], nbits)
+
+    out = np.zeros((n,), dtype=np.int8)
+    pos = -1
+    m = 1 << b
+    for _ in range(nnz):
+        q = r.read_unary()
+        rem = r.read_uint(b)
+        gap = q * m + rem
+        pos = pos + gap + 1
+        out[pos] = 1 if r.read() == 1 else -1
+    return out, scale
+
+
+def encoded_bits(signs: np.ndarray) -> int:
+    """Exact bit count of the payload (excl. fixed 25-byte header)."""
+    flat = np.asarray(signs).reshape(-1)
+    n = flat.size
+    idx = np.nonzero(flat)[0]
+    if idx.size == 0:
+        return 0
+    b = rice_parameter(idx.size / n)
+    m = 1 << b
+    gaps = np.diff(np.concatenate([[-1], idx])) - 1
+    qs = gaps // m
+    return int(np.sum(qs + 1 + b + 1))
+
+
+def theoretical_bits_check(n: int, density: float) -> float:
+    """Average-case payload bits predicted by the paper's formula."""
+    return density * n * (golomb_bits_per_position(density) + 1.0)

@@ -1,0 +1,151 @@
+"""ComPEFT-style ternary gradient compression for cross-pod data parallelism.
+
+The paper's method descends from federated-learning compressors (STC,
+TernGrad — §5).  We close the loop: the same sparsify+ternarize+scale
+transform compresses the *cross-pod* gradient exchange during training,
+with error feedback so the compression bias does not accumulate.
+
+Topology: within a pod, gradients are reduced dense over the ``data`` axis
+(fast ICI).  Across pods (slow DCI links), each pod ternarizes its
+pod-local mean gradient, packs it into two uint32 bitplanes (2 bits/param
+vs 32) + one f32 scale, all-gathers the *packed* planes over the ``pod``
+axis, and decompresses+averages locally.  Error feedback keeps the residual
+``e_t = g_t - decompress(compress(g_t))`` and adds it to the next step's
+gradient (EF-SGD; Karimireddy et al. 2019).
+
+Everything is jit-compatible and runs inside ``shard_map`` in the train
+step.  Thresholding uses a Gaussian-quantile approximation (cheap,
+O(n)) rather than an exact sort — gradients are near-Gaussian (paper
+App. B.4/B.5), and EF absorbs the approximation error.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.scipy.special import erfinv
+
+PyTree = Any
+LANE = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class GradCompressionConfig:
+    density: float = 0.05          # fraction of entries kept per tensor
+    enabled: bool = True
+    exact_threshold: bool = False  # True: jnp.quantile (sort); False: Gaussian approx
+
+
+def gaussian_topk_threshold(x: jax.Array, density: float) -> jax.Array:
+    """|x| cut-off keeping ~density of entries assuming x ~ N(mu, sigma).
+
+    For centred Gaussians P(|x| > t) = k  =>  t = sigma * sqrt(2) * erfinv(1-k).
+    """
+    sigma = jnp.std(x) + 1e-12
+    t = jnp.sqrt(2.0) * erfinv(jnp.asarray(1.0 - density, x.dtype))
+    return sigma * t
+
+
+def _threshold(x: jax.Array, cfg: GradCompressionConfig) -> jax.Array:
+    if cfg.exact_threshold:
+        return jnp.quantile(jnp.abs(x).reshape(-1), 1.0 - cfg.density)
+    return gaussian_topk_threshold(x, cfg.density)
+
+
+def _pack_planes(signs: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """{-1,0,1} values -> two uint32 planes packed along the LAST axis only.
+
+    Shape [..., L] -> [..., ceil(L/32)].  Leading dims are untouched so a
+    GSPMD-sharded gradient leaf keeps its sharding through pack/exchange/
+    unpack — flattening the whole leaf would force XLA to replicate
+    multi-GiB gradients on every device."""
+    L = signs.shape[-1]
+    pad = (-L) % LANE
+    s = signs
+    if pad:
+        s = jnp.pad(s, [(0, 0)] * (s.ndim - 1) + [(0, pad)])
+    lanes = s.reshape(s.shape[:-1] + (-1, LANE))
+    w = (jnp.uint32(1) << jnp.arange(LANE, dtype=jnp.uint32))
+    pos = jnp.sum(jnp.where(lanes > 0, w, jnp.uint32(0)), axis=-1,
+                  dtype=jnp.uint32)
+    neg = jnp.sum(jnp.where(lanes < 0, w, jnp.uint32(0)), axis=-1,
+                  dtype=jnp.uint32)
+    return pos, neg
+
+
+def _unpack_planes(pos: jax.Array, neg: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`_pack_planes` -> f32 {-1,0,1} with last dim n."""
+    shifts = jnp.arange(LANE, dtype=jnp.uint32)
+    pb = ((pos[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
+    nb = ((neg[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
+    out = (pb - nb).reshape(pos.shape[:-1] + (-1,))
+    return out[..., :n]
+
+
+def compress_leaf_for_allgather(g: jax.Array, err: jax.Array,
+                                cfg: GradCompressionConfig):
+    """-> (pos_planes, neg_planes, scale, new_err). Shapes static under jit."""
+    g32 = g.astype(jnp.float32) + err
+    thr = _threshold(g32, cfg)
+    mask = jnp.abs(g32) >= thr
+    nnz = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+    # STC scale: mean magnitude of survivors => unbiased-ish magnitude transport
+    scale = jnp.sum(jnp.where(mask, jnp.abs(g32), 0.0)) / nnz
+    signs = jnp.where(mask, jnp.sign(g32), 0.0).astype(jnp.int8)
+    recon = signs.astype(jnp.float32) * scale
+    new_err = g32 - recon
+    pos, neg = _pack_planes(signs)
+    return pos, neg, scale, new_err
+
+
+def compressed_cross_pod_mean(grads: PyTree, errors: PyTree,
+                              cfg: GradCompressionConfig,
+                              axis_name: str = "pod") -> tuple[PyTree, PyTree]:
+    """EF-ternary all-reduce(mean) over ``axis_name``; call inside shard_map.
+
+    Returns (mean_grads, new_errors).  Collective payload per leaf:
+    2 * ceil(n/32) uint32 words + 1 f32 — a 16x reduction vs f32 ring
+    all-reduce, visible in the dry-run HLO as small all-gathers.
+    """
+    n_pods = lax.psum(1, axis_name)
+
+    def leaf(g, e):
+        n_last = g.shape[-1] if g.ndim else 1
+        g2 = g if g.ndim else g.reshape(1)
+        e2 = e if e.ndim else e.reshape(1)
+        pos, neg, scale, new_err = compress_leaf_for_allgather(g2, e2, cfg)
+        new_err = new_err.astype(e.dtype).reshape(e.shape)
+        pos_all = lax.all_gather(pos, axis_name)      # [pods, ..., words]
+        neg_all = lax.all_gather(neg, axis_name)
+        scale_all = lax.all_gather(scale, axis_name)  # [pods]
+
+        def body(p, acc):
+            return acc + _unpack_planes(pos_all[p], neg_all[p],
+                                        n_last) * scale_all[p]
+
+        init = lax.pvary(jnp.zeros(g2.shape, jnp.float32), (axis_name,))
+        acc = lax.fori_loop(0, n_pods, body, init)
+        mean = (acc / n_pods).reshape(g.shape).astype(g.dtype)
+        return mean, new_err
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    outs = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    mean = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_err = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return mean, new_err
+
+
+def init_error_state(params: PyTree) -> PyTree:
+    """Zero error-feedback accumulators (f32, same shapes as params)."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compression_ratio(cfg: GradCompressionConfig) -> float:
+    """Wire bytes dense-f32 / compressed (ignoring the scalar)."""
+    return 32.0 / 2.0 if cfg.enabled else 1.0

@@ -1,0 +1,155 @@
+"""Model merging and composition over (compressed) task vectors.
+
+Implements the paper's §3.6/§3.7 consumers of ComPEFT artifacts:
+
+* **Task Arithmetic** (Ilharco et al. 2023): theta = theta_init + lam * sum(tau_i).
+* **TIES-Merging** (Yadav et al. 2023): trim -> elect sign -> disjoint mean.
+* **LoraHub composition** (Huang et al. 2023): element-wise weighted sum of
+  LoRA A/B factors with weights learned by a gradient-free optimizer on
+  few-shot data (we implement the (1+1)-ES / random-search hybrid standing in
+  for Shiwa, which is a Nevergrad ensemble).
+
+All functions accept dense pytrees; ``merge_packed`` is the fast path that
+runs Task Arithmetic directly on packed ternary bitplanes using the bitwise
+algebra from ternary_ops (the paper's "faster merging" claim).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compeft import CompressedTensor
+from repro.core.packing import PackedTernary, unpack_ternary
+
+PyTree = Any
+
+
+def task_arithmetic(taus: Sequence[PyTree], lam: float = 1.0) -> PyTree:
+    """theta_delta = lam * sum_i tau_i."""
+    def add(*ls):
+        acc = ls[0].astype(jnp.float32)
+        for l in ls[1:]:
+            acc = acc + l.astype(jnp.float32)
+        return (lam * acc).astype(ls[0].dtype)
+    return jax.tree_util.tree_map(add, *taus)
+
+
+def ties_merge(taus: Sequence[PyTree], density: float = 0.2,
+               lam: float = 1.0) -> PyTree:
+    """TIES: (1) trim to top-k magnitude per task, (2) elect majority sign by
+    summed magnitude, (3) mean over entries agreeing with the elected sign."""
+    from repro.core.compeft import _topk_threshold
+
+    def merge_leaf(*ls):
+        trimmed = []
+        for t in ls:
+            t32 = t.astype(jnp.float32)
+            thr = _topk_threshold(jnp.abs(t32), density)
+            trimmed.append(jnp.where(jnp.abs(t32) >= thr, t32, 0.0))
+        stack = jnp.stack(trimmed)                      # [T, ...]
+        elected = jnp.sign(jnp.sum(stack, axis=0))      # majority by mass
+        agree = (jnp.sign(stack) == elected[None]) & (stack != 0.0)
+        num = jnp.sum(jnp.where(agree, stack, 0.0), axis=0)
+        den = jnp.maximum(jnp.sum(agree.astype(jnp.float32), axis=0), 1.0)
+        return (lam * num / den).astype(ls[0].dtype)
+
+    return jax.tree_util.tree_map(merge_leaf, *taus)
+
+
+def merge_packed(packed_taus: Sequence[PyTree], lam: float = 1.0) -> PyTree:
+    """Task Arithmetic over *packed* ternary trees without full decompression.
+
+    Each leaf result: lam * sum_i scale_i * (pos_i - neg_i), accumulated in
+    int16 sign-sums per distinct scale then combined — integer adds on
+    unpacked planes, no float matrix materialisation until the end.
+    """
+    def merge_leaf(*pts: PackedTernary):
+        acc = None
+        for p in pts:
+            s = unpack_ternary(p)
+            contrib = s.signs.astype(jnp.float32) * p.scale
+            acc = contrib if acc is None else acc + contrib
+        return (lam * acc).astype(pts[0].orig_dtype).reshape(pts[0].shape)
+
+    return jax.tree_util.tree_map(
+        merge_leaf, *packed_taus,
+        is_leaf=lambda x: isinstance(x, PackedTernary))
+
+
+# ---------------------------------------------------------------------------
+# LoraHub-style gradient-free composition
+# ---------------------------------------------------------------------------
+
+
+def compose_lora(modules: Sequence[PyTree], weights: jax.Array) -> PyTree:
+    """L_m = (sum w_i A_i, sum w_i B_i) — eq. (1) of the paper."""
+    def f(*ls):
+        stack = jnp.stack([l.astype(jnp.float32) for l in ls])
+        w = weights.reshape((-1,) + (1,) * (stack.ndim - 1))
+        return jnp.sum(w * stack, axis=0).astype(ls[0].dtype)
+    return jax.tree_util.tree_map(f, *modules)
+
+
+def lorahub_search(
+    modules: Sequence[PyTree],
+    loss_fn: Callable[[PyTree], float],
+    n_iters: int = 40,
+    seed: int = 0,
+    init_sigma: float = 0.35,
+    l1_reg: float = 0.05,
+) -> tuple[np.ndarray, float]:
+    """Gradient-free weight search (stand-in for Nevergrad's Shiwa).
+
+    (1+1)-ES with 1/5th-rule step adaptation + random restarts; minimises
+    ``loss_fn(compose_lora(modules, w)) + l1_reg * |w|_1`` like LoraHub.
+    Returns (best_weights, best_loss).
+    """
+    rng = np.random.default_rng(seed)
+    n = len(modules)
+
+    def total(w: np.ndarray) -> float:
+        l = float(loss_fn(compose_lora(modules, jnp.asarray(w, jnp.float32))))
+        return l + l1_reg * float(np.abs(w).sum())
+
+    best_w = np.zeros((n,), np.float64)
+    best_l = total(best_w)
+    w, lcur, sigma = best_w.copy(), best_l, init_sigma
+    for it in range(n_iters):
+        cand = w + rng.normal(0.0, sigma, size=n)
+        cand = np.clip(cand, -1.5, 1.5)
+        lc = total(cand)
+        if lc < lcur:
+            w, lcur = cand, lc
+            sigma *= 1.3
+            if lc < best_l:
+                best_w, best_l = cand.copy(), lc
+        else:
+            sigma *= 0.82
+        if sigma < 1e-3:  # restart
+            w = rng.normal(0.0, init_sigma, size=n)
+            lcur = total(w)
+            sigma = init_sigma
+    return best_w, best_l
+
+
+def pairwise_similarity_matrix(packed: Sequence[PyTree]) -> np.ndarray:
+    """Expert-expert cosine similarity via popcount algebra (fast routing /
+    dedup of an expert library)."""
+    from repro.core.ternary_ops import cosine_similarity
+
+    def tree_cos(a, b):
+        la = jax.tree_util.tree_leaves(a, is_leaf=lambda x: isinstance(x, PackedTernary))
+        lb = jax.tree_util.tree_leaves(b, is_leaf=lambda x: isinstance(x, PackedTernary))
+        sims = [float(cosine_similarity(x, y)) for x, y in zip(la, lb)]
+        return float(np.mean(sims))
+
+    n = len(packed)
+    m = np.eye(n)
+    for i in range(n):
+        for j in range(i + 1, n):
+            m[i, j] = m[j, i] = tree_cos(packed[i], packed[j])
+    return m

@@ -1,0 +1,154 @@
+"""Bit-level representations of ternary task vectors (§2.2 of the paper).
+
+Two on-the-wire formats:
+
+* **Bitplane pair** (compute-friendly): two packed ``uint32`` planes, one for
+  +1 positions, one for -1 positions, plus the f32 scale.  2 bits/param; this
+  is the format the Pallas kernels consume directly.
+* **Golomb** (storage-optimal): see :mod:`repro.core.golomb` — host-side codec
+  over the run lengths between non-zeros.
+
+Also: entropy accounting used for every storage number we report, matching
+the paper's formula ``H = -((1-k)log2(1-k) + k log2(k/2)) * d + 16`` bits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compeft import CompressedTensor
+
+LANE = 32  # uint32 bit lanes (TPU VPU native word)
+
+
+def entropy_bits(d: int, k: float) -> float:
+    """Paper §2.2: entropy of a d-dim ternary vector with density k, +16 for
+    the scalar."""
+    if k <= 0.0:
+        return 16.0
+    if k >= 1.0:
+        return float(d) + 16.0  # signs only: 1 bit each
+    h = -((1.0 - k) * math.log2(1.0 - k) + k * math.log2(k / 2.0))
+    return h * d + 16.0
+
+
+def golomb_bits_per_position(k: float) -> float:
+    """Paper footnote 2: average Golomb bits per *non-zero* position.
+
+    b* = 1 + floor(log2(log(phi - 1)/log(1 - p)));  phi = golden ratio.
+    bbar = b* + 1 / (1 - (1-p)^(2^b*)).
+    """
+    p = min(max(k, 1e-12), 1 - 1e-12)
+    phi = (math.sqrt(5.0) + 1.0) / 2.0
+    b_star = 1 + int(math.floor(math.log2(math.log(phi - 1.0) / math.log(1.0 - p))))
+    b_star = max(b_star, 1)
+    bbar = b_star + 1.0 / (1.0 - (1.0 - p) ** (2 ** b_star))
+    return bbar
+
+
+def golomb_total_bits(d: int, k: float) -> float:
+    """Total Golomb-coded size: positions + 1 sign bit per nnz + 16-bit scale."""
+    nnz = k * d
+    return nnz * (golomb_bits_per_position(k) + 1.0) + 16.0
+
+
+# ---------------------------------------------------------------------------
+# Bitplane pack / unpack (pure jnp reference; Pallas kernel mirrors this)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedTernary:
+    """Packed bitplane form of one compressed leaf.
+
+    ``pos``/``neg`` are uint32 arrays of shape ``(ceil(n/32),)`` over the
+    flattened original tensor (C order).  Bit ``i % 32`` of word ``i // 32``
+    is set iff element ``i`` is +1 (resp. -1).
+    """
+
+    pos: jax.Array
+    neg: jax.Array
+    scale: jax.Array
+    shape: tuple[int, ...] = ()
+    orig_dtype: Any = jnp.bfloat16
+
+    def tree_flatten(self):
+        return (self.pos, self.neg, self.scale), (self.shape, self.orig_dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        pos, neg, scale = children
+        return cls(pos=pos, neg=neg, scale=scale, shape=aux[0], orig_dtype=aux[1])
+
+    @property
+    def n_elements(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 0
+
+    @property
+    def packed_bytes(self) -> int:
+        return int(self.pos.size + self.neg.size) * 4 + 4
+
+
+def _pad_to_lanes(flat: jax.Array) -> jax.Array:
+    n = flat.shape[0]
+    pad = (-n) % LANE
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat
+
+
+def pack_bits(mask: jax.Array) -> jax.Array:
+    """Pack a flat boolean/0-1 int array into uint32 words (little-endian bits)."""
+    flat = _pad_to_lanes(mask.reshape(-1).astype(jnp.uint32))
+    lanes = flat.reshape(-1, LANE)
+    weights = (jnp.uint32(1) << jnp.arange(LANE, dtype=jnp.uint32))
+    return jnp.sum(lanes * weights[None, :], axis=1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`pack_bits` -> int32 0/1 array of length n."""
+    bits = (words[:, None] >> jnp.arange(LANE, dtype=jnp.uint32)[None, :]) & jnp.uint32(1)
+    return bits.reshape(-1)[:n].astype(jnp.int32)
+
+
+def pack_ternary(ct: CompressedTensor) -> PackedTernary:
+    flat = ct.signs.reshape(-1)
+    return PackedTernary(
+        pos=pack_bits(flat == 1),
+        neg=pack_bits(flat == -1),
+        scale=ct.scale,
+        shape=tuple(ct.signs.shape),
+        orig_dtype=ct.orig_dtype,
+    )
+
+
+def unpack_ternary(pt: PackedTernary) -> CompressedTensor:
+    n = pt.n_elements
+    signs = (unpack_bits(pt.pos, n) - unpack_bits(pt.neg, n)).astype(jnp.int8)
+    return CompressedTensor(signs=signs.reshape(pt.shape), scale=pt.scale,
+                            orig_dtype=pt.orig_dtype)
+
+
+def pack_tree(compressed: Any) -> Any:
+    return jax.tree_util.tree_map(
+        pack_ternary, compressed,
+        is_leaf=lambda x: isinstance(x, CompressedTensor))
+
+
+def unpack_tree(packed: Any) -> Any:
+    return jax.tree_util.tree_map(
+        unpack_ternary, packed,
+        is_leaf=lambda x: isinstance(x, PackedTernary))
+
+
+def tree_packed_bytes(packed: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        packed, is_leaf=lambda x: isinstance(x, PackedTernary))
+    return sum(l.packed_bytes for l in leaves)

@@ -1,0 +1,11 @@
+from repro.distributed.collectives import flash_combine, make_sp_decode_attn
+from repro.distributed.fault import (ElasticPlan, FailureInjector,
+                                     SimulatedFailure, StragglerMonitor)
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        make_shard_fn, param_shardings,
+                                        replicated)
+
+__all__ = ["flash_combine", "make_sp_decode_attn", "ElasticPlan",
+           "FailureInjector", "SimulatedFailure", "StragglerMonitor",
+           "batch_shardings", "cache_shardings", "make_shard_fn",
+           "param_shardings", "replicated"]

@@ -1,0 +1,163 @@
+"""Manual-collective regions: sequence-parallel flash decoding and the
+flash-stat combine.  Everything else in the system relies on GSPMD
+propagation; these are the places where the communication pattern is the
+algorithm (DESIGN.md §4 SP)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import AttnCfg
+from repro.models.attention import decode_attention_partial
+
+
+def flash_combine(parts, axis_names):
+    """Numerically-stable combine of flash partials across ``axis_names``.
+
+    parts: (o [B,H,D] f32 unnormalised, m [B,H], l [B,H]) per shard.
+    """
+    o, m, l = parts
+    m_g = lax.pmax(m, axis_names)
+    corr = jnp.where(m <= -1e38 / 2, 0.0, jnp.exp(m - m_g))
+    l_g = lax.psum(l * corr, axis_names)
+    o_g = lax.psum(o * corr[..., None], axis_names)
+    return o_g / jnp.maximum(l_g[..., None], 1e-30)
+
+
+def make_sp_decode_attn(mesh: Mesh, global_batch: Optional[int] = None
+                        ) -> Callable:
+    """Sequence-parallel decode attention: the KV cache is sequence-sharded
+    (over 'model', or over *all* axes when the batch can't shard — the
+    500k-cache layout); each shard computes flash partials over its slice
+    and the output is psum-combined.  Works for any head count and any
+    cache length divisible by the sequence shards.
+
+    Returned callable matches transformer.default_decode_cache_attn:
+      (q, k_new, v_new, cache_k, cache_v, pos, cur, attn_cfg)
+        -> (out [B,1,Hq,D], new_k, new_v, new_pos)
+    """
+    from repro.distributed.sharding import batch_axes, decode_layout
+
+    def sp_attn(q, k_new, v_new, cache_k, cache_v, pos, cur, attn_cfg):
+        B = q.shape[0]
+        gb = global_batch if global_batch is not None else B
+        baxes, seq_axes = decode_layout(mesh, gb)
+        n_seq = int(np.prod([mesh.shape[a] for a in seq_axes]))
+        S_total = cache_k.shape[1]
+        if S_total % n_seq != 0:
+            # tiny caches (smoke tests): fall back to local attention
+            from repro.models.transformer import default_decode_cache_attn
+            return default_decode_cache_attn(q, k_new, v_new, cache_k,
+                                             cache_v, pos, cur, attn_cfg)
+        S_loc = S_total // n_seq
+
+        def inner(q, k_new, v_new, ck, cv, pos_loc, cur):
+            idx = jnp.zeros((), jnp.int32)
+            mult = 1
+            for a in reversed(seq_axes):
+                idx = idx + lax.axis_index(a) * mult
+                mult *= mesh.shape[a]
+            slot = jnp.mod(cur, S_total)
+            local_start = idx * S_loc
+            in_range = (slot >= local_start) & (slot < local_start + S_loc)
+            lslot = jnp.clip(slot - local_start, 0, S_loc - 1)
+
+            k_upd = lax.dynamic_update_slice(
+                ck, k_new.astype(ck.dtype), (0, lslot, 0, 0))
+            v_upd = lax.dynamic_update_slice(
+                cv, v_new.astype(cv.dtype), (0, lslot, 0, 0))
+            pos_upd = lax.dynamic_update_slice(
+                pos_loc, (cur[None]).astype(pos_loc.dtype), (lslot,))
+            ck = jnp.where(in_range, k_upd, ck)
+            cv = jnp.where(in_range, v_upd, cv)
+            pos_loc = jnp.where(in_range, pos_upd, pos_loc)
+
+            o, m, l = decode_attention_partial(q, ck, cv, pos_loc, cur,
+                                               attn_cfg)
+            out = flash_combine((o, m, l), seq_axes)
+            return out[:, None].astype(q.dtype), ck, cv, pos_loc
+
+        qspec = P(baxes, None, None, None)
+        cspec = P(baxes, seq_axes, None, None)
+        f = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(qspec, qspec, qspec, cspec, cspec, P(seq_axes), P()),
+            out_specs=(qspec, cspec, cspec, P(seq_axes)),
+            check_vma=False)
+        return f(q, k_new, v_new, cache_k, cache_v, pos, cur)
+
+    return sp_attn
+
+
+def batch_axes_of(mesh: Mesh):
+    from repro.distributed.sharding import batch_axes
+    return tuple(a for a in batch_axes(mesh) if a != "pod")
+
+
+def make_vp_embed_lookup(mesh: Mesh) -> Callable:
+    """Manual vocab-parallel embedding lookup.
+
+    XLA's SPMD gather partitioner CHECK-crashes (spmd_partitioner_util.cc:
+    504) on vocab-sharded gathers in partially-manual scopes (jax 0.8.2),
+    and partially-manual inner regions hit a second crash ("Invalid binary
+    instruction opcode copy").  This lookup therefore goes FULLY manual: it
+    inspects the context mesh and takes every still-Auto axis manual, so
+    each (data, model[, pod]) shard gathers from its local table slice,
+    masks out-of-range ids, and psums over 'model'.  Falls back to a plain
+    gather when the vocab does not divide the model axis.
+    """
+    n_model = mesh.shape["model"]
+
+    def lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+        V, D = table.shape
+        if V % n_model != 0:
+            return table[tokens]
+
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or not am.axis_names:
+            return table[tokens]
+        from jax.sharding import AxisType
+        auto_axes = {n for n, t in zip(am.axis_names, am.axis_types)
+                     if t == AxisType.Auto}
+        if "model" not in auto_axes:
+            return table[tokens]
+        baxes = tuple(a for a in ("pod", "data")
+                      if a in auto_axes and a in mesh.axis_names)
+
+        import numpy as _np
+        dp = int(_np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+        B0 = tokens.shape[0]
+        pad_b = (-B0) % dp
+        if pad_b:   # manual regions need even batch shards: pad + slice
+            tokens = jnp.pad(tokens,
+                             ((0, pad_b),) + ((0, 0),) * (tokens.ndim - 1))
+
+        def inner(tbl, tok):
+            v_loc = tbl.shape[0]
+            off = lax.axis_index("model") * v_loc
+            loc = tok - off
+            ok = (loc >= 0) & (loc < v_loc)
+            x = tbl[jnp.clip(loc, 0, v_loc - 1)]
+            x = jnp.where(ok[..., None], x, jnp.zeros((), x.dtype))
+            return lax.psum(x, "model")
+
+        tok_spec = P(baxes) if tokens.ndim == 2 else P(baxes, None)
+        out_spec = (P(baxes, None, None) if tokens.ndim == 2
+                    else P(baxes, None, None, None))
+        # mesh omitted: use the context mesh (its already-Manual axes stay
+        # manual; we take all remaining Auto axes manual here)
+        out = jax.shard_map(
+            inner, axis_names=auto_axes,
+            in_specs=(P("model", None), tok_spec),
+            out_specs=out_spec, check_vma=False)(table, tokens)
+        return out[:B0] if pad_b else out
+
+    return lookup

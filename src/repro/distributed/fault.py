@@ -1,0 +1,84 @@
+"""Fault tolerance: simulated failure injection, straggler monitoring, and
+the elastic-restart contract.
+
+On real pods, failures surface as device errors / missed heartbeats; here
+they are injected deterministically so the recovery path is *testable*:
+because the data pipeline is stateless (batch = f(step)) and checkpoints
+are exact and mesh-agnostic, a crashed-and-restarted run must produce
+bit-identical parameters to an uninterrupted one — and the test suite
+asserts exactly that (tests/test_fault_tolerance.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+
+class SimulatedFailure(RuntimeError):
+    """Stands in for a node loss / device error during a step."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raise SimulatedFailure at the configured global steps (once each)."""
+
+    fail_at_steps: Sequence[int] = ()
+
+    def __post_init__(self):
+        self._pending = set(self.fail_at_steps)
+
+    def check(self, step: int) -> None:
+        if step in self._pending:
+            self._pending.discard(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """EWMA step-time tracker.  On TPU pods the mitigation is to exclude the
+    slow host and re-shard (elastic restart); here we record the decision.
+
+    slowdown_threshold: flag a step slower than threshold x EWMA.
+    """
+
+    alpha: float = 0.2
+    slowdown_threshold: float = 2.0
+    ewma: Optional[float] = None
+    flagged_steps: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        is_straggler = (self.ewma is not None
+                        and seconds > self.slowdown_threshold * self.ewma)
+        if is_straggler:
+            self.flagged_steps.append((step, seconds, self.ewma))
+        # stragglers don't poison the EWMA
+        if not is_straggler:
+            self.ewma = (seconds if self.ewma is None
+                         else self.alpha * seconds
+                         + (1 - self.alpha) * self.ewma)
+        return is_straggler
+
+    def recommendation(self) -> str:
+        if len(self.flagged_steps) >= 3:
+            return "exclude-host-and-reshard"
+        if self.flagged_steps:
+            return "monitor"
+        return "healthy"
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """Restart contract: a checkpoint saved under mesh A restores under mesh
+    B when (1) arrays are logical/unsharded on disk, (2) the data pipeline
+    is stateless in `step`, and (3) batch shardings are re-derived from the
+    new mesh.  ``repro.checkpoint.manager.restore(shardings=...)`` implements
+    (1)+(3); the pipeline guarantees (2)."""
+
+    old_shape: tuple
+    new_shape: tuple
+
+    def valid(self) -> bool:
+        # any mesh works as long as batch divides the new dp extent
+        return all(x > 0 for x in self.new_shape)

@@ -1,0 +1,48 @@
+"""Public jit'd entry points for the Pallas kernels, with automatic
+interpret-mode selection (interpret=True off-TPU so CI validates kernel
+bodies on CPU; compiled pallas on real TPUs)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PackedTernary
+from repro.kernels.pack import pack_ternary_planes
+from repro.kernels.popcount_dot import popcount_dot
+from repro.kernels.ternary_matmul import ternary_matmul
+from repro.kernels.unpack_add import unpack_add
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def apply_ternary_delta(base: jax.Array, pt: PackedTernary) -> jax.Array:
+    """Expert loading: base [M, N] + decompressed delta, fused."""
+    M, N = base.shape
+    pos = pt.pos.reshape(M, -1)
+    neg = pt.neg.reshape(M, -1)
+    return unpack_add(base, pos, neg, pt.scale, interpret=INTERPRET)
+
+
+def ternary_matvec(x: jax.Array, pt: PackedTernary) -> jax.Array:
+    """y = x @ (scale * ternary[K, N]) without materialising the matrix."""
+    K, N = pt.shape
+    pos = pt.pos.reshape(K, -1)
+    neg = pt.neg.reshape(K, -1)
+    squeeze = x.ndim == 1
+    x2 = x[None] if squeeze else x
+    y = ternary_matmul(x2, pos, neg, pt.scale, interpret=INTERPRET)[:, :N]
+    return y[0] if squeeze else y
+
+
+def compress_to_planes(tau: jax.Array, thr: jax.Array):
+    """Fused threshold+sign+pack for a [M, N] task-vector leaf."""
+    return pack_ternary_planes(tau, thr, interpret=INTERPRET)
+
+
+def expert_dot(a: PackedTernary, b: PackedTernary) -> jax.Array:
+    """Scaled ternary dot via AND+POPCNT."""
+    d = popcount_dot(a.pos.reshape(-1), a.neg.reshape(-1),
+                     b.pos.reshape(-1), b.neg.reshape(-1),
+                     interpret=INTERPRET)
+    return d.astype(jnp.float32) * a.scale * b.scale

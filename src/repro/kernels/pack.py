@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: fused threshold + sign + bitplane pack (compression).
+
+Given a task-vector tile and the pre-computed top-k magnitude threshold,
+emit the two uint32 bitplanes in one pass:
+
+    keep = |tau| >= thr
+    pos_bits = pack(keep & (tau > 0));  neg_bits = pack(keep & (tau < 0))
+
+The global threshold (one quantile per tensor) is computed outside — it is
+O(n) once per expert; the kernel is the bandwidth-bound part that runs over
+the full tensor and writes 2 bits/param.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 32
+
+
+def _kernel(tau_ref, thr_ref, pos_ref, neg_ref):
+    t = tau_ref[...].astype(jnp.float32)               # [BM, BN]
+    thr = thr_ref[0, 0]
+    keep = jnp.abs(t) >= thr
+    bm, bn = t.shape
+    lanes_p = (keep & (t > 0)).reshape(bm, bn // LANE, LANE)
+    lanes_n = (keep & (t < 0)).reshape(bm, bn // LANE, LANE)
+    weights = (jnp.uint32(1) << jnp.arange(LANE, dtype=jnp.uint32))[None, None]
+    pos_ref[...] = jnp.sum(
+        jnp.where(lanes_p, weights, jnp.uint32(0)), axis=-1, dtype=jnp.uint32)
+    neg_ref[...] = jnp.sum(
+        jnp.where(lanes_n, weights, jnp.uint32(0)), axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def pack_ternary_planes(tau: jax.Array, thr: jax.Array, *, bm: int = 256,
+                        bn: int = 512, interpret: bool = True):
+    """tau: [M, N] float; thr: scalar f32.  Returns (pos, neg) uint32
+    [M, ceil(N/32)] planes (zero bits in padding)."""
+    M, N = tau.shape
+    bm = min(bm, M)
+    bn = min(bn, max(LANE, N))
+    bn = (bn // LANE) * LANE
+    pad_m, pad_n = (-M) % bm, (-N) % bn
+    if pad_m or pad_n:
+        tau = jnp.pad(tau, ((0, pad_m), (0, pad_n)))
+    Mp, Np = tau.shape
+
+    pos, neg = pl.pallas_call(
+        _kernel,
+        grid=(Mp // bm, Np // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn // LANE), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn // LANE), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Mp, Np // LANE), jnp.uint32),
+            jax.ShapeDtypeStruct((Mp, Np // LANE), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(tau, thr.reshape(1, 1).astype(jnp.float32))
+    return pos[:M, : -(-N // LANE)], neg[:M, : -(-N // LANE)]

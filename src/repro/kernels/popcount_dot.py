@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: ternary-ternary dot product via AND + POPCNT.
+
+    <a, b> = popcnt(a+ & b+) + popcnt(a- & b-) - popcnt(a+ & b-) - popcnt(a- & b+)
+
+Operates on uint32 bitplanes (32 params/lane on the VPU) — the paper's
+§2.2 "two machine instructions per 64 parameters" idea, on TPU lanes.
+Used for expert-similarity / routing over compressed expert libraries.
+Each grid step emits a block-partial; ops.py sums the partials.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _kernel(ap_ref, an_ref, bp_ref, bn_ref, o_ref):
+    ap, an = ap_ref[...], an_ref[...]
+    bp, bn = bp_ref[...], bn_ref[...]
+
+    def pc(x):
+        return jnp.sum(lax.population_count(x).astype(jnp.int32))
+
+    o_ref[0, 0] = (pc(ap & bp) + pc(an & bn) - pc(ap & bn) - pc(an & bp))
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "interpret"))
+def popcount_dot(a_pos: jax.Array, a_neg: jax.Array, b_pos: jax.Array,
+                 b_neg: jax.Array, *, bw: int = 2048,
+                 interpret: bool = True) -> jax.Array:
+    """All inputs flat uint32 plane arrays of equal length.  Returns the
+    integer ternary dot product as int32 (scales applied by the caller)."""
+    (W,) = a_pos.shape
+    bw = min(bw, W)
+    pad = (-W) % bw
+    if pad:
+        a_pos, a_neg, b_pos, b_neg = (
+            jnp.pad(x, (0, pad)) for x in (a_pos, a_neg, b_pos, b_neg))
+    Wp = W + pad
+    n = Wp // bw
+
+    partials = pl.pallas_call(
+        _kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((bw,), lambda i: (i,)) for _ in range(4)],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        interpret=interpret,
+    )(a_pos, a_neg, b_pos, b_neg)
+    return jnp.sum(partials)

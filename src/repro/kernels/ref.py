@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 32
+
+
+def _unpack(words: jax.Array, n_last: int) -> jax.Array:
+    """[..., W] uint32 -> [..., W*32] int32 in {0,1}, truncated to n_last."""
+    shifts = jnp.arange(LANE, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(words.shape[:-1] + (-1,))[..., :n_last].astype(
+        jnp.int32)
+
+
+def dense_of_planes(pos: jax.Array, neg: jax.Array, n: int) -> jax.Array:
+    """[M, W] planes -> [M, n] float ternary matrix."""
+    return (_unpack(pos, n) - _unpack(neg, n)).astype(jnp.float32)
+
+
+def ternary_matmul_ref(x, pos, neg, scale):
+    K = x.shape[1]
+    N = pos.shape[1] * LANE
+    w = dense_of_planes(pos, neg, N)            # [K, N]
+    return (x.astype(jnp.float32) @ w) * scale
+
+
+def unpack_add_ref(base, pos, neg, scale):
+    M, N = base.shape
+    delta = dense_of_planes(pos, neg, N)
+    return (base.astype(jnp.float32) + scale * delta).astype(base.dtype)
+
+
+def pack_ternary_planes_ref(tau, thr):
+    t = tau.astype(jnp.float32)
+    keep = jnp.abs(t) >= thr
+    M, N = t.shape
+    padn = (-N) % LANE
+    posm = jnp.pad((keep & (t > 0)).astype(jnp.uint32), ((0, 0), (0, padn)))
+    negm = jnp.pad((keep & (t < 0)).astype(jnp.uint32), ((0, 0), (0, padn)))
+    w = (jnp.uint32(1) << jnp.arange(LANE, dtype=jnp.uint32))
+    pos = jnp.sum(posm.reshape(M, -1, LANE) * w, axis=-1, dtype=jnp.uint32)
+    neg = jnp.sum(negm.reshape(M, -1, LANE) * w, axis=-1, dtype=jnp.uint32)
+    return pos, neg
+
+
+def popcount_dot_ref(a_pos, a_neg, b_pos, b_neg):
+    n = a_pos.shape[0] * LANE
+    a = dense_of_planes(a_pos[None], a_neg[None], n)[0]
+    b = dense_of_planes(b_pos[None], b_neg[None], n)[0]
+    return jnp.sum(a * b).astype(jnp.int32)

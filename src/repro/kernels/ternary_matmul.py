@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: dense × packed-ternary matmul.
+
+    y[M, N] = scale * ( x[M, K] @ (pos - neg)[K, N] )
+
+with the ternary matrix stored as two uint32 bitplanes packed along the
+*output* dim (C-order of a [K, N] weight): planes have shape [K, N//32].
+
+TPU adaptation of the paper's §2.2 "binary vector" computation: the ternary
+delta streams HBM→VMEM at 2 bits/param (16x less bandwidth than bf16), is
+unpacked to ±1 tiles in-register, and contracts on the MXU.  Decode-time
+expert application is memory-bound, so the bandwidth saving is the win;
+the unpack ALU work rides free under the matmul.
+
+Grid: (M/BM, N/BN, K/BK), K innermost for accumulation in the VMEM output
+block.  Block shapes keep the MXU dims at 128 multiples.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+LANE = 32
+
+
+def _kernel(x_ref, pos_ref, neg_ref, scale_ref, o_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xb = x_ref[...]                                   # [BM, BK]
+    pw = pos_ref[...]                                 # [BK, BN//32] uint32
+    nw = neg_ref[...]
+    shifts = jnp.arange(LANE, dtype=jnp.uint32)[None, None, :]
+    pb = ((pw[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.int8)
+    nb = ((nw[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.int8)
+    w = (pb - nb).reshape(pw.shape[0], pw.shape[1] * LANE)  # [BK, BN]
+    acc = jnp.dot(xb.astype(jnp.float32), w.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+    @pl.when(k == n_k - 1)
+    def _scale():
+        o_ref[...] *= scale_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def ternary_matmul(x: jax.Array, pos: jax.Array, neg: jax.Array,
+                   scale: jax.Array, *, bm: int = 128, bn: int = 128,
+                   bk: int = 128, interpret: bool = True) -> jax.Array:
+    """x: [M, K] float; pos/neg: [K, N//32] uint32; scale: scalar f32.
+    Returns [M, N] f32."""
+    M, K = x.shape
+    Kp, Wn = pos.shape
+    assert Kp == K, (Kp, K)
+    N = Wn * LANE
+
+    bm = min(bm, M)
+    bk = min(bk, K)
+    bn = min(bn, N)
+    assert bn % LANE == 0
+    pad_m, pad_k, pad_n = (-M) % bm, (-K) % bk, (-N) % bn
+    if pad_m or pad_k:
+        x = jnp.pad(x, ((0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        pos = jnp.pad(pos, ((0, pad_k), (0, pad_n // LANE)))
+        neg = jnp.pad(neg, ((0, pad_k), (0, pad_n // LANE)))
+    Mp, Kpd, Np = M + pad_m, K + pad_k, N + pad_n
+    n_k = Kpd // bk
+
+    grid = (Mp // bm, Np // bn, n_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn // LANE), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn // LANE), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(x, pos, neg, scale.reshape(1, 1).astype(jnp.float32))
+    return out[:M, :N]

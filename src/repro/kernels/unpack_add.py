@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused ternary decompress + add (expert loading).
+
+    W_out[M, N] = W_base[M, N] + scale * (pos - neg)[M, N]
+
+planes packed along the last dim: [M, N//32] uint32.  One pass over the
+base weight: HBM traffic is  base(2B) + 2bits  per param instead of the
+naive  base(2B) + dense-delta(2B) + write(2B)  of materialise-then-add —
+this is the swap-latency fast path of the paper's Table 5 on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 32
+
+
+def _kernel(base_ref, pos_ref, neg_ref, scale_ref, o_ref):
+    pw = pos_ref[...]
+    nw = neg_ref[...]
+    shifts = jnp.arange(LANE, dtype=jnp.uint32)[None, None, :]
+    pb = ((pw[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
+    nb = ((nw[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
+    delta = (pb - nb).reshape(pw.shape[0], pw.shape[1] * LANE)
+    base = base_ref[...].astype(jnp.float32)
+    o_ref[...] = (base + scale_ref[0, 0] * delta).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def unpack_add(base: jax.Array, pos: jax.Array, neg: jax.Array,
+               scale: jax.Array, *, bm: int = 256, bn: int = 512,
+               interpret: bool = True) -> jax.Array:
+    """base: [M, N]; pos/neg: [M, N//32] uint32; scale scalar.  Returns
+    base + scale*(pos-neg) in base.dtype."""
+    M, N = base.shape
+    assert pos.shape == (M, N // LANE), (pos.shape, base.shape)
+    bm = min(bm, M)
+    bn = min(bn, N)
+    assert bn % LANE == 0
+    pad_m, pad_n = (-M) % bm, (-N) % bn
+    if pad_m or pad_n:
+        base = jnp.pad(base, ((0, pad_m), (0, pad_n)))
+        pos = jnp.pad(pos, ((0, pad_m), (0, pad_n // LANE)))
+        neg = jnp.pad(neg, ((0, pad_m), (0, pad_n // LANE)))
+    Mp, Np = base.shape
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(Mp // bm, Np // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn // LANE), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn // LANE), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), base.dtype),
+        interpret=interpret,
+    )(base, pos, neg, scale.reshape(1, 1).astype(jnp.float32))
+    return out[:M, :N]

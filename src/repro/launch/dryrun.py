@@ -1,0 +1,366 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and extract the roofline inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+
+Per cell this prints ``compiled.memory_analysis()`` (fits-in-HBM proof) and
+``compiled.cost_analysis()`` (FLOPs / bytes for the roofline), parses the
+post-SPMD HLO for per-device collective wire bytes, and writes JSON under
+``benchmarks/results/dryrun/<mesh>/``.
+
+NOTE: the XLA_FLAGS line above must run before ANY other import (jax locks
+the device count on first init) — hence the unusual module layout.
+"""
+
+import argparse
+import dataclasses
+import gzip
+import json
+import re
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.configs.registry import normalize
+from repro.distributed.collectives import make_sp_decode_attn
+from repro.distributed.sharding import (batch_axes, batch_shardings,
+                                        cache_shardings, make_shard_fn,
+                                        param_shardings, replicated)
+from repro.launch.mesh import make_production_mesh
+from repro.models import Runtime, build
+from repro.train import TrainConfig, init_train_state, make_train_step
+from repro.core.gradient_compression import GradCompressionConfig
+
+# ---------------------------------------------------------------------------
+# Cell table
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+# long_500k runs only for sub-quadratic-memory archs (DESIGN.md §5):
+LONG_OK = {"rwkv6_3b", "jamba_1_5_large_398b", "mixtral_8x7b", "gemma2_9b"}
+
+BIG_PARAM_THRESHOLD = 50e9   # adafactor + bf16 EF above this
+
+
+def cell_list(include_paper_arch: bool = False):
+    archs = [a for a in ARCHS if include_paper_arch or a != "llama_7b"]
+    cells = []
+    for a in archs:
+        for s in SHAPES:
+            if s == "long_500k" and a not in LONG_OK:
+                continue
+            cells.append((a, s))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+
+def input_specs(arch: str, shape: str) -> dict:
+    """Weak-type-correct, shardable, zero-allocation input descriptions."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    T, B = sh["seq_len"], sh["global_batch"]
+    sds = jax.ShapeDtypeStruct
+
+    if sh["kind"] in ("train", "prefill"):
+        if cfg.frontend is not None:
+            n_mod = min(cfg.frontend.n_tokens, T // 2)
+            text = T - n_mod
+            batch = {"tokens": sds((B, text), jnp.int32),
+                     "targets": sds((B, text), jnp.int32)}
+            key = "frames" if cfg.family == "audio" else "mm_embeds"
+            batch[key] = sds((B, n_mod, cfg.frontend.embed_dim), jnp.float32)
+        else:
+            batch = {"tokens": sds((B, T), jnp.int32),
+                     "targets": sds((B, T), jnp.int32)}
+        if sh["kind"] == "prefill":
+            batch.pop("targets")
+        return batch
+
+    # decode: one new token against a seq_len cache
+    api = build(cfg)
+    cache = jax.eval_shape(lambda: api.init_decode_cache(B, T))
+    return {"token": sds((B, 1), jnp.int32), "cache": cache}
+
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|u64|u32|s16|u16|s8|u8|pred)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+          "pred": 1}
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9\[\],{}_]+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return n_devices
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> dict:
+    """Per-device wire bytes per collective kind (ring cost model):
+      all-reduce: 2B(g-1)/g, all-gather/reduce-scatter/all-to-all: B(g-1)/g,
+      collective-permute: B.  B = result-shape bytes of the op."""
+    out: dict = {}
+    per_op: dict = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None or "-done" in line:
+            continue
+        ty, kind = m.group(1), m.group(2).lower()
+        nbytes = _shape_bytes(ty)
+        g = _group_size(line, n_devices)
+        if g <= 1:
+            continue
+        if kind == "all-reduce":
+            wire = 2 * nbytes * (g - 1) / g
+        elif kind == "collective-permute":
+            wire = nbytes
+        else:
+            wire = nbytes * (g - 1) / g
+        out[kind] = out.get(kind, 0.0) + wire
+        per_op[kind] = per_op.get(kind, 0) + 1
+    out["ops"] = per_op
+    out["total"] = sum(v for k, v in out.items()
+                       if k not in ("ops", "total"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+
+def _train_cfg_for(cfg, shape, multi_pod: bool = False) -> TrainConfig:
+    big = cfg.param_count() > BIG_PARAM_THRESHOLD
+    gb = SHAPES[shape]["global_batch"]
+    # microbatch size chosen per POD so batch shards stay even over `data`
+    per_pod = gb // (2 if multi_pod else 1)
+    micro = max(1, per_pod // (16 if big else 32))
+    return TrainConfig(
+        microbatches=micro,
+        optimizer="adafactor" if big else "adamw",
+        grad_compression=GradCompressionConfig(enabled=True, density=0.05),
+    )
+
+
+def make_runtime(mesh, cfg, global_batch: Optional[int] = None) -> Runtime:
+    from repro.distributed.collectives import make_vp_embed_lookup
+    from repro.distributed.collectives import make_vp_embed_lookup
+    return Runtime(shard=make_shard_fn(mesh, cfg),
+                   decode_attn=make_sp_decode_attn(mesh, global_batch),
+                   embed_lookup=make_vp_embed_lookup(mesh),
+                   remat_policy="unit")
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool = False,
+               extra_tags: str = "", save_hlo_to: str | None = None) -> dict:
+    arch = normalize(arch)
+    cfg = get_config(arch)
+    api = build(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    sh = SHAPES[shape]
+    kind = sh["kind"]
+    specs = input_specs(arch, shape)
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        params_sds = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+        pshard = param_shardings(params_sds, cfg, mesh)
+
+        if kind == "train":
+            tcfg = _train_cfg_for(cfg, shape, multi_pod)
+            rt = make_runtime(mesh, cfg)
+            state_sds = jax.eval_shape(
+                lambda: init_train_state(params_sds, tcfg, multi_pod))
+            from repro.distributed.sharding import train_state_shardings
+            st_shard = train_state_shardings(state_sds, cfg, mesh)
+            bshard = batch_shardings(specs, mesh)
+            step = make_train_step(api, rt, tcfg, mesh=mesh)
+            lowered = jax.jit(step, in_shardings=(st_shard, bshard)).lower(
+                state_sds, specs)
+        elif kind == "prefill":
+            rt = make_runtime(mesh, cfg, sh["global_batch"])
+            bshard = batch_shardings(specs, mesh)
+            cache_len = sh["seq_len"]
+
+            def prefill_fn(params, batch):
+                return api.prefill(params, batch, rt, cache_len)
+
+            cache_sds = jax.eval_shape(
+                lambda: api.init_decode_cache(sh["global_batch"], cache_len))
+            cshard = cache_shardings(cache_sds, mesh, sh["global_batch"])
+            lowered = jax.jit(
+                prefill_fn, in_shardings=(pshard, bshard),
+                out_shardings=(None, _cache_out_shardings(cshard)),
+            ).lower(params_sds, specs)
+        else:  # decode
+            rt = make_runtime(mesh, cfg, sh["global_batch"])
+            cshard = cache_shardings(specs["cache"], mesh,
+                                     sh["global_batch"])
+            from repro.distributed.sharding import decode_layout
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            baxes, _ = decode_layout(mesh, sh["global_batch"])
+            tshard = NamedSharding(mesh, P(baxes, None))
+
+            def serve_step(params, token, cache):
+                return api.decode_step(params, token, cache, rt)
+
+            lowered = jax.jit(
+                serve_step, in_shardings=(pshard, tshard, cshard),
+                out_shardings=(None, _cache_out_shardings(cshard)),
+            ).lower(params_sds, specs["token"], specs["cache"])
+
+        lower_s = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t1
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    from repro.launch.hlo_analysis import analyze
+    hstats = analyze(hlo, n_dev)
+    colls = collective_bytes(hlo, n_dev)   # naive (body-once) cross-check
+    if save_hlo_to:
+        with gzip.open(save_hlo_to, "wt") as f:
+            f.write(hlo)
+
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "kind": kind,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "n_devices": n_dev,
+        "seq_len": sh["seq_len"],
+        "global_batch": sh["global_batch"],
+        # while-aware per-device accounting (repro.launch.hlo_analysis)
+        "flops": hstats["flops_per_device"],
+        "bytes_accessed": hstats["bytes_per_device"],
+        "collectives": {**hstats["collective_bytes_per_device"],
+                        "ops": hstats["collective_op_counts"],
+                        "total": hstats["collective_total"]},
+        # raw XLA numbers (count scan bodies once; kept for cross-checks)
+        "xla_cost_flops": float(cost.get("flops", 0.0)),
+        "xla_bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "naive_collectives": colls,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "lower_s": round(lower_s, 2),
+        "compile_s": round(compile_s, 2),
+        "tags": extra_tags,
+    }
+    return result
+
+
+def _cache_out_shardings(cshard):
+    return cshard
+
+
+def result_path(arch: str, shape: str, multi_pod: bool, out_dir: str) -> str:
+    mesh = "pod2x16x16" if multi_pod else "pod16x16"
+    d = os.path.join(out_dir, mesh)
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, f"{normalize(arch)}__{shape}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", type=str,
+                    default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = cell_list()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(normalize(args.arch), args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        path = result_path(arch, shape, args.multi_pod, args.out)
+        if args.skip_existing and os.path.exists(path):
+            print(f"[dryrun] skip {arch} {shape} (exists)")
+            continue
+        print(f"[dryrun] {arch} {shape} multi_pod={args.multi_pod} ...",
+              flush=True)
+        try:
+            res = lower_cell(arch, shape, args.multi_pod,
+                             save_hlo_to=path.replace(".json", ".hlo.gz"))
+        except Exception as e:  # noqa
+            import traceback
+            traceback.print_exc()
+            failures.append((arch, shape, repr(e)[:200]))
+            continue
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"[dryrun]   flops={res['flops']:.3e} "
+              f"coll={res['collectives']['total']:.3e}B "
+              f"temp={res['memory']['temp_bytes']/2**30:.2f}GiB "
+              f"compile={res['compile_s']}s", flush=True)
+    if failures:
+        print("[dryrun] FAILURES:")
+        for f_ in failures:
+            print("   ", f_)
+        raise SystemExit(1)
+    print("[dryrun] all cells OK")
+
+
+if __name__ == "__main__":
+    main()

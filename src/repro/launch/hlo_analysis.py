@@ -1,0 +1,308 @@
+"""While-loop-aware HLO cost analyzer.
+
+``compiled.cost_analysis()`` counts while (scan) bodies ONCE and reports
+per-device numbers — useless for scanned-layer models (an 80-layer stack
+reports 1/80th of its FLOPs).  This module parses the post-SPMD HLO text,
+builds the computation call graph (while bodies x trip counts, fusions,
+calls), and accumulates:
+
+  * dot FLOPs            (2 x prod(result dims) x prod(contracting dims))
+  * HBM traffic proxy    (dot/fusion-boundary/collective/cache-update/gather
+                          bytes; standalone elementwise ops are treated as
+                          fused away, emulating the TPU backend's fusion)
+  * collective wire bytes per kind (ring model, group-size aware)
+
+All numbers are PER DEVICE (shapes in post-partitioning HLO are local).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1,
+                "u8": 1, "pred": 1, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+                "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _parse_op_line(line: str):
+    """Parse '%name = TYPE opcode(rest' with balanced-paren TYPE (nested
+    tuple types appear for scan carries).  Returns (name, type, opcode,
+    rest) or None."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    if i < n and line[i] == "(":       # tuple type: scan to balance
+        depth = 0
+        j = i
+        while j < n:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        type_str = line[i:j + 1]
+        k = j + 1
+    else:                               # simple type: up to next space
+        k = line.find(" ", i)
+        if k < 0:
+            return None
+        type_str = line[i:k]
+    mm = re.match(r"\s+([\w\-]+)\(", line[k:])
+    if not mm:
+        return None
+    opcode = mm.group(1).lower()
+    rest = line[k + mm.end():]
+    return name, type_str, opcode, rest
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*\))?\s*->.*\{")
+_WHILE_ATTR = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALLS_ATTR = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_ATTR = re.compile(r"to_apply=%?([\w\.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+
+SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy", "copy-start", "copy-done", "after-all", "partition-id",
+    "replica-id", "iota", "broadcast", "reshape", "transpose",
+    "custom-call", "get-dimension-size", "while", "conditional", "call",
+    "opt-barrier", "rng-bit-generator",
+}
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute"}
+
+
+def _shape_elems_bytes(type_str: str):
+    total_b = 0
+    total_e = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_b += n * _DTYPE_BYTES[dt]
+        total_e += n
+    return total_e, total_b
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str  # operands + attrs raw
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    symtab: dict  # value name -> result type string
+
+
+def parse_computations(hlo: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_START.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1), [], {})
+            continue
+        s = line.strip()
+        if s == "}" or s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed:
+            op = Op(*parsed)
+            cur.ops.append(op)
+            cur.symtab[op.name] = op.result_type
+    return comps
+
+
+def _base_opcode(opcode: str) -> str:
+    for suffix in ("-start", "-done"):
+        if opcode.endswith(suffix):
+            return opcode[: -len(suffix)]
+    return opcode
+
+
+def _trip_count(cond: Computation) -> int:
+    """Scan-lowered whiles compare the induction var against a constant;
+    take the largest integer constant in the condition computation."""
+    best = 1
+    for op in cond.ops:
+        # constants print as: %c = s32[] constant(80)
+        if op.opcode == "constant":
+            mm = re.match(r"^(\d+)\)", op.rest)
+            if mm:
+                best = max(best, int(mm.group(1)))
+    return best
+
+
+def _group_size(rest: str, n_devices: int) -> int:
+    m = _GROUPS_IOTA.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(rest)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return n_devices
+
+
+def _dot_flops(op: Op, symtab: dict) -> float:
+    res_elems, _ = _shape_elems_bytes(op.result_type)
+    names = _OPERANDS.findall(op.rest.split(")", 1)[0])
+    lhs_type = symtab.get(names[0]) if names else None
+    contract = 1
+    m = _CONTRACT.search(op.rest)
+    if lhs_type and m:
+        dims = [int(x) for x in m.group(1).split(",") if x]
+        sm = _SHAPE_RE.search(lhs_type)
+        if sm:
+            lhs_dims = [int(x) for x in sm.group(2).split(",") if x]
+            for d in dims:
+                if d < len(lhs_dims):
+                    contract *= lhs_dims[d]
+    return 2.0 * res_elems * contract
+
+
+def _op_bytes(op: Op, symtab: dict) -> float:
+    """Traffic proxy: result + resolvable operand bytes."""
+    _, b = _shape_elems_bytes(op.result_type)
+    names = _OPERANDS.findall(op.rest.split(")", 1)[0])
+    for n in names:
+        t = symtab.get(n)
+        if t:
+            _, ob = _shape_elems_bytes(t)
+            b += ob
+    return float(b)
+
+
+def analyze(hlo: str, n_devices: int, entry: str | None = None) -> dict:
+    comps = parse_computations(hlo)
+    if entry is None:
+        # ENTRY computation: the one containing 'main' or the last one
+        entry = next((n for n in comps if ".main" in n or n.startswith("main")),
+                     None) or list(comps)[-1]
+
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # BFS through the call graph accumulating multipliers
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for op in comp.ops:
+            if op.opcode == "while":
+                wm = _WHILE_ATTR.search(op.rest)
+                if not wm:
+                    continue
+                cond_name, body_name = wm.group(1), wm.group(2)
+                tm = _TRIP_RE.search(op.rest)
+                if tm:
+                    trips = int(tm.group(1))
+                else:
+                    trips = _trip_count(comps[cond_name]) \
+                        if cond_name in comps else 1
+                for child in (body_name, cond_name):
+                    mult[child] += m * trips
+                    if child not in seen:
+                        seen.add(child)
+                        order.append(child)
+            else:
+                for attr in (_CALLS_ATTR, _TO_ATTR):
+                    am = attr.search(op.rest)
+                    if am:
+                        child = am.group(1)
+                        mult[child] += m
+                        if child not in seen:
+                            seen.add(child)
+                            order.append(child)
+
+    flops = 0.0
+    bytes_traffic = 0.0
+    coll = defaultdict(float)
+    coll_ops = defaultdict(int)
+    fused = {n for n in comps if "fused" in n}
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = cname in fused
+        for op in comp.ops:
+            oc = _base_opcode(op.opcode)
+            if oc in ("dot", "convolution"):
+                flops += m * _dot_flops(op, comp.symtab)
+                if in_fusion:
+                    continue
+                bytes_traffic += m * _op_bytes(op, comp.symtab)
+            elif oc in COLLECTIVES:
+                if op.opcode.endswith("-done"):
+                    continue
+                _, nbytes = _shape_elems_bytes(op.result_type)
+                g = _group_size(op.rest, n_devices)
+                if g <= 1:
+                    continue
+                if oc == "all-reduce":
+                    wire = 2 * nbytes * (g - 1) / g
+                elif oc == "collective-permute":
+                    wire = nbytes
+                else:
+                    wire = nbytes * (g - 1) / g
+                coll[oc] += m * wire
+                coll[f"{oc}@g{g}"] += m * wire   # per-group-size breakdown
+                coll_ops[oc] += 1
+                bytes_traffic += m * _op_bytes(op, comp.symtab)
+            elif oc == "fusion":
+                bytes_traffic += m * _op_bytes(op, comp.symtab)
+            elif oc in ("dynamic-update-slice", "scatter"):
+                # XLA aliases DUS in place: traffic = the update operand
+                # (second arg), not the whole buffer
+                names = _OPERANDS.findall(op.rest.split(")", 1)[0])
+                upd = comp.symtab.get(names[1]) if len(names) > 1 else None
+                _, ub = _shape_elems_bytes(upd) if upd else (0, 0)
+                bytes_traffic += m * ub
+            elif oc in ("gather", "dynamic-slice"):
+                # reads only the gathered rows ~= result size (+write)
+                _, rb = _shape_elems_bytes(op.result_type)
+                bytes_traffic += m * 2 * rb
+            # standalone elementwise/reduce ops are skipped: the TPU
+            # backend fuses them into neighbours, so counting them (as the
+            # CPU backend's sparser fusion would suggest) would overstate
+            # HBM traffic several-fold.
+
+    kinds_total = sum(v for k, v in coll.items() if "@" not in k)
+    out = {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_traffic,
+        "collective_bytes_per_device": dict(coll),
+        "collective_total": float(kinds_total),
+        "collective_op_counts": dict(coll_ops),
+        "n_computations": len(comps),
+    }
+    return out

@@ -1,0 +1,21 @@
+"""Production meshes.  Defined as functions so importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax use)."""
+
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.  Multi-pod adds a 'pod'
+    axis: (pod=2, data=16, model=16) = 512 chips."""
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants used by the roofline (benchmarks/roofline.py)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+CHIPS_PER_POD = 256

@@ -1,0 +1,4 @@
+from repro.models.model import ModelApi, build, cross_entropy
+from repro.models.transformer import Runtime
+
+__all__ = ["ModelApi", "build", "cross_entropy", "Runtime"]

@@ -1,0 +1,290 @@
+"""Attention: chunked online-softmax (flash-style) for train/prefill, and
+decode attention over a ring-buffer KV cache with sequence-parallel partial
+statistics.
+
+Design notes (see DESIGN.md §4):
+
+* Train/prefill attention iterates a **static pair schedule** of
+  (q-chunk, kv-chunk) tiles via ``lax.scan``.  Causal masking and sliding
+  windows prune the schedule *statically*, so compiled HLO FLOPs equal the
+  true cost (T²/2 causal, T·w SWA) — this matters because the roofline
+  reads ``compiled.cost_analysis()``.
+* Decode attention returns flash partials ``(o, m, l)`` so the caller can
+  combine across sequence-sharded cache shards with a stable ``psum``
+  (``repro.distributed.collectives.flash_combine``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import AttnCfg
+from repro.models.common import apply_rope, softcap
+
+NEG_INF = -2.0e38
+
+
+def _chunk_pairs(nq: int, nk: int, causal: bool,
+                 window_chunks: Optional[int]) -> np.ndarray:
+    """Static (i, j) tile schedule.  For causal self-attention nq == nk and
+    only j <= i tiles are emitted; a window additionally drops tiles entirely
+    below the diagonal band."""
+    pairs = []
+    for i in range(nq):
+        for j in range(nk):
+            if causal and j > i:
+                continue
+            if window_chunks is not None and (i - j) > window_chunks:
+                continue
+            pairs.append((i, j))
+    return np.asarray(pairs, np.int32)
+
+
+def flash_attention(
+    q: jax.Array,                 # [B, T, Hq, D]
+    k: jax.Array,                 # [B, S, Hkv, D]
+    v: jax.Array,                 # [B, S, Hkv, D]
+    cfg: AttnCfg,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    kv_valid_len: Optional[int] = None,
+    chunk_q: int = 512,
+    chunk_k: int = 512,
+    shard_fn=None,
+) -> jax.Array:
+    """Chunked flash attention.  Returns [B, T, Hq, D] in q.dtype.
+
+    ``shard_fn(x, logical_axes)`` (optional) pins the scan-carry shardings;
+    without it GSPMD may pick a carry sharding that mismatches the body and
+    re-gather the full [B,nq,cq,H,G,D] o-buffer EVERY pair step (measured:
+    67 TB/device on llama4 prefill — EXPERIMENTS.md §Perf E2)."""
+    B, T, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+
+    cq = min(chunk_q, T)
+    ck = min(chunk_k, S)
+    pad_t = (-T) % cq
+    pad_s = (-S) % ck
+    if pad_t:
+        q = jnp.pad(q, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    Tp, Sp = T + pad_t, S + pad_s
+    nq, nk = Tp // cq, Sp // ck
+
+    win_chunks = None
+    if cfg.window is not None and causal:
+        win_chunks = int(np.ceil(cfg.window / ck)) + 1
+    pairs = jnp.asarray(_chunk_pairs(nq, nk, causal and T == S, win_chunks))
+
+    qc = q.reshape(B, nq, cq, Hkv, G, D)
+    kc = k.reshape(B, nk, ck, Hkv, D)
+    vc = v.reshape(B, nk, ck, Hkv, D)
+
+    m0 = jnp.full((B, nq, cq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, cq, Hkv, G), jnp.float32)
+    o0 = jnp.zeros((B, nq, cq, Hkv, G, D), jnp.float32)
+
+    def pin(m, l, o):
+        if shard_fn is None:
+            return m, l, o
+        # carry sharded over model on cq (dim 2): the per-step dynamic ops
+        # slice dim 1 (nq) only, so this layout needs zero resharding per
+        # step.  Head axes win when they are model-shardable.
+        ml_axes = ("batch", None, "flash_cq", "kv_heads", None)
+        m = shard_fn(m, ml_axes)
+        l = shard_fn(l, ml_axes)
+        o = shard_fn(o, ml_axes + (None,))
+        return m, l, o
+
+    m0, l0, o0 = pin(m0, l0, o0)
+
+    kv_len = S if kv_valid_len is None else kv_valid_len
+
+    def body(carry, ij):
+        m, l, o = carry
+        i, j = ij[0], ij[1]
+        qi = lax.dynamic_index_in_dim(qc, i, axis=1, keepdims=False)
+        kj = lax.dynamic_index_in_dim(kc, j, axis=1, keepdims=False)
+        vj = lax.dynamic_index_in_dim(vc, j, axis=1, keepdims=False)
+
+        # scores: [B, cq, Hkv, G, ck]
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qi.astype(jnp.float32),
+                       kj.astype(jnp.float32), optimize=True) * scale
+        s = softcap(s, cfg.attn_softcap)
+
+        q_pos = q_offset + i * cq + jnp.arange(cq)
+        k_pos = j * ck + jnp.arange(ck)
+        mask = jnp.ones((cq, ck), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if cfg.window is not None and causal:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < cfg.window
+        mask &= (k_pos < kv_len)[None, :]
+        # additive mask: jnp.where(mask, s, NEG_INF) would give the NEG_INF
+        # constant a cotangent that is batch-reduced ACROSS PODS in the
+        # backward (measured: 1 MB x 9216 cross-pod all-reduces on qwen3
+        # train, §Perf E3); the additive form keeps the constant out of AD
+        neg = jnp.where(mask, 0.0, NEG_INF)[None, :, None, None, :]
+        s = s + lax.stop_gradient(neg)
+
+        mi = lax.dynamic_index_in_dim(m, i, axis=1, keepdims=False)
+        li = lax.dynamic_index_in_dim(l, i, axis=1, keepdims=False)
+        oi = lax.dynamic_index_in_dim(o, i, axis=1, keepdims=False)
+
+        m_new = jnp.maximum(mi, jnp.max(s, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = p * lax.stop_gradient(
+            mask[None, :, None, None, :].astype(jnp.float32))
+        alpha = jnp.where(mi <= NEG_INF / 2, 0.0, jnp.exp(mi - m_safe))
+        l_new = alpha * li + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqhgk,bkhd->bqhgd", p, vj.astype(jnp.float32),
+                        optimize=True)
+        o_new = alpha[..., None] * oi + pv
+
+        m = lax.dynamic_update_index_in_dim(m, m_new, i, axis=1)
+        l = lax.dynamic_update_index_in_dim(l, l_new, i, axis=1)
+        o = lax.dynamic_update_index_in_dim(o, o_new, i, axis=1)
+        return pin(m, l, o), None
+
+    # remat: without this, backward materialises every pair-step's p-matrix
+    # ([B,cq,Hkv,G,ck] f32 x n_pairs) during the enclosing unit's backward
+    (m, l, o), _ = lax.scan(jax.checkpoint(body), (m0, l0, o0), pairs)
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    out = out.reshape(B, Tp, Hq, D)[:, :T]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer: covers global caches and SWA windows uniformly)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KVCache:
+    """Per-layer-stack cache.  ``k``/``v``: [units, B, S, Hkv, D]; ``pos``:
+    [units, S] absolute position held in each slot (-1 = empty)."""
+
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.pos), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_kv_cache(n_units: int, batch: int, seq: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((n_units, batch, seq, n_kv, head_dim), dtype),
+        v=jnp.zeros((n_units, batch, seq, n_kv, head_dim), dtype),
+        pos=jnp.full((n_units, seq), -1, jnp.int32),
+    )
+
+
+def cache_write(k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array,
+                k_new: jax.Array, v_new: jax.Array, cur: jax.Array):
+    """Write one token (k_new/v_new: [B, 1, Hkv, D]) at ring slot cur % S.
+
+    Single-shard version; the sequence-sharded variant lives in
+    ``repro.distributed.collectives.sp_cache_write``.
+    """
+    S = k_cache.shape[1]
+    slot = jnp.mod(cur, S)
+    k_cache = lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype),
+                                       (0, slot, 0, 0))
+    v_cache = lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype),
+                                       (0, slot, 0, 0))
+    pos = lax.dynamic_update_slice(pos, cur[None].astype(jnp.int32), (slot,))
+    return k_cache, v_cache, pos
+
+
+def decode_attention_partial(
+    q: jax.Array,        # [B, 1, Hq, D] (rope already applied)
+    k_cache: jax.Array,  # [B, S_loc, Hkv, D] (rope already applied at write)
+    v_cache: jax.Array,  # [B, S_loc, Hkv, D]
+    pos: jax.Array,      # [S_loc] absolute positions, -1 empty
+    cur: jax.Array,      # scalar current absolute position
+    cfg: AttnCfg,
+):
+    """One-token attention over a (possibly sequence-sharded) cache slice.
+
+    Returns flash partials (o, m, l):
+      o: [B, Hq, D] f32 unnormalised;  m, l: [B, Hq] f32.
+    """
+    B, _, Hq, D = q.shape
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+
+    qf = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, kf, optimize=True) * scale
+    s = softcap(s, cfg.attn_softcap)
+
+    valid = (pos >= 0) & (pos <= cur)
+    if cfg.window is not None:
+        valid &= pos > (cur - cfg.window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32),
+                   optimize=True)
+    return (o.reshape(B, Hq, D), m.reshape(B, Hq), l.reshape(B, Hq))
+
+
+def finalize_partial(o: jax.Array, m: jax.Array, l: jax.Array) -> jax.Array:
+    """Normalise flash partials when no cross-shard combine is needed."""
+    return o / jnp.maximum(l[..., None], 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Projection helpers (shared by every attention block)
+# ---------------------------------------------------------------------------
+
+
+def qkv_project(x: jax.Array, p: dict, cfg: AttnCfg, positions: jax.Array,
+                rms_eps: float = 1e-6):
+    """x: [B, T, Dm] -> q, k, v with rope (and optional bias / qk-norm)."""
+    from repro.models.common import rms_norm
+
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"], optimize=True)
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"], optimize=True)
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"], optimize=True)
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], rms_eps)
+        k = rms_norm(k, p["k_norm"], rms_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_project(attn_out: jax.Array, p: dict) -> jax.Array:
+    """[B, T, Hq, D] @ wo[Hq, D, Dm] -> [B, T, Dm]."""
+    return jnp.einsum("bthk,hkd->btd", attn_out, p["wo"], optimize=True)

@@ -1,0 +1,74 @@
+"""Shared model primitives: norms, rope, embeddings, initializers."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             gemma_style: bool = False) -> jax.Array:
+    """RMSNorm in f32, cast back.  gemma_style uses (1 + scale)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale.astype(jnp.float32)) if gemma_style else scale.astype(jnp.float32)
+    return (y * s).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, f32 [head_dim/2]."""
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: [..., T, H, D]; positions: broadcastable to [..., T]."""
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_frequencies(d, theta))
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., T, D/2]
+    sin = jnp.sin(ang)[..., None, :]                      # [..., T, 1, D/2]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...], in_dim: int,
+               dtype) -> jax.Array:
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    std = 1.0 / np.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))
+
+
+def count_params(params: PyTree) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: PyTree) -> int:
+    return sum(int(np.prod(p.shape)) * p.dtype.itemsize
+               for p in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,113 @@
+"""Feed-forward blocks: gated-MLP variants and capacity-based MoE (GShard
+style).  Expert parallelism emerges from sharding: tokens are data-sharded,
+experts model-sharded, so the dispatch/combine einsums lower to all-to-all
+under GSPMD."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FFNCfg, MoECfg
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":  # silu gate
+        return jax.nn.silu(x)
+    if kind == "geglu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def dense_ffn(x: jax.Array, p: dict, cfg: FFNCfg) -> jax.Array:
+    """x: [B, T, D].  Gated (swiglu/geglu): out = (act(x@wg) * (x@wu)) @ wo."""
+    if cfg.activation in ("swiglu", "geglu"):
+        g = _act(jnp.einsum("btd,df->btf", x, p["wg"], optimize=True),
+                 cfg.activation)
+        u = jnp.einsum("btd,df->btf", x, p["wu"], optimize=True)
+        h = g * u
+    else:
+        h = _act(jnp.einsum("btd,df->btf", x, p["wg"], optimize=True),
+                 cfg.activation)
+    return jnp.einsum("btf,fd->btd", h, p["wo"], optimize=True)
+
+
+def _expert_ffn(h_in: jax.Array, p: dict, cfg: FFNCfg) -> jax.Array:
+    """Batched expert MLP.  h_in: [G, E, C, D] -> [G, E, C, D]."""
+    g = _act(jnp.einsum("gecd,edf->gecf", h_in, p["wg_e"], optimize=True),
+             cfg.activation)
+    u = jnp.einsum("gecd,edf->gecf", h_in, p["wu_e"], optimize=True)
+    return jnp.einsum("gecf,efd->gecd", g * u, p["wo_e"], optimize=True)
+
+
+def moe_ffn(x: jax.Array, p: dict, cfg: FFNCfg) -> tuple[jax.Array, jax.Array]:
+    """Grouped capacity-based top-k MoE (GShard).  x: [B, T, D].
+
+    Tokens are grouped per sequence (G=B, S=T) and dispatched within their
+    group with per-group capacity C = ceil(K*S/E * cap).  The dispatch
+    tensor is [G, S, E, C] = G*S^2*K*cap elements — independent of E and
+    small once sharded (G over data, E over model); the GShard all-to-all
+    emerges from that sharding contrast.  Tokens beyond capacity fall back
+    to the residual stream.  aux is the Switch load-balancing loss.
+    """
+    mo: MoECfg = cfg.moe
+    B, T, D = x.shape
+    # Fixed-size token groups bound the [G, S, E, C] dispatch tensor to
+    # N * S_g * K * cap elements (S_g <= 4096); per-sequence grouping would
+    # grow as T^2 and explode at 32k prefill.  S_g = 4096 also makes the
+    # train-shape regroup an identity (G == B), which sidesteps an XLA SPMD
+    # partition-group CHECK crash on batch-crossing reshapes inside the
+    # pod-manual gradient scope (spmd_partitioner_util.cc:504).
+    S = 4096 if T % 4096 == 0 else (2048 if T % 2048 == 0 else T)
+    G = (B * T) // S
+    x = x.reshape(G, S, D)
+    E, K = mo.n_experts, mo.top_k
+    C = max(1, int(np.ceil(K * S / E * mo.capacity_factor)))
+
+    logits = jnp.einsum("gsd,de->gse", x, p["router"], optimize=True)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)             # [G, S, K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # queue position of each (token, k) within its group's expert queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)     # [G, S, K, E]
+    flat = onehot.reshape(G, S * K, E)
+    rank = (jnp.cumsum(flat, axis=1) - flat).reshape(G, S, K, E)
+    pos_in_expert = jnp.sum(rank * onehot, axis=-1)           # [G, S, K]
+    keep = pos_in_expert < C
+
+    slot_oh = jax.nn.one_hot(jnp.where(keep, pos_in_expert, C), C + 1,
+                             dtype=x.dtype)[..., :C]           # [G, S, K, C]
+    disp = jnp.einsum("gske,gskc->gsec", onehot.astype(x.dtype), slot_oh,
+                      optimize=True)                           # [G, S, E, C]
+    comb = jnp.einsum("gske,gskc,gsk->gsec", onehot.astype(jnp.float32),
+                      slot_oh.astype(jnp.float32),
+                      gate_vals.astype(jnp.float32), optimize=True)
+
+    h_in = jnp.einsum("gsd,gsec->gecd", x, disp, optimize=True)  # [G,E,C,D]
+    h_out = _expert_ffn(h_in, p, cfg)                            # [G,E,C,D]
+    out = jnp.einsum("gecd,gsec->gsd", h_out.astype(jnp.float32), comb,
+                     optimize=True).astype(x.dtype)
+
+    if mo.shared_expert_dff:
+        out = out + dense_ffn(x, {"wg": p["wg_s"], "wu": p["wu_s"],
+                                  "wo": p["wo_s"]}, cfg)
+
+    # load-balancing aux loss (Switch):  E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(
+        onehot[:, :, 0, :].astype(jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return out.reshape(B, T, D), aux
+
+
+def ffn_apply(x: jax.Array, p: dict, cfg: FFNCfg) -> tuple[jax.Array, jax.Array]:
+    if cfg.moe is not None:
+        return moe_ffn(x, p, cfg)
+    return dense_ffn(x, p, cfg), jnp.zeros((), jnp.float32)

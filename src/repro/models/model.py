@@ -1,0 +1,102 @@
+"""Uniform model API over every architecture family.
+
+``build(cfg)`` returns a :class:`ModelApi` whose members close over the
+config: ``init``, ``loss_and_logits`` (train), ``prefill`` / ``decode_step``
+(serve), and ``encode`` for enc-dec archs.  Batches are dicts:
+
+* LM:      {"tokens": [B,T] int32, "targets": [B,T] int32}
+* VLM:     + {"mm_embeds": [B, n_patches, e] — ViT stub output}
+* enc-dec: {"frames": [B, S_src, e] — audio stub, "tokens", "targets"}
+
+``targets`` uses -1 for masked positions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.models.transformer import Runtime
+
+PyTree = Any
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean CE over targets >= 0.  logits [B, T, V] (any float dtype)."""
+    l32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(l32, axis=-1)
+    tgt = jnp.clip(targets, 0, logits.shape[-1] - 1)
+    picked = jnp.take_along_axis(l32, tgt[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    mask = (targets >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], PyTree]
+    loss_and_logits: Callable  # (params, batch, rt) -> (loss, (logits, aux))
+    forward: Callable          # (params, batch, rt) -> (logits, aux)
+    prefill: Callable          # (params, batch, rt, cache_len) -> (logits, cache)
+    decode_step: Callable      # (params, token, cache, rt) -> (logits, cache)
+    init_decode_cache: Callable  # (batch, cache_len) -> cache
+
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    is_encdec = cfg.enc_n_units > 0
+    is_vlm = cfg.frontend is not None and not is_encdec
+
+    def init(key):
+        return tf.init_params(key, cfg)
+
+    def forward(params, batch, rt: Runtime):
+        if is_encdec:
+            enc_out = tf.encode(params, batch["frames"], cfg, rt)
+            x = tf.embed_tokens(params, batch["tokens"], cfg, rt)
+            positions = jnp.arange(x.shape[1])[None, :]
+            x, aux, _, _ = tf._unit_scan(x, params["blocks"], cfg, rt,
+                                         positions, cfg.pattern,
+                                         enc_out=enc_out)
+            return tf.logits_of(params, x, cfg, rt), aux
+        mm = batch.get("mm_embeds") if is_vlm else None
+        return tf.forward_train(params, batch["tokens"], cfg, rt,
+                                mm_embeds=mm)
+
+    def loss_and_logits(params, batch, rt: Runtime):
+        logits, aux = forward(params, batch, rt)
+        targets = batch["targets"]
+        if is_vlm and cfg.frontend is not None:
+            # logits cover [mm_prefix + text]; score text positions only
+            n_mm = logits.shape[1] - targets.shape[1]
+            logits_text = logits[:, n_mm:]
+        else:
+            logits_text = logits
+        loss = cross_entropy(logits_text, targets) + AUX_LOSS_WEIGHT * aux
+        return loss, (logits_text, aux)
+
+    def prefill_fn(params, batch, rt: Runtime, cache_len: int):
+        enc_out = None
+        if is_encdec:
+            enc_out = tf.encode(params, batch["frames"], cfg, rt)
+        mm = batch.get("mm_embeds") if is_vlm else None
+        return tf.prefill(params, batch["tokens"], cfg, rt, cache_len,
+                          mm_embeds=mm, enc_out=enc_out)
+
+    def decode_fn(params, token, cache, rt: Runtime):
+        return tf.decode_step(params, token, cache, cfg, rt)
+
+    def init_cache(batch: int, cache_len: int):
+        return tf.init_decode_cache(cfg, batch, cache_len)
+
+    return ModelApi(cfg=cfg, init=init, loss_and_logits=loss_and_logits,
+                    forward=forward, prefill=prefill_fn,
+                    decode_step=decode_fn, init_decode_cache=init_cache)

@@ -1,0 +1,183 @@
+"""RWKV-6 "Finch" block: data-dependent per-channel decay, matrix-valued
+per-head state.  Chunked-parallel form for train/prefill (GLA-style), exact
+recurrence for decode.
+
+Recurrence per head (state S in R^{dk x dv}):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Chunked form over chunks of length L with ci = inclusive cumsum(log w),
+ce = exclusive cumsum:
+    inter:  y_t += (r_t ⊙ exp(ce_t)) @ S_in
+    intra:  y_t += Σ_{s<t} [Σ_d r_t[d] k_s[d] exp(ce_t[d]-ci_s[d])] v_s
+    diag :  y_t += (r_t ⊙ u ⊙ k_t) 1 · v_t
+    state:  S_out = diag(exp(ci_L)) S_in + Σ_s (k_s ⊙ exp(ci_L - ci_s))^T v_s
+Exponents of retained terms are ≤ 0 (decays in (0,1)), masked terms are
+clamped before exp, so the chunked form is overflow-safe.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import RWKVCfg
+
+MIX_CHANNELS = ("w", "k", "v", "r", "g")
+
+
+def _shift(x: jax.Array, last: jax.Array | None) -> jax.Array:
+    """Token shift: x_{t-1} (previous token's embedding).  last: [B, 1, D]."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _ddlerp(x: jax.Array, x_prev: jax.Array, p: dict):
+    """Data-dependent token-shift interpolation (RWKV6).  Returns one mixed
+    input per channel in MIX_CHANNELS."""
+    dx = x_prev - x
+    xxx = x + dx * p["mu_x"][None, None, :]
+    hidden = jnp.tanh(jnp.einsum("btd,dr->btr", xxx, p["mix_w1"],
+                                 optimize=True))        # [B, T, R]
+    outs = {}
+    for i, c in enumerate(MIX_CHANNELS):
+        m = p[f"mu_{c}"][None, None, :] + jnp.einsum(
+            "btr,rd->btd", hidden, p["mix_w2"][i], optimize=True)
+        outs[c] = x + dx * m
+    return outs
+
+
+def _decay(x_w: jax.Array, p: dict) -> jax.Array:
+    """log w_t in (-inf, 0): w = exp(-exp(w0 + tanh(x_w@d1)@d2))."""
+    lw = p["w0"][None, None, :] + jnp.einsum(
+        "btd,dr->btr", jnp.tanh(jnp.einsum("btd,dr->btr", x_w, p["decay_w1"],
+                                           optimize=True)),
+        p["decay_w2"], optimize=True)
+    return -jnp.exp(lw.astype(jnp.float32))  # = log w  (≤ 0)
+
+
+def _group_norm(y: jax.Array, scale: jax.Array, bias: jax.Array,
+                eps: float = 64e-5) -> jax.Array:
+    """Per-head LayerNorm on [B, T, H, dh]."""
+    y32 = y.astype(jnp.float32)
+    mean = jnp.mean(y32, axis=-1, keepdims=True)
+    var = jnp.var(y32, axis=-1, keepdims=True)
+    return (y32 - mean) * lax.rsqrt(var + eps) * scale + bias
+
+
+def rwkv_time_mix(x: jax.Array, p: dict, cfg: RWKVCfg,
+                  state: tuple | None = None, chunk: int = 64,
+                  impl: str = "matmul"):
+    """x: [B, T, D] -> (out, new_state).  state = (S [B,H,dk,dv] f32,
+    last_x [B,1,D]).
+
+    impl='einsum': exact 5-D decay tensor [B,L,L,H,dh] (reference; HBM
+    traffic O(L^2 * dh) per token).
+    impl='matmul': GLA-style factorisation A = (r*exp(ce)) @ (k*exp(-ci))^T
+    per head — a true MXU matmul, cutting the intra-chunk traffic by ~dh.
+    The exp(-ci) factor is clipped at e^60; clipped terms correspond to
+    decays < e^-60 whose contribution is zero to f32 precision.
+    """
+    B, T, D = x.shape
+    dh = cfg.head_dim
+    H = D // dh
+
+    last_x = state[1] if state is not None else None
+    S0 = state[0] if state is not None else jnp.zeros((B, H, dh, dh),
+                                                      jnp.float32)
+    x_prev = _shift(x, last_x)
+    mixed = _ddlerp(x, x_prev, p)
+
+    r = jnp.einsum("btd,de->bte", mixed["r"], p["Wr"], optimize=True)
+    k = jnp.einsum("btd,de->bte", mixed["k"], p["Wk"], optimize=True)
+    v = jnp.einsum("btd,de->bte", mixed["v"], p["Wv"], optimize=True)
+    g = jnp.einsum("btd,de->bte", mixed["g"], p["Wg"], optimize=True)
+    logw = _decay(mixed["w"], p)                         # [B, T, D] (≤0)
+
+    rh = r.reshape(B, T, H, dh).astype(jnp.float32)
+    kh = k.reshape(B, T, H, dh).astype(jnp.float32)
+    vh = v.reshape(B, T, H, dh).astype(jnp.float32)
+    wh = logw.reshape(B, T, H, dh)
+    u = p["u"].reshape(H, dh).astype(jnp.float32)
+
+    pad = (-T) % chunk
+    if pad:
+        rh, kh, vh = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                      for a in (rh, kh, vh))
+        wh = jnp.pad(wh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    n = Tp // chunk
+    L = chunk
+    rc = rh.reshape(B, n, L, H, dh)
+    kc = kh.reshape(B, n, L, H, dh)
+    vc = vh.reshape(B, n, L, H, dh)
+    wc = wh.reshape(B, n, L, H, dh)
+
+    ci = jnp.cumsum(wc, axis=2)                          # inclusive
+    ce = ci - wc                                         # exclusive
+    mask = jnp.tril(jnp.ones((L, L), bool), k=-1)        # s < t
+
+    def step(S, xs):
+        rcc, kcc, vcc, cii, cee = xs                     # [B, L, H, dh] each
+        # inter-chunk
+        y_inter = jnp.einsum("blhd,bhde->blhe", rcc * jnp.exp(cee), S,
+                             optimize=True)
+        if impl == "matmul":
+            # A[t,s] = sum_d r_t k_s exp(ce_t - ci_s), factorised so the
+            # contraction is a per-head matmul (no [L,L,dh] tensor)
+            r_fac = rcc * jnp.exp(cee)                   # exponent <= 0
+            k_fac = kcc * jnp.exp(jnp.minimum(-cii, 60.0))
+            A = jnp.einsum("blhd,bmhd->blmh", r_fac, k_fac, optimize=True)
+        else:
+            # exact reference: clamped elementwise decay tensor
+            diff = cee[:, :, None] - cii[:, None, :]     # [B,L(t),L(s),H,dh]
+            A = jnp.einsum("blhd,bmhd,blmhd->blmh", rcc, kcc,
+                           jnp.exp(jnp.minimum(diff, 0.0)), optimize=True)
+        A = jnp.where(mask[None, :, :, None], A, 0.0)
+        y_intra = jnp.einsum("blmh,bmhe->blhe", A, vcc, optimize=True)
+        # diagonal bonus term
+        y_diag = jnp.einsum("blhd,blhd,blhe->blhe",
+                            rcc * u[None, None], kcc, vcc, optimize=True)
+        # state update
+        decay_all = jnp.exp(cii[:, -1][:, None] - cii)   # [B, L, H, dh]
+        S_new = jnp.exp(cii[:, -1])[..., None] * S + jnp.einsum(
+            "blhd,blhe->bhde", kcc * decay_all, vcc, optimize=True)
+        return S_new, y_inter + y_intra + y_diag
+
+    S_fin, ys = lax.scan(  # remat: chunk residuals recomputed in backward
+        jax.checkpoint(step), S0,
+        tuple(jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, ci, ce)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Tp, H, dh)[:, :T]
+
+    y = _group_norm(y, p["ln_x_scale"].reshape(H, dh),
+                    p["ln_x_bias"].reshape(H, dh))
+    y = (y.reshape(B, T, D) * jax.nn.silu(g.astype(jnp.float32)))
+    out = jnp.einsum("bte,ed->btd", y.astype(x.dtype), p["Wo"], optimize=True)
+    return out, (S_fin, x[:, -1:])
+
+
+def rwkv_channel_mix(x: jax.Array, p: dict,
+                     state: jax.Array | None = None):
+    """RWKV FFN (relu² channel mix).  state: last_x [B,1,D]."""
+    x_prev = _shift(x, state)
+    dx = x_prev - x
+    xk = x + dx * p["cm_mu_k"][None, None, :]
+    xr = x + dx * p["cm_mu_r"][None, None, :]
+    kk = jnp.einsum("btd,df->btf", xk, p["cm_Wk"], optimize=True)
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["cm_Wr"],
+                                   optimize=True).astype(jnp.float32))
+    vv = jnp.einsum("btf,fd->btd", kk, p["cm_Wv"], optimize=True)
+    return (rr * vv.astype(jnp.float32)).astype(x.dtype), x[:, -1:]
+
+
+def init_rwkv_state(batch: int, d_model: int, cfg: RWKVCfg,
+                    dtype=jnp.bfloat16):
+    dh = cfg.head_dim
+    H = d_model // dh
+    return (jnp.zeros((batch, H, dh, dh), jnp.float32),      # S
+            jnp.zeros((batch, 1, d_model), dtype),           # time-mix shift
+            jnp.zeros((batch, 1, d_model), dtype))           # channel-mix shift

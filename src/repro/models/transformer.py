@@ -1,0 +1,626 @@
+"""Decoder-only LM assembly: pattern-of-blocks × n_units with ``lax.scan``.
+
+HLO size is O(len(pattern)) regardless of depth — an 80-layer dense model
+compiles as one scanned body.  Heterogeneous stacks (jamba's attn/mamba
+interleave, gemma2's SWA/global alternation, llama4's dense/MoE alternation)
+are expressed as multi-block patterns scanned over repeat units.
+
+All functions are functional: ``params`` is a nested dict, activations carry
+an injected ``Runtime.shard`` callback for GSPMD sharding constraints.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import AttnCfg, BlockCfg, ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.attention import (KVCache, cache_write,
+                                    decode_attention_partial,
+                                    finalize_partial, flash_attention,
+                                    out_project, qkv_project)
+from repro.models.common import (dense_init, dtype_of, embed_init, rms_norm,
+                                 softcap, split_keys)
+
+PyTree = Any
+
+
+def _identity_shard(x, axes):
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Execution-context knobs threaded through the model code."""
+    shard: Callable = _identity_shard
+    # decode attention over the (possibly sequence-sharded) cache:
+    # signature (q, k_cache, v_cache, pos, cur, attn_cfg) -> [B, 1, Hq, D]
+    decode_attn: Optional[Callable] = None
+    # vocab-parallel embedding lookup override (see collectives.make_vp_embed_lookup)
+    embed_lookup: Optional[Callable] = None
+    attn_chunk_q: int = 512
+    attn_chunk_k: int = 512
+    mamba_chunk: int = 64
+    rwkv_chunk: int = 128  # measured optimum (§Perf E2 iter 2)
+    rwkv_impl: str = "matmul"    # matmul | einsum (reference)
+    remat_policy: str = "unit"   # unit | none
+
+
+def _local_decode_attn(q, k_cache, v_cache, pos, cur, cfg: AttnCfg):
+    o, m, l = decode_attention_partial(q, k_cache, v_cache, pos, cur, cfg)
+    return finalize_partial(o, m, l)[:, None].astype(q.dtype)  # [B,1,Hq,D]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, d: int, a: AttnCfg, dtype) -> dict:
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, a.n_q, a.head_dim), d, dtype),
+        "wk": dense_init(ks[1], (d, a.n_kv, a.head_dim), d, dtype),
+        "wv": dense_init(ks[2], (d, a.n_kv, a.head_dim), d, dtype),
+        "wo": dense_init(ks[3], (a.n_q, a.head_dim, d), a.n_q * a.head_dim,
+                         dtype),
+    }
+    if a.qkv_bias:
+        p["bq"] = jnp.zeros((a.n_q, a.head_dim), dtype)
+        p["bk"] = jnp.zeros((a.n_kv, a.head_dim), dtype)
+        p["bv"] = jnp.zeros((a.n_kv, a.head_dim), dtype)
+    if a.qk_norm:
+        p["q_norm"] = jnp.ones((a.head_dim,), dtype)
+        p["k_norm"] = jnp.ones((a.head_dim,), dtype)
+    return p
+
+
+def init_ffn(key, d: int, f, dtype) -> dict:
+    if f.moe is not None:
+        mo = f.moe
+        ks = split_keys(key, 7)
+        p = {
+            "router": dense_init(ks[0], (d, mo.n_experts), d, jnp.float32),
+            "wg_e": dense_init(ks[1], (mo.n_experts, d, mo.d_ff_expert), d,
+                               dtype),
+            "wu_e": dense_init(ks[2], (mo.n_experts, d, mo.d_ff_expert), d,
+                               dtype),
+            "wo_e": dense_init(ks[3], (mo.n_experts, mo.d_ff_expert, d),
+                               mo.d_ff_expert, dtype),
+        }
+        if mo.shared_expert_dff:
+            p["wg_s"] = dense_init(ks[4], (d, mo.shared_expert_dff), d, dtype)
+            p["wu_s"] = dense_init(ks[5], (d, mo.shared_expert_dff), d, dtype)
+            p["wo_s"] = dense_init(ks[6], (mo.shared_expert_dff, d),
+                                   mo.shared_expert_dff, dtype)
+        return p
+    ks = split_keys(key, 3)
+    return {
+        "wg": dense_init(ks[0], (d, f.d_ff), d, dtype),
+        "wu": dense_init(ks[1], (d, f.d_ff), d, dtype),
+        "wo": dense_init(ks[2], (f.d_ff, d), f.d_ff, dtype),
+    }
+
+
+def init_mamba(key, d: int, m, dtype) -> dict:
+    din = m.expand * d
+    R = m.dt_rank or -(-d // 16)
+    ks = split_keys(key, 5)
+    # S4D-real A init; dt bias init per mamba reference
+    a_init = np.broadcast_to(np.arange(1, m.d_state + 1, dtype=np.float32),
+                             (din, m.d_state))
+    dt = np.exp(np.random.default_rng(0).uniform(np.log(1e-3), np.log(1e-1),
+                                                 din)).astype(np.float32)
+    dt_bias = dt + np.log(-np.expm1(-dt))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * din), d, dtype),
+        "conv_w": dense_init(ks[1], (m.d_conv, din), m.d_conv, dtype),
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": dense_init(ks[2], (din, R + 2 * m.d_state), din, dtype),
+        "dt_proj": dense_init(ks[3], (R, din), R, dtype),
+        "dt_bias": jnp.asarray(dt_bias, jnp.float32),
+        "A_log": jnp.asarray(np.log(a_init), jnp.float32),
+        "D_skip": jnp.ones((din,), jnp.float32),
+        "out_proj": dense_init(ks[4], (din, d), din, dtype),
+    }
+
+
+def init_rwkv(key, d: int, r, dtype) -> dict:
+    ks = split_keys(key, 12)
+    dh = r.head_dim
+    H = d // dh
+    p = {
+        "mu_x": jnp.zeros((d,), dtype),
+        "mix_w1": dense_init(ks[0], (d, r.mix_lora), d, dtype),
+        "mix_w2": dense_init(ks[1], (len(rwkv_mod.MIX_CHANNELS), r.mix_lora, d),
+                             r.mix_lora, dtype),
+        "Wr": dense_init(ks[2], (d, d), d, dtype),
+        "Wk": dense_init(ks[3], (d, d), d, dtype),
+        "Wv": dense_init(ks[4], (d, d), d, dtype),
+        "Wg": dense_init(ks[5], (d, d), d, dtype),
+        "Wo": dense_init(ks[6], (d, d), d, dtype),
+        "w0": jnp.asarray(np.linspace(-6.0, -1.0, d), jnp.float32),
+        "decay_w1": dense_init(ks[7], (d, r.decay_lora), d, dtype),
+        "decay_w2": dense_init(ks[8], (r.decay_lora, d), r.decay_lora,
+                               jnp.float32),
+        "u": jnp.zeros((d,), jnp.float32),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),
+        "ln_x_bias": jnp.zeros((d,), jnp.float32),
+    }
+    for ch in rwkv_mod.MIX_CHANNELS:
+        p[f"mu_{ch}"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def init_block(key, cfg: ModelConfig, b: BlockCfg) -> dict:
+    d = cfg.d_model
+    dtype = dtype_of(cfg)
+    ks = split_keys(key, 6)
+    p: dict = {"pre_norm": jnp.zeros((d,), dtype) if _gemma(cfg)
+               else jnp.ones((d,), dtype)}
+    if b.kind == "attn":
+        p["attn"] = init_attn(ks[0], d, b.attn, dtype)
+    elif b.kind == "mamba":
+        p["mamba"] = init_mamba(ks[0], d, b.mamba, dtype)
+        p["mamba"]["norm"] = jnp.ones((d,), dtype)  # jamba in-block norm
+    elif b.kind == "rwkv":
+        p["rwkv"] = init_rwkv(ks[0], d, b.rwkv, dtype)
+    else:
+        raise ValueError(b.kind)
+    if b.ffn is not None:
+        p["ffn_norm"] = (jnp.zeros((d,), dtype) if _gemma(cfg)
+                         else jnp.ones((d,), dtype))
+        p["ffn"] = init_ffn(ks[1], d, b.ffn, dtype)
+    if b.kind == "rwkv":
+        # rwkv ffn (channel mix) params live in the rwkv dict
+        f = b.ffn
+        p["ffn"] = {
+            "cm_Wk": dense_init(ks[2], (d, f.d_ff), d, dtype),
+            "cm_Wv": dense_init(ks[3], (f.d_ff, d), f.d_ff, dtype),
+            "cm_Wr": dense_init(ks[4], (d, d), d, dtype),
+            "cm_mu_k": jnp.zeros((d,), dtype),
+            "cm_mu_r": jnp.zeros((d,), dtype),
+        }
+    if b.sandwich_norm:
+        p["post_attn_norm"] = jnp.zeros((d,), dtype)
+        if b.ffn is not None:
+            p["post_ffn_norm"] = jnp.zeros((d,), dtype)
+    if cfg.cross_attn and b.kind == "attn":
+        p["cross_norm"] = jnp.ones((d,), dtype)
+        p["cross"] = init_attn(ks[5], d, dataclasses.replace(
+            b.attn, causal=False, qkv_bias=False), dtype)
+    return p
+
+
+def _gemma(cfg: ModelConfig) -> bool:
+    return cfg.name.startswith("gemma")
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    dtype = dtype_of(cfg)
+    ks = split_keys(key, 4 + len(cfg.pattern) + len(cfg.enc_pattern))
+    params: dict = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": (jnp.zeros((cfg.d_model,), dtype) if _gemma(cfg)
+                       else jnp.ones((cfg.d_model,), dtype)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab),
+                                       cfg.d_model, dtype)
+    if cfg.frontend is not None:
+        params["frontend_proj"] = dense_init(
+            ks[2], (cfg.frontend.embed_dim, cfg.d_model),
+            cfg.frontend.embed_dim, dtype)
+
+    def stack_init(subkey, block_cfg):
+        return jax.vmap(lambda k: init_block(k, cfg, block_cfg))(
+            jax.random.split(subkey, cfg.n_units))
+
+    params["blocks"] = {
+        f"block{i}": stack_init(ks[3 + i], b)
+        for i, b in enumerate(cfg.pattern)
+    }
+    if cfg.enc_n_units:
+        off = 3 + len(cfg.pattern)
+        params["enc_blocks"] = {
+            f"block{i}": jax.vmap(lambda k, b=b: init_block(k, cfg, b))(
+                jax.random.split(ks[off + i], cfg.enc_n_units))
+            for i, b in enumerate(cfg.enc_pattern)
+        }
+        params["enc_final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_attn_block(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime,
+                      positions, enc_out=None, collect_cache=False):
+    h = rms_norm(x, bp["pre_norm"], cfg.rms_eps, _gemma(cfg))
+    heads_ok = getattr(rt.shard, "heads_shardable", lambda hh: False)
+    q, k, v = qkv_project(h, bp["attn"], b.attn, positions, cfg.rms_eps)
+    q = rt.shard(q, ("batch", "seq", "heads", None))
+    k = rt.shard(k, ("batch", "seq", "kv_heads", None))
+    # pin the flash scan-carry sharding only when the heads cannot take the
+    # model axis — head-TP archs already have a good (jointly head-tiled)
+    # carry layout and the pin would fight it (§Perf E2)
+    pin = None if heads_ok(b.attn.n_q) else rt.shard
+    o = flash_attention(q, k, v, b.attn, causal=b.attn.causal,
+                        chunk_q=rt.attn_chunk_q, chunk_k=rt.attn_chunk_k,
+                        shard_fn=pin)
+    o = out_project(o, bp["attn"])
+    if b.sandwich_norm:
+        o = rms_norm(o, bp["post_attn_norm"], cfg.rms_eps, _gemma(cfg))
+    x = x + o
+    if enc_out is not None and "cross" in bp:
+        hc = rms_norm(x, bp["cross_norm"], cfg.rms_eps)
+        qc = jnp.einsum("btd,dhk->bthk", hc, bp["cross"]["wq"], optimize=True)
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out, bp["cross"]["wk"],
+                        optimize=True)
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out, bp["cross"]["wv"],
+                        optimize=True)
+        oc = flash_attention(qc, ck, cv,
+                             dataclasses.replace(b.attn, causal=False,
+                                                 window=None),
+                             causal=False, chunk_q=rt.attn_chunk_q,
+                             chunk_k=rt.attn_chunk_k, shard_fn=pin)
+        x = x + out_project(oc, bp["cross"])
+    cache_out = (k, v) if collect_cache else None
+    return x, cache_out
+
+
+def _apply_ffn(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime):
+    if b.ffn is None:
+        return x, jnp.zeros((), jnp.float32)
+    h = rms_norm(x, bp["ffn_norm"], cfg.rms_eps, _gemma(cfg))
+    out, aux = ffn_mod.ffn_apply(h, bp["ffn"], b.ffn)
+    out = rt.shard(out, ("batch", "seq", "embed_act"))
+    if b.sandwich_norm:
+        out = rms_norm(out, bp["post_ffn_norm"], cfg.rms_eps, _gemma(cfg))
+    return x + out, aux
+
+
+def _apply_block_train(x, bp, b: BlockCfg = None, cfg: ModelConfig = None,
+                       rt: Runtime = None, positions=None, state=None,
+                       enc_out=None, collect_cache=False):
+    """Returns (x, aux, cache_entry, new_state)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache_entry, new_state = None, None
+    if b.kind == "attn":
+        x, cache_entry = _apply_attn_block(x, bp, b, cfg, rt, positions,
+                                           enc_out, collect_cache)
+        x, aux = _apply_ffn(x, bp, b, cfg, rt)
+    elif b.kind == "mamba":
+        h = rms_norm(x, bp["pre_norm"], cfg.rms_eps)
+        out, new_state = mamba_mod.mamba_forward(
+            h, bp["mamba"], b.mamba, state=state, chunk=rt.mamba_chunk)
+        x = x + out
+        x, aux = _apply_ffn(x, bp, b, cfg, rt)
+    elif b.kind == "rwkv":
+        h = rms_norm(x, bp["pre_norm"], cfg.rms_eps)
+        tm_state = (state[0], state[1]) if state is not None else None
+        out, tm_new = rwkv_mod.rwkv_time_mix(h, bp["rwkv"], b.rwkv,
+                                             state=tm_state,
+                                             chunk=rt.rwkv_chunk,
+                                             impl=rt.rwkv_impl)
+        x = x + out
+        h2 = rms_norm(x, bp["ffn_norm"], cfg.rms_eps)
+        out2, cm_new = rwkv_mod.rwkv_channel_mix(
+            h2, bp["ffn"], state=state[2] if state is not None else None)
+        x = x + out2
+        new_state = (tm_new[0], tm_new[1], cm_new)
+    return x, aux, cache_entry, new_state
+
+
+def _unit_scan(x, stacked_blocks, cfg: ModelConfig, rt: Runtime, positions,
+               pattern, enc_out=None, collect_cache=False, states=None):
+    """Scan over units.  Returns (x, aux_sum, caches, new_states)."""
+
+    def body(carry, xs):
+        h, aux = carry
+        unit_params = xs[0]
+        unit_states = xs[1]
+        caches, new_states = [], []
+        for i, b in enumerate(pattern):
+            st = unit_states[i] if unit_states is not None else None
+            block_fn = partial(_apply_block_train, b=b, cfg=cfg, rt=rt,
+                               positions=positions, enc_out=enc_out,
+                               collect_cache=collect_cache)
+            if rt.remat_policy == "block" and len(pattern) > 1:
+                block_fn = jax.checkpoint(
+                    block_fn, policy=jax.checkpoint_policies.nothing_saveable,
+                    static_argnums=())
+            h, a, ce, ns = block_fn(h, unit_params[f"block{i}"], state=st)
+            aux = aux + a
+            caches.append(ce)
+            new_states.append(ns)
+        h = rt.shard(h, ("batch", "seq", "embed_act"))
+        ys = (tuple(caches) if collect_cache else None,
+              tuple(new_states) if states is not None else None)
+        return (h, aux), ys
+
+    if rt.remat_policy in ("unit", "block"):
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), ys = lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (stacked_blocks, states))
+    return x, aux, ys[0], ys[1]
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig, rt: Runtime,
+                 mm_embeds=None):
+    if rt.embed_lookup is not None:
+        x = rt.embed_lookup(params["embed"], tokens)
+    else:
+        x = params["embed"][tokens]  # gather; vocab-sharded under GSPMD
+    if cfg.embed_scale:
+        x = (x.astype(jnp.float32) * np.sqrt(cfg.d_model)).astype(x.dtype)
+    if cfg.frontend is not None and mm_embeds is not None:
+        mm = jnp.einsum("bne,ed->bnd", mm_embeds.astype(x.dtype),
+                        params["frontend_proj"], optimize=True)
+        x = jnp.concatenate([mm, x], axis=1)
+    return rt.shard(x, ("batch", "seq", "embed_act"))
+
+
+def logits_of(params, x, cfg: ModelConfig, rt: Runtime):
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps, _gemma(cfg))
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("btd,dv->btv", x, head, optimize=True)
+    logits = softcap(logits, cfg.logit_softcap)
+    return rt.shard(logits, ("batch", "seq", "vocab_act"))
+
+
+def forward_train(params, tokens, cfg: ModelConfig, rt: Runtime,
+                  mm_embeds=None):
+    """tokens [B, T] -> (logits [B, T(+mm), V], aux_loss)."""
+    x = embed_tokens(params, tokens, cfg, rt, mm_embeds)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, aux, _, _ = _unit_scan(x, params["blocks"], cfg, rt, positions,
+                              cfg.pattern)
+    return logits_of(params, x, cfg, rt), aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving) path
+# ---------------------------------------------------------------------------
+
+
+def default_decode_cache_attn(q, k_new, v_new, cache_k, cache_v, pos, cur,
+                              attn_cfg: AttnCfg):
+    """Local (unsharded-cache) write + attend.  The sequence-parallel variant
+    is repro.distributed.collectives.sp_decode_cache_attn."""
+    cache_k, cache_v, pos = cache_write(cache_k, cache_v, pos, k_new, v_new,
+                                        cur)
+    o, m, l = decode_attention_partial(q, cache_k, cache_v, pos, cur,
+                                       attn_cfg)
+    out = finalize_partial(o, m, l)[:, None].astype(q.dtype)
+    return out, cache_k, cache_v, pos
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=None) -> PyTree:
+    """Empty decode state for every block of the pattern."""
+    dtype = dtype or dtype_of(cfg)
+    layers = {}
+    for i, b in enumerate(cfg.pattern):
+        U = cfg.n_units
+        if b.kind == "attn":
+            S = min(cache_len, b.attn.window) if b.attn.window else cache_len
+            layers[f"block{i}"] = {
+                "k": jnp.zeros((U, batch, S, b.attn.n_kv, b.attn.head_dim),
+                               dtype),
+                "v": jnp.zeros((U, batch, S, b.attn.n_kv, b.attn.head_dim),
+                               dtype),
+                "pos": jnp.full((U, S), -1, jnp.int32),
+            }
+        elif b.kind == "mamba":
+            din = b.mamba.expand * cfg.d_model
+            layers[f"block{i}"] = {
+                "h": jnp.zeros((U, batch, din, b.mamba.d_state), jnp.float32),
+                "conv": jnp.zeros((U, batch, b.mamba.d_conv - 1, din), dtype),
+            }
+        elif b.kind == "rwkv":
+            dh = b.rwkv.head_dim
+            H = cfg.d_model // dh
+            layers[f"block{i}"] = {
+                "S": jnp.zeros((U, batch, H, dh, dh), jnp.float32),
+                "tm": jnp.zeros((U, batch, 1, cfg.d_model), dtype),
+                "cm": jnp.zeros((U, batch, 1, cfg.d_model), dtype),
+            }
+    cache: dict = {"layers": layers, "cur": jnp.zeros((), jnp.int32)}
+    if cfg.cross_attn:
+        a = cfg.pattern[0].attn
+        # cross-KV filled by encode(); sized by the frontend stub
+        S_src = cfg.frontend.n_tokens if cfg.frontend else cache_len
+        cache["cross"] = {
+            "k": jnp.zeros((cfg.n_units, batch, S_src, a.n_kv, a.head_dim),
+                           dtype),
+            "v": jnp.zeros((cfg.n_units, batch, S_src, a.n_kv, a.head_dim),
+                           dtype),
+        }
+    return cache
+
+
+def _decode_block(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime, st,
+                  cur, cross_kv=None):
+    """One-token step through one block.  Returns (x, new_state)."""
+    decode_attn = rt.decode_attn or default_decode_cache_attn
+    if b.kind == "attn":
+        h = rms_norm(x, bp["pre_norm"], cfg.rms_eps, _gemma(cfg))
+        positions = cur[None, None].astype(jnp.int32)  # [1,1] broadcasts to [B,T=1]
+        q, k, v = qkv_project(h, bp["attn"], b.attn, positions, cfg.rms_eps)
+        o, ck, cv, pos = decode_attn(q, k, v, st["k"], st["v"], st["pos"],
+                                     cur, b.attn)
+        o = out_project(o, bp["attn"])
+        if b.sandwich_norm:
+            o = rms_norm(o, bp["post_attn_norm"], cfg.rms_eps, _gemma(cfg))
+        x = x + o
+        if cross_kv is not None:
+            hc = rms_norm(x, bp["cross_norm"], cfg.rms_eps)
+            qc = jnp.einsum("btd,dhk->bthk", hc, bp["cross"]["wq"],
+                            optimize=True)
+            o2, m2, l2 = decode_attention_partial(
+                qc, cross_kv[0], cross_kv[1],
+                jnp.arange(cross_kv[0].shape[1]), cur + 10 ** 9,
+                dataclasses.replace(b.attn, causal=False, window=None))
+            x = x + out_project(finalize_partial(o2, m2, l2)[:, None]
+                                .astype(x.dtype), bp["cross"])
+        x, _ = _apply_ffn(x, bp, b, cfg, rt)
+        return x, {"k": ck, "v": cv, "pos": pos}
+    if b.kind == "mamba":
+        h = rms_norm(x, bp["pre_norm"], cfg.rms_eps)
+        out, (hn, conv) = mamba_mod.mamba_decode_step(
+            h, bp["mamba"], b.mamba, (st["h"], st["conv"]))
+        x = x + out
+        x, _ = _apply_ffn(x, bp, b, cfg, rt)
+        return x, {"h": hn, "conv": conv}
+    if b.kind == "rwkv":
+        h = rms_norm(x, bp["pre_norm"], cfg.rms_eps)
+        out, (S, tm) = rwkv_mod.rwkv_time_mix(
+            h, bp["rwkv"], b.rwkv, state=(st["S"], st["tm"]), chunk=1,
+            impl="einsum")  # single-token step: matmul form is pointless
+        x = x + out
+        h2 = rms_norm(x, bp["ffn_norm"], cfg.rms_eps)
+        out2, cm = rwkv_mod.rwkv_channel_mix(h2, bp["ffn"], state=st["cm"])
+        x = x + out2
+        return x, {"S": S, "tm": tm, "cm": cm}
+    raise ValueError(b.kind)
+
+
+def decode_step(params, token, cache, cfg: ModelConfig, rt: Runtime):
+    """token [B, 1] int32 -> (logits [B, 1, V], new_cache)."""
+    if rt.embed_lookup is not None:
+        x = rt.embed_lookup(params["embed"], token)
+    else:
+        x = params["embed"][token]
+    if cfg.embed_scale:
+        x = (x.astype(jnp.float32) * np.sqrt(cfg.d_model)).astype(x.dtype)
+    x = rt.shard(x, ("batch", "seq", "embed_act"))
+    cur = cache["cur"]
+    cross = cache.get("cross")
+
+    def body(carry, xs):
+        h = carry
+        unit_params, unit_cache, unit_cross = xs
+        new_states = {}
+        for i, b in enumerate(cfg.pattern):
+            ck = (unit_cross["k"], unit_cross["v"]) if (
+                unit_cross is not None and b.kind == "attn") else None
+            h, ns = _decode_block(h, unit_params[f"block{i}"], b, cfg, rt,
+                                  unit_cache[f"block{i}"], cur, cross_kv=ck)
+            new_states[f"block{i}"] = ns
+        return h, new_states
+
+    x = x.astype(dtype_of(cfg))
+    x, new_layers = lax.scan(body, x,
+                             (params["blocks"], cache["layers"], cross))
+    logits = logits_of(params, x, cfg, rt)
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layers
+    new_cache["cur"] = cur + 1
+    return logits, new_cache
+
+
+def _ring_fill(full: jax.Array, pos_abs: int, S: int):
+    """Scatter the last min(T,S) tokens of a [B, T, ...] tensor into ring
+    slots (slot = pos % S).  Returns ([B, S, ...], pos_arr [S])."""
+    T = full.shape[1]
+    if T >= S:
+        last = full[:, -S:]
+        shift = (T - S) % S
+        cache = jnp.roll(last, shift=shift, axis=1)
+        pos = jnp.roll(jnp.arange(T - S, T), shift=shift)
+    else:
+        pad = [(0, 0), (0, S - T)] + [(0, 0)] * (full.ndim - 2)
+        cache = jnp.pad(full, pad)
+        pos = jnp.concatenate([jnp.arange(T),
+                               jnp.full((S - T,), -1, jnp.int32)])
+    return cache, pos.astype(jnp.int32)
+
+
+def prefill(params, tokens, cfg: ModelConfig, rt: Runtime, cache_len: int,
+            mm_embeds=None, enc_out=None):
+    """Run the full prompt, returning (last-token logits, filled cache)."""
+    x = embed_tokens(params, tokens, cfg, rt, mm_embeds)
+    T = x.shape[1]
+    B = x.shape[0]
+    positions = jnp.arange(T)[None, :]
+    states0 = _init_unit_states(cfg, B, stacked=True)
+    x, aux, caches, new_states = _unit_scan(
+        x, params["blocks"], cfg, rt, positions, cfg.pattern,
+        collect_cache=True, states=states0, enc_out=enc_out)
+
+    cache = init_decode_cache(cfg, B, cache_len, dtype=dtype_of(cfg))
+    for i, b in enumerate(cfg.pattern):
+        if b.kind == "attn":
+            k_full, v_full = caches[i]  # [U, B, T, Hkv, D]
+            S = cache["layers"][f"block{i}"]["k"].shape[2]
+            ks, pos = jax.vmap(lambda kk: _ring_fill(kk, T, S))(k_full)
+            vs, _ = jax.vmap(lambda vv: _ring_fill(vv, T, S))(v_full)
+            cache["layers"][f"block{i}"] = {"k": ks, "v": vs, "pos": pos}
+        elif b.kind == "mamba":
+            h, conv = new_states[i]
+            cache["layers"][f"block{i}"] = {"h": h, "conv": conv}
+        elif b.kind == "rwkv":
+            S, tm, cm = new_states[i]
+            cache["layers"][f"block{i}"] = {"S": S, "tm": tm, "cm": cm}
+    cache["cur"] = jnp.asarray(T, jnp.int32)
+    if enc_out is not None:
+        cache["cross"] = cross_cache_from_encoder(params, enc_out, cfg)
+    logits = logits_of(params, x[:, -1:], cfg, rt)
+    return logits, cache
+
+
+def _init_unit_states(cfg: ModelConfig, batch: int, stacked: bool):
+    """Initial recurrent states for mamba/rwkv blocks (attn -> None)."""
+    dtype = dtype_of(cfg)
+    states = []
+    for b in cfg.pattern:
+        if b.kind == "mamba":
+            s = mamba_mod.init_mamba_state(batch, cfg.d_model, b.mamba, dtype)
+        elif b.kind == "rwkv":
+            s = rwkv_mod.init_rwkv_state(batch, cfg.d_model, b.rwkv, dtype)
+        else:
+            states.append(None)
+            continue
+        if stacked:
+            s = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None],
+                                           (cfg.n_units,) + a.shape), s)
+        states.append(s)
+    if all(s is None for s in states):
+        return None
+    return tuple(states)
+
+
+def cross_cache_from_encoder(params, enc_out, cfg: ModelConfig):
+    """Precompute per-unit cross-attention K/V from encoder output."""
+    stacked = params["blocks"]["block0"]["cross"]
+    k = jnp.einsum("bsd,udhk->ubshk", enc_out, stacked["wk"], optimize=True)
+    v = jnp.einsum("bsd,udhk->ubshk", enc_out, stacked["wv"], optimize=True)
+    return {"k": k.astype(enc_out.dtype), "v": v.astype(enc_out.dtype)}
+
+
+def encode(params, frames, cfg: ModelConfig, rt: Runtime):
+    """Encoder stack for enc-dec archs.  frames: [B, S_src, embed_dim]
+    (precomputed modality-frontend embeddings — the stub)."""
+    x = jnp.einsum("bne,ed->bnd", frames.astype(dtype_of(cfg)),
+                   params["frontend_proj"], optimize=True)
+    x = rt.shard(x, ("batch", "seq", "embed_act"))
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, _, _, _ = _unit_scan(x, params["enc_blocks"], cfg, rt, positions,
+                            cfg.enc_pattern)
+    return rms_norm(x, params["enc_final_norm"], cfg.rms_eps)

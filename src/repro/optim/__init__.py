@@ -1,0 +1,6 @@
+from repro.optim import adafactor, adamw, schedules
+from repro.optim.adafactor import AdafactorConfig
+from repro.optim.adamw import AdamWConfig
+
+__all__ = ["adafactor", "adamw", "schedules", "AdafactorConfig",
+           "AdamWConfig"]

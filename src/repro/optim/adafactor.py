@@ -1,0 +1,71 @@
+"""Adafactor (factored second moment): optimizer state ~ O(n/d) instead of
+O(2n) — the fit-enabler for the 400B-class archs (llama4, jamba, qwen-110b)
+under 16 GB/chip HBM (DESIGN.md §4)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    decay: float = 0.8          # beta2_t = 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_factored: int = 128
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and min(shape[-2:]) >= 2
+
+
+def init(params: PyTree, cfg: AdafactorConfig) -> PyTree:
+    def leaf(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"slots": jax.tree_util.tree_map(leaf, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def update(grads: PyTree, state: PyTree, params: PyTree, lr: jax.Array,
+           cfg: AdafactorConfig):
+    count = state["count"] + 1
+    beta2 = 1.0 - count.astype(jnp.float32) ** (-cfg.decay)
+
+    def upd(g, slot, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + cfg.eps
+        if "vr" in slot:
+            vr = beta2 * slot["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * slot["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), cfg.eps)
+            v_hat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v_hat = beta2 * slot["v"] + (1 - beta2) * g2
+            new_slot = {"v": v_hat}
+        u = g32 / jnp.sqrt(v_hat + cfg.eps)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u / cfg.clip_threshold)
+        newp = p.astype(jnp.float32) - lr * u
+        if cfg.weight_decay and p.ndim >= 2:
+            newp = newp - lr * cfg.weight_decay * p.astype(jnp.float32)
+        return newp.astype(p.dtype), new_slot
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_s = tdef.flatten_up_to(state["slots"])
+    flat_p = tdef.flatten_up_to(params)
+    outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    new_state = {"slots": jax.tree_util.tree_unflatten(
+        tdef, [o[1] for o in outs]), "count": count}
+    return new_params, new_state, {}

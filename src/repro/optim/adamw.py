@@ -1,0 +1,71 @@
+"""AdamW with configurable moment dtype (bf16 moments cut optimizer HBM by
+2x at <0.1% quality cost at LM scale) and decoupled weight decay."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"   # "bfloat16" halves optimizer memory
+    grad_clip_norm: float = 1.0
+
+
+def init(params: PyTree, cfg: AdamWConfig) -> PyTree:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def update(grads: PyTree, state: PyTree, params: PyTree, lr: jax.Array,
+           cfg: AdamWConfig):
+    """-> (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+    count = state["count"] + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + (1 - cfg.b1) * g
+        v32 = v.astype(jnp.float32) * cfg.b2 + (1 - cfg.b2) * g * g
+        step = (m32 / c1) / (jnp.sqrt(v32 / c2) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (step + decay)
+        return (newp.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype))
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_m = tdef.flatten_up_to(state["mu"])
+    flat_v = tdef.flatten_up_to(state["nu"])
+    flat_p = tdef.flatten_up_to(params)
+    outs = [upd(g, m, v, p) for g, m, v, p in
+            zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    new_state = {
+        "mu": jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs]),
+        "nu": jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs]),
+        "count": count,
+    }
+    return new_params, new_state, {"grad_norm": gnorm}

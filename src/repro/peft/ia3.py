@@ -1,0 +1,67 @@
+"""(IA)³: learned rescaling vectors on K, V and FFN-hidden activations.
+
+Because the rescaled ops are linear (or the scale commutes with the gate
+product — see DESIGN.md), (IA)³ is applied as a multiplicative transform on
+the *output dims* of wk / wv / wu, which keeps the model code untouched and
+lets (IA)³ share the merge path with LoRA and ComPEFT deltas."""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.peft.lora import _is_target, _path_str
+
+PyTree = Any
+
+IA3_TARGETS = r"(wk|wv|wu|Wk|Wv)$"
+
+
+@dataclasses.dataclass(frozen=True)
+class IA3Config:
+    targets: str = IA3_TARGETS
+
+
+def init_ia3(params: PyTree, cfg: IA3Config | None = None) -> PyTree:
+    """One vector per targeted weight over its output dims, initialised to 0
+    (scale = 1 + ell, so init is identity)."""
+    cfg = cfg or IA3Config()
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out = {}
+    for path, leaf in flat:
+        name = _path_str(path).split("/")[-1]
+        if leaf.ndim < 2 or re.search(cfg.targets, name) is None:
+            continue
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        ps = _path_str(path)
+        # stacked unit weights keep their leading U; scale covers out dims
+        if ps.startswith(("blocks", "enc_blocks")):
+            shape = (leaf.shape[0],) + leaf.shape[2:]
+        else:
+            shape = leaf.shape[1:]
+        out[ps] = {"ell": jnp.zeros(shape, jnp.float32)}
+    return out
+
+
+def apply_ia3(params: PyTree, ia3_params: PyTree,
+              cfg: IA3Config | None = None) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        if ps in ia3_params:
+            ell = ia3_params[ps]["ell"]
+            if ell.ndim == leaf.ndim - 1 and ps.startswith(("blocks",
+                                                            "enc_blocks")):
+                scale = (1.0 + ell)[:, None]  # broadcast over d_in
+            else:
+                scale = (1.0 + ell)[None]
+            out.append((leaf.astype(jnp.float32) * scale).astype(leaf.dtype))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,125 @@
+"""LoRA: low-rank adapters over arbitrary weight trees.
+
+Adapters attach by *path pattern* to any ≥2-D float weight in the model's
+param tree (stacked unit dims are handled transparently: a weight
+[U, d_in, d_out] gets A [U, d_in, r], B [U, r, d_out]).  Application is a
+functional merge ``W_eff = W + (alpha/r) * A @ B`` so the model code never
+changes — the same merge path later consumes ComPEFT-decompressed deltas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+DEFAULT_TARGETS = r"(wq|wk|wv|wo|wg|wu|Wr|Wk|Wv|Wo|in_proj|out_proj)$"
+
+
+@dataclasses.dataclass(frozen=True)
+class LoraConfig:
+    rank: int = 8
+    alpha: float = 16.0
+    targets: str = DEFAULT_TARGETS  # regex on the last path component
+
+    @property
+    def scaling(self) -> float:
+        return self.alpha / self.rank
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _is_target(path, leaf, cfg: LoraConfig) -> bool:
+    if not isinstance(leaf, jax.Array) and not hasattr(leaf, "shape"):
+        return False
+    if leaf.ndim < 2 or not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    name = _path_str(path).split("/")[-1]
+    return re.search(cfg.targets, name) is not None
+
+
+def _factor_shapes(shape: tuple[int, ...], rank: int, stacked: bool):
+    """Factor [(U,) d_in, *out] as A [(U,) d_in, r], B [(U,) r, prod(out)]."""
+    lead = shape[:1] if stacked else ()
+    core = shape[1:] if stacked else shape
+    d_in = core[0]
+    d_out = int(np.prod(core[1:]))
+    return lead + (d_in, rank), lead + (rank, d_out), core
+
+
+def init_lora(key: jax.Array, params: PyTree, cfg: LoraConfig,
+              stacked_prefixes: tuple[str, ...] = ("blocks", "enc_blocks")
+              ) -> PyTree:
+    """Create the LoRA tree mirroring targeted weights.  A ~ N(0, 1/r); B = 0
+    (so the initial delta is exactly zero, as in the paper's setting)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out: dict[str, dict] = {}
+    keys = jax.random.split(key, len(flat))
+    for (path, leaf), k in zip(flat, keys):
+        if not _is_target(path, leaf, cfg):
+            continue
+        ps = _path_str(path)
+        stacked = any(ps.startswith(pref) for pref in stacked_prefixes)
+        a_shape, b_shape, _ = _factor_shapes(leaf.shape, cfg.rank, stacked)
+        out[ps] = {
+            "a": (jax.random.normal(k, a_shape, jnp.float32)
+                  / np.sqrt(cfg.rank)).astype(leaf.dtype),
+            "b": jnp.zeros(b_shape, leaf.dtype),
+        }
+    return out
+
+
+def lora_delta(lora_params: PyTree, base_shapes: dict[str, tuple[int, ...]],
+               cfg: LoraConfig) -> dict[str, jax.Array]:
+    """Materialise dense deltas per targeted path."""
+    out = {}
+    for ps, ab in lora_params.items():
+        a, b = ab["a"], ab["b"]
+        if a.ndim == 3:  # stacked units
+            d = jnp.einsum("uir,uro->uio", a, b)
+        else:
+            d = a @ b
+        out[ps] = (d * cfg.scaling).reshape(base_shapes[ps])
+    return out
+
+
+def apply_lora(params: PyTree, lora_params: PyTree, cfg: LoraConfig) -> PyTree:
+    """W_eff = W + scaling * A@B, matched by path."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        if ps in lora_params:
+            ab = lora_params[ps]
+            a, b = ab["a"], ab["b"]
+            if a.ndim == 3:
+                d = jnp.einsum("uir,uro->uio", a.astype(jnp.float32),
+                               b.astype(jnp.float32))
+            else:
+                d = a.astype(jnp.float32) @ b.astype(jnp.float32)
+            d = (d * cfg.scaling).reshape(leaf.shape)
+            out.append((leaf.astype(jnp.float32) + d).astype(leaf.dtype))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def base_shapes_of(params: PyTree) -> dict[str, tuple[int, ...]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return {_path_str(p): tuple(l.shape) for p, l in flat}

@@ -1,0 +1,69 @@
+"""Task vectors over PEFT or full parameter trees: tau = theta_ft - theta_init
+(§2 of the paper), plus the expert-artifact container the serving stack and
+checkpoint manager exchange."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (CompressionConfig, compress, decompress, pack_tree,
+                        tree_packed_bytes, unpack_tree)
+
+PyTree = Any
+
+
+def task_vector(theta_init: PyTree, theta_ft: PyTree) -> PyTree:
+    """tau = theta_ft - theta_init, f32 leaves."""
+    return jax.tree_util.tree_map(
+        lambda a, b: b.astype(jnp.float32) - a.astype(jnp.float32),
+        theta_init, theta_ft)
+
+
+def apply_task_vector(theta_init: PyTree, tau: PyTree,
+                      scale: float = 1.0) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda w, t: (w.astype(jnp.float32)
+                      + scale * t.astype(jnp.float32)).astype(w.dtype),
+        theta_init, tau)
+
+
+@dataclasses.dataclass
+class ExpertArtifact:
+    """A ComPEFT-compressed expert: what gets stored / transmitted / cached.
+
+    ``packed`` is the bitplane tree (device/compute format).  Golomb bytes
+    are produced lazily by the checkpoint manager for cold storage.
+    """
+
+    name: str
+    kind: str                 # "lora" | "ia3" | "full"
+    packed: PyTree            # tree of PackedTernary
+    density: float
+    alpha: float
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def nbytes(self) -> int:
+        return tree_packed_bytes(self.packed)
+
+    def to_dense_tau(self) -> PyTree:
+        return decompress(unpack_tree(self.packed))
+
+
+def compress_expert(name: str, kind: str, tau: PyTree, density: float,
+                    alpha: float, per_tensor: bool = True) -> ExpertArtifact:
+    comp = compress(tau, CompressionConfig(density=density, alpha=alpha,
+                                           per_tensor=per_tensor))
+    return ExpertArtifact(name=name, kind=kind, packed=pack_tree(comp),
+                          density=density, alpha=alpha)
+
+
+def reconstruct_expert(theta_init: PyTree, artifact: ExpertArtifact,
+                       treedef_like: Optional[PyTree] = None) -> PyTree:
+    """theta_init + decompressed tau (tree structures must match)."""
+    tau = artifact.to_dense_tau()
+    return apply_task_vector(theta_init, tau)

@@ -1,0 +1,6 @@
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.expert_cache import (DeviceCache, ExpertStore, SwapStats,
+                                      uncompressed_baseline_bytes)
+
+__all__ = ["EngineConfig", "Request", "ServeEngine", "DeviceCache",
+           "ExpertStore", "SwapStats", "uncompressed_baseline_bytes"]

@@ -1,0 +1,113 @@
+"""Multi-expert memory hierarchy — the paper's headline serving scenario.
+
+Three tiers mirror §1 of the paper:
+
+  ExpertStore   (disk/network tier)  — Golomb-coded ComPEFT blobs
+  HostCache     (CPU RAM tier)       — packed bitplane trees (2 bits/param)
+  DeviceCache   (HBM tier, LRU)      — dense deltas ready to merge, bounded
+                                       by a byte budget; evicts LRU
+
+Swap cost accounting is explicit: every promotion records bytes moved, so
+benchmarks can report the paper's Table-5 quantities (transmission bytes,
+load latency) and the engine can amortise swaps across batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import unpack_tree
+from repro.peft.task_vector import ExpertArtifact
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class SwapStats:
+    store_to_host_bytes: int = 0
+    host_to_device_bytes: int = 0
+    promotions: int = 0
+    evictions: int = 0
+    hits: int = 0
+    misses: int = 0
+    seconds: float = 0.0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+class ExpertStore:
+    """Cold tier: name -> ExpertArtifact (packed ternary; Golomb bytes are
+    the on-disk format via checkpoint.manager.export_expert)."""
+
+    def __init__(self):
+        self._store: dict[str, ExpertArtifact] = {}
+
+    def put(self, art: ExpertArtifact) -> None:
+        self._store[art.name] = art
+
+    def get(self, name: str) -> ExpertArtifact:
+        return self._store[name]
+
+    def names(self):
+        return list(self._store)
+
+    def nbytes(self, name: str) -> int:
+        return self._store[name].nbytes
+
+
+class DeviceCache:
+    """LRU cache of *dense deltas* under a byte budget (stands in for HBM
+    residency of merged expert weights)."""
+
+    def __init__(self, store: ExpertStore, capacity_bytes: int,
+                 decompress_fn: Optional[Callable] = None):
+        self.store = store
+        self.capacity = capacity_bytes
+        self._cache: OrderedDict[str, PyTree] = OrderedDict()
+        self._sizes: dict[str, int] = {}
+        self.stats = SwapStats()
+        self._decompress = decompress_fn or (lambda art: art.to_dense_tau())
+
+    def _dense_bytes(self, tau: PyTree) -> int:
+        return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(tau))
+
+    def fetch(self, name: str) -> PyTree:
+        if name in self._cache:
+            self._cache.move_to_end(name)
+            self.stats.hits += 1
+            return self._cache[name]
+        self.stats.misses += 1
+        t0 = time.perf_counter()
+        art = self.store.get(name)
+        self.stats.store_to_host_bytes += art.nbytes   # compressed transfer!
+        tau = self._decompress(art)
+        size = self._dense_bytes(tau)
+        while self._cache and (sum(self._sizes.values()) + size
+                               > self.capacity):
+            old, _ = self._cache.popitem(last=False)
+            self._sizes.pop(old)
+            self.stats.evictions += 1
+        self._cache[name] = tau
+        self._sizes[name] = size
+        self.stats.host_to_device_bytes += size
+        self.stats.promotions += 1
+        self.stats.seconds += time.perf_counter() - t0
+        return tau
+
+    def resident(self):
+        return list(self._cache)
+
+
+def uncompressed_baseline_bytes(art: ExpertArtifact) -> int:
+    """What the same swap would cost without ComPEFT (bf16 dense)."""
+    packed = jax.tree_util.tree_leaves(
+        art.packed, is_leaf=lambda x: hasattr(x, "pos"))
+    return sum(int(np.prod(p.shape)) * 2 for p in packed)

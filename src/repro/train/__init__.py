@@ -1,0 +1,6 @@
+from repro.train.train_step import (TrainConfig, init_train_state,
+                                    make_train_step)
+from repro.train.trainer import LoopConfig, train_loop
+
+__all__ = ["TrainConfig", "init_train_state", "make_train_step",
+           "LoopConfig", "train_loop"]

@@ -1,0 +1,170 @@
+"""Distributed train step: microbatch gradient accumulation, remat'd model,
+optional ComPEFT-compressed cross-pod gradient exchange (EF-ternary), and
+pluggable optimizer (AdamW / Adafactor).
+
+Structure (multi-pod):
+
+  shard_map over 'pod' (manual)                 <- compressed boundary
+    └── lax.scan over microbatches
+          └── jax.grad( model forward )         <- GSPMD over data/model
+    └── EF-ternary all-gather over 'pod' (2 bits/param on the wire)
+  optimizer update (GSPMD, FSDP-sharded states)
+
+Single-pod: same minus the shard_map (GSPMD's dense all-reduce over 'data'
+is the within-pod ICI traffic, which stays dense by design — compression is
+for the slow cross-pod links).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.core.gradient_compression import (GradCompressionConfig,
+                                             compressed_cross_pod_mean,
+                                             init_error_state)
+from repro.models.model import ModelApi
+from repro.models.transformer import Runtime
+from repro.optim import adafactor, adamw, schedules
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    optimizer: str = "adamw"            # adamw | adafactor
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "warmup_cosine"
+    adamw: adamw.AdamWConfig = adamw.AdamWConfig()
+    adafactor: adafactor.AdafactorConfig = adafactor.AdafactorConfig()
+    grad_compression: GradCompressionConfig = GradCompressionConfig(
+        enabled=True, density=0.05)
+    ef_dtype: str = "bfloat16"
+
+
+def init_train_state(params: PyTree, tcfg: TrainConfig,
+                     multi_pod: bool) -> dict:
+    if tcfg.optimizer == "adamw":
+        opt = adamw.init(params, tcfg.adamw)
+    else:
+        opt = adafactor.init(params, tcfg.adafactor)
+    state = {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+    if multi_pod and tcfg.grad_compression.enabled:
+        state["ef"] = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.dtype(tcfg.ef_dtype)), params)
+    return state
+
+
+def _lr(step, tcfg: TrainConfig):
+    fn = getattr(schedules, tcfg.schedule)
+    return fn(step, peak_lr=tcfg.peak_lr, warmup_steps=tcfg.warmup_steps,
+              total_steps=tcfg.total_steps)
+
+
+def _microbatch_grads(api: ModelApi, params, batch, rt: Runtime,
+                      n_micro: int):
+    """Accumulated (mean) grads + loss over n_micro sequential microbatches."""
+
+    def loss_fn(p, mb):
+        loss, _ = api.loss_and_logits(p, mb, rt)
+        return loss
+
+    if n_micro == 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, grads
+
+    micro = jax.tree_util.tree_map(
+        lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+        batch)
+
+    def body(carry, mb):
+        acc, lsum = carry
+        l, g = jax.value_and_grad(loss_fn)(params, mb)
+        acc = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(jnp.float32), acc, g)
+        return (acc, lsum + l), None
+
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (gsum, lsum), _ = lax.scan(body, (zeros, jnp.zeros(())), micro)
+    inv = 1.0 / n_micro
+    grads = jax.tree_util.tree_map(lambda g: g * inv, gsum)
+    return lsum * inv, grads
+
+
+def _apply_optimizer(state, grads, tcfg: TrainConfig):
+    lr = _lr(state["step"], tcfg)
+    if tcfg.optimizer == "adamw":
+        new_params, new_opt, metrics = adamw.update(
+            grads, state["opt"], state["params"], lr, tcfg.adamw)
+    else:
+        new_params, new_opt, metrics = adafactor.update(
+            grads, state["opt"], state["params"], lr, tcfg.adafactor)
+    out = dict(state)
+    out["params"] = new_params
+    out["opt"] = new_opt
+    out["step"] = state["step"] + 1
+    metrics["lr"] = lr
+    return out, metrics
+
+
+def make_train_step(api: ModelApi, rt: Runtime, tcfg: TrainConfig,
+                    mesh: Optional[Mesh] = None) -> Callable:
+    """-> step_fn(state, batch) -> (new_state, metrics).
+
+    ``batch`` leaves have global batch at dim 0.  When the mesh has a 'pod'
+    axis and compression is enabled, gradients cross pods as packed ternary
+    bitplanes with error feedback.
+    """
+    multi_pod = mesh is not None and "pod" in mesh.axis_names
+    use_comp = multi_pod and tcfg.grad_compression.enabled
+
+    def plain_step(state, batch):
+        loss, grads = _microbatch_grads(api, state["params"], batch, rt,
+                                        tcfg.microbatches)
+        new_state, metrics = _apply_optimizer(state, grads, tcfg)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    if not use_comp:
+        return plain_step
+
+    # inside the pod-manual region, activation constraints must not name
+    # the (now Manual) 'pod' axis — rebuild the shard callback without it
+    from repro.distributed.sharding import make_shard_fn
+    rt_pod = dataclasses.replace(
+        rt, shard=make_shard_fn(mesh, api.cfg, drop_axes=("pod",)))
+
+    def step(state, batch):
+        def per_pod(params, ef, pod_batch):
+            loss, grads = _microbatch_grads(api, params, pod_batch, rt_pod,
+                                            tcfg.microbatches)
+            mean_grads, new_ef = compressed_cross_pod_mean(
+                grads, ef, tcfg.grad_compression, axis_name="pod")
+            loss = lax.pmean(loss, "pod")
+            return loss, mean_grads, new_ef
+
+        batch_specs = jax.tree_util.tree_map(
+            lambda x: P("pod"), batch)
+        f = jax.shard_map(
+            per_pod, mesh=mesh, axis_names={"pod"},
+            in_specs=(P(), P(), batch_specs),
+            out_specs=(P(), P(), P()),
+            check_vma=False)
+        loss, grads, new_ef = f(state["params"], state["ef"], batch)
+        new_state, metrics = _apply_optimizer(state, grads, tcfg)
+        new_state["ef"] = new_ef
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return step

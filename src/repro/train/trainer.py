@@ -1,0 +1,100 @@
+"""Training loop with checkpoint/restart fault tolerance and straggler
+monitoring.  The loop is deliberately restart-idempotent: state lives in
+(checkpoint, step) only."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import make_batch_for
+from repro.distributed.fault import (FailureInjector, SimulatedFailure,
+                                     StragglerMonitor)
+from repro.models.model import ModelApi
+from repro.models.transformer import Runtime
+from repro.train.train_step import TrainConfig, init_train_state
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    seq_len: int = 64
+    global_batch: int = 8
+    task_id: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 20
+    log_every: int = 10
+    max_restarts: int = 5
+
+
+def train_loop(api: ModelApi, rt: Runtime, tcfg: TrainConfig,
+               lcfg: LoopConfig, step_fn: Callable,
+               injector: Optional[FailureInjector] = None,
+               state=None, log: Callable = print) -> tuple[dict, list]:
+    """Runs (or resumes) training.  Returns (final_state, history).
+
+    Restart semantics: on SimulatedFailure the loop restores the latest
+    checkpoint and replays from its step — exactly what a relaunched job
+    would do.  The stateless data pipeline guarantees the replayed stream
+    is identical.
+    """
+    cfg = api.cfg
+    if state is None:
+        params = api.init(jax.random.PRNGKey(0))
+        state = init_train_state(params, tcfg, multi_pod=False)
+
+    start = 0
+    if lcfg.ckpt_dir:
+        last = ckpt.latest_step(lcfg.ckpt_dir)
+        if last is not None:
+            state = ckpt.restore(state, lcfg.ckpt_dir, last)
+            start = int(last)
+            log(f"[trainer] resumed from step {start}")
+
+    history: list = []
+    monitor = StragglerMonitor()
+    restarts = 0
+    step = start
+    while step < lcfg.total_steps:
+        try:
+            batch = make_batch_for(cfg, step, lcfg.seq_len,
+                                   lcfg.global_batch, lcfg.task_id)
+            if injector is not None:
+                injector.check(step)
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            dt = time.perf_counter() - t0
+            monitor.observe(step, dt)
+            loss = float(metrics["loss"])
+            if not np.isfinite(loss):
+                raise RuntimeError(f"non-finite loss at step {step}")
+            history.append({"step": step, "loss": loss, "sec": dt})
+            if step % lcfg.log_every == 0:
+                log(f"[trainer] step {step:5d} loss {loss:.4f} "
+                    f"({dt*1e3:.0f} ms) straggler={monitor.recommendation()}")
+            step += 1
+            if lcfg.ckpt_dir and step % lcfg.ckpt_every == 0:
+                ckpt.save(state, lcfg.ckpt_dir, step)
+        except SimulatedFailure as e:
+            restarts += 1
+            if restarts > lcfg.max_restarts or not lcfg.ckpt_dir:
+                raise
+            last = ckpt.latest_step(lcfg.ckpt_dir)
+            if last is None:  # no checkpoint yet -> cold restart
+                params = api.init(jax.random.PRNGKey(0))
+                state = init_train_state(params, tcfg, multi_pod=False)
+                step = 0
+            else:
+                state = ckpt.restore(state, lcfg.ckpt_dir, last)
+                step = int(last)
+            log(f"[trainer] {e}; restored to step {step} "
+                f"(restart {restarts}/{lcfg.max_restarts})")
+    if lcfg.ckpt_dir:
+        ckpt.save(state, lcfg.ckpt_dir, step)
+    return state, history

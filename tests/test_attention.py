@@ -1,0 +1,152 @@
+"""flash_attention vs naive-softmax oracle across variants, and decode
+attention partial-statistics correctness."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttnCfg
+from repro.models.attention import (cache_write, decode_attention_partial,
+                                    finalize_partial, flash_attention)
+
+
+def naive_attention(q, k, v, *, causal, window=None, cap=None, kv_len=None):
+    B, T, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, T, Hkv, G, D)
+    s = jnp.einsum("bthgd,bshd->bthgs", qf, k.astype(jnp.float32))
+    s = s / np.sqrt(D)
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None and causal:
+        mask &= (qpos - kpos) < window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bthgs,bshd->bthgd", p, v.astype(jnp.float32))
+    return o.reshape(B, T, Hq, D)
+
+
+def rand_qkv(key, B, T, S, Hq, Hkv, D, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, T, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    return q, k, v
+
+
+CASES = [
+    # (T, S, Hq, Hkv, D, causal, window, cap, chunks)
+    (32, 32, 4, 4, 16, True, None, None, 8),
+    (32, 32, 4, 2, 16, True, None, None, 8),     # GQA
+    (64, 64, 4, 1, 8, True, 16, None, 16),       # SWA
+    (32, 32, 2, 2, 16, True, None, 50.0, 8),     # softcap
+    (48, 48, 4, 2, 16, True, None, None, 16),    # chunk not dividing T
+    (16, 40, 4, 4, 8, False, None, None, 8),     # cross/bidirectional
+    (33, 17, 2, 1, 8, False, None, None, 8),     # ragged shapes
+]
+
+
+@pytest.mark.parametrize("T,S,Hq,Hkv,D,causal,window,cap,chunk", CASES)
+def test_flash_matches_naive(T, S, Hq, Hkv, D, causal, window, cap, chunk):
+    B = 2
+    q, k, v = rand_qkv(jax.random.PRNGKey(0), B, T, S, Hq, Hkv, D)
+    cfg = AttnCfg(n_q=Hq, n_kv=Hkv, head_dim=D, window=window,
+                  attn_softcap=cap)
+    got = flash_attention(q, k, v, cfg, causal=causal, chunk_q=chunk,
+                          chunk_k=chunk)
+    want = naive_attention(q, k, v, causal=causal, window=window, cap=cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtype_sweep(dtype):
+    q, k, v = rand_qkv(jax.random.PRNGKey(1), 1, 32, 32, 4, 2, 16, dtype)
+    cfg = AttnCfg(n_q=4, n_kv=2, head_dim=16)
+    got = flash_attention(q, k, v, cfg, chunk_q=8, chunk_k=8)
+    want = naive_attention(q, k, v, causal=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+    assert got.dtype == dtype
+
+
+def test_kv_valid_len_masks_padding():
+    q, k, v = rand_qkv(jax.random.PRNGKey(2), 1, 8, 32, 2, 2, 8)
+    cfg = AttnCfg(n_q=2, n_kv=2, head_dim=8)
+    got = flash_attention(q, k, v, cfg, causal=False, kv_valid_len=20,
+                          chunk_q=8, chunk_k=8)
+    want = naive_attention(q, k, v, causal=False, kv_len=20)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_decode_partial_matches_full_attention():
+    """Stepping a cache then attending == row T-1 of full causal attention."""
+    B, T, Hq, Hkv, D = 2, 12, 4, 2, 8
+    q_all, k_all, v_all = rand_qkv(jax.random.PRNGKey(3), B, T, T, Hq, Hkv, D)
+    cfg = AttnCfg(n_q=Hq, n_kv=Hkv, head_dim=D)
+
+    kc = jnp.zeros((B, T, Hkv, D))
+    vc = jnp.zeros((B, T, Hkv, D))
+    pos = jnp.full((T,), -1, jnp.int32)
+    for t in range(T):
+        kc, vc, pos = cache_write(kc, vc, pos, k_all[:, t:t + 1],
+                                  v_all[:, t:t + 1], jnp.asarray(t))
+    o, m, l = decode_attention_partial(q_all[:, -1:], kc, vc, pos,
+                                       jnp.asarray(T - 1), cfg)
+    got = finalize_partial(o, m, l)
+    want = naive_attention(q_all, k_all, v_all, causal=True)[:, -1]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_decode_partial_combine_across_shards():
+    """Manually split the cache in two 'shards'; flash-combining the partials
+    must equal attention over the whole cache (the SP-decode invariant)."""
+    B, S, Hq, Hkv, D = 1, 16, 2, 1, 8
+    q, k, v = rand_qkv(jax.random.PRNGKey(4), B, 1, S, Hq, Hkv, D)
+    cfg = AttnCfg(n_q=Hq, n_kv=Hkv, head_dim=D)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    cur = jnp.asarray(S - 1)
+
+    o_full, m_full, l_full = decode_attention_partial(q, k, v, pos, cur, cfg)
+    want = finalize_partial(o_full, m_full, l_full)
+
+    halves = []
+    for sl in (slice(0, 8), slice(8, 16)):
+        halves.append(decode_attention_partial(q, k[:, sl], v[:, sl],
+                                               pos[sl], cur, cfg))
+    m = jnp.maximum(halves[0][1], halves[1][1])
+    l = sum(h[2] * jnp.exp(h[1] - m) for h in halves)
+    o = sum(h[0] * jnp.exp(h[1] - m)[..., None] for h in halves)
+    got = o / jnp.maximum(l[..., None], 1e-30)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_ring_cache_swa_decode():
+    """With a window-sized ring cache, decode must equal SWA full attention."""
+    B, T, H, D, W = 1, 20, 2, 8, 8
+    q_all, k_all, v_all = rand_qkv(jax.random.PRNGKey(5), B, T, T, H, H, D)
+    cfg = AttnCfg(n_q=H, n_kv=H, head_dim=D, window=W)
+    kc = jnp.zeros((B, W, H, D))
+    vc = jnp.zeros((B, W, H, D))
+    pos = jnp.full((W,), -1, jnp.int32)
+    for t in range(T):
+        kc, vc, pos = cache_write(kc, vc, pos, k_all[:, t:t + 1],
+                                  v_all[:, t:t + 1], jnp.asarray(t))
+    o, m, l = decode_attention_partial(q_all[:, -1:], kc, vc, pos,
+                                       jnp.asarray(T - 1), cfg)
+    got = finalize_partial(o, m, l)
+    want = naive_attention(q_all, k_all, v_all, causal=True, window=W)[:, -1]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)

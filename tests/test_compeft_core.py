@@ -1,0 +1,135 @@
+"""Unit tests for the ComPEFT core algorithm (Algorithm 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CompressionConfig, apply_compressed, compress,
+                        compression_summary, decompress, rescale)
+from repro.core.compeft import CompressedTensor, calibrate_alpha
+
+
+def make_tau(key=0, shapes=((64, 32), (128,), (16, 16, 4))):
+    rng = np.random.default_rng(key)
+    return {f"w{i}": jnp.asarray(rng.normal(0, 0.01, s), jnp.float32)
+            for i, s in enumerate(shapes)}
+
+
+def test_density_respected():
+    tau = make_tau()
+    for k in (0.05, 0.1, 0.3, 0.5):
+        c = compress(tau, CompressionConfig(density=k))
+        for leaf in jax.tree_util.tree_leaves(
+                c, is_leaf=lambda x: isinstance(x, CompressedTensor)):
+            d = float(leaf.density)
+            assert abs(d - k) < 0.06, (k, d)
+
+
+def test_signs_match_largest_magnitudes():
+    rng = np.random.default_rng(1)
+    t = jnp.asarray(rng.normal(0, 1, (1000,)), jnp.float32)
+    c = compress({"w": t}, CompressionConfig(density=0.1))["w"]
+    kept = np.nonzero(np.array(c.signs))[0]
+    mags = np.abs(np.array(t))
+    cutoff = np.sort(mags)[-len(kept)]
+    assert np.all(mags[kept] >= cutoff - 1e-7)
+    # surviving signs equal the original signs
+    assert np.all(np.sign(np.array(t))[kept] == np.array(c.signs)[kept])
+
+
+def test_scale_is_alpha_sigma():
+    tau = make_tau(2)
+    alpha = 3.0
+    c = compress(tau, CompressionConfig(density=0.2, alpha=alpha))
+    for name, leaf in tau.items():
+        got = float(c[name].scale)
+        want = alpha * float(jnp.std(leaf))
+        assert got == pytest.approx(want, rel=1e-5)
+
+
+def test_decompress_values_are_ternary_times_scale():
+    tau = make_tau(3)
+    c = compress(tau, CompressionConfig(density=0.1, alpha=2.0))
+    d = decompress(c)
+    for name in tau:
+        vals = np.unique(np.array(d[name], np.float32))
+        s = float(c[name].scale)
+        for v in vals:
+            assert min(abs(v), abs(v - s), abs(v + s)) < 1e-6
+
+
+def test_apply_compressed_reconstructs():
+    tau = make_tau(4)
+    theta0 = jax.tree_util.tree_map(
+        lambda t: jnp.ones_like(t), tau)
+    c = compress(tau, CompressionConfig(density=0.3))
+    theta = apply_compressed(theta0, c)
+    want = jax.tree_util.tree_map(
+        lambda w, d: w + d, theta0, decompress(c))
+    for a, b in zip(jax.tree_util.tree_leaves(theta),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.array(a), np.array(b), atol=1e-6)
+
+
+def test_rescale():
+    tau = make_tau(5)
+    c1 = compress(tau, CompressionConfig(density=0.2, alpha=1.0))
+    c4 = rescale(c1, 1.0, 4.0)
+    for name in tau:
+        assert float(c4[name].scale) == pytest.approx(4 * float(c1[name].scale))
+        np.testing.assert_array_equal(np.array(c4[name].signs),
+                                      np.array(c1[name].signs))
+
+
+def test_global_threshold_mode():
+    tau = make_tau(6)
+    c = compress(tau, CompressionConfig(density=0.1, per_tensor=False))
+    total = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tau))
+    nnz = sum(int(jnp.sum(jnp.abs(l.signs).astype(jnp.int32)))
+              for l in jax.tree_util.tree_leaves(
+                  c, is_leaf=lambda x: isinstance(x, CompressedTensor)))
+    assert abs(nnz / total - 0.1) < 0.03
+
+
+def test_calibrate_alpha_picks_best():
+    tau = make_tau(7)
+    target = decompress(compress(tau, CompressionConfig(density=0.2, alpha=4.0)))
+
+    def eval_fn(recon):
+        err = 0.0
+        for a, b in zip(jax.tree_util.tree_leaves(recon),
+                        jax.tree_util.tree_leaves(target)):
+            err += float(jnp.sum((a - b) ** 2))
+        return -err
+
+    best_alpha, _, _ = calibrate_alpha(tau, eval_fn, density=0.2)
+    assert best_alpha == 4.0
+
+
+def test_summary_compression_ratio_matches_paper_k005():
+    # paper §2.2: k=0.05 => entropy 0.34*d + 16 bits => ~47x vs 16-bit dense
+    tau = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 1, (100_000,)),
+                            jnp.float32)}
+    c = compress(tau, CompressionConfig(density=0.05))
+    s = compression_summary(tau, c)
+    assert 40 < s["compression_x_entropy"] < 50
+    assert s["compression_x_bitplane"] == pytest.approx(8.0, rel=0.01)
+
+
+def test_compress_is_jittable():
+    tau = make_tau(8)
+    cfg = CompressionConfig(density=0.2)
+    jitted = jax.jit(lambda t: compress(t, cfg))
+    c = jitted(tau)
+    d = float(c["w0"].density)
+    assert abs(d - 0.2) < 0.05
+
+
+def test_invalid_configs_raise():
+    with pytest.raises(ValueError):
+        CompressionConfig(density=0.0)
+    with pytest.raises(ValueError):
+        CompressionConfig(alpha=-1.0)
+    with pytest.raises(ValueError):
+        CompressionConfig(scale_mode="bogus")

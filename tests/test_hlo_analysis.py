@@ -1,0 +1,72 @@
+"""Unit tests for the while-aware HLO analyzer on hand-written HLO."""
+
+import numpy as np
+
+from repro.launch.hlo_analysis import (_parse_op_line, _shape_elems_bytes,
+                                       analyze, parse_computations)
+
+TOY = """
+HloModule toy
+
+%body.1 (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %arg = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.0 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.0), replica_groups=[2,4]<=[8], to_apply=%sum.9
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ip, %ar)
+}
+
+%cond.2 (arg2: (s32[], f32[8,16])) -> pred[] {
+  %arg2 = (s32[], f32[8,16]) parameter(0)
+  %i2 = s32[] get-tuple-element(%arg2), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+%sum.9 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main.3 (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %tup = (s32[], f32[8,16]) tuple(%c0, %p0)
+  %while.5 = (s32[], f32[8,16]) while(%tup), condition=%cond.2, body=%body.1
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%while.5), index=1
+}
+"""
+
+
+def test_parse_op_line_nested_tuple_type():
+    line = ("  %while.5 = (s32[], f32[8,64]{1,0}, (f32[2,2], s32[])) "
+            "while(%tuple), condition=%c, body=%b")
+    name, ty, opcode, rest = _parse_op_line(line)
+    assert name == "while.5"
+    assert opcode == "while"
+    assert "condition=%c" in rest
+    e, b = _shape_elems_bytes(ty)
+    assert b == 4 + 8 * 64 * 4 + 4 * 4 + 4
+
+
+def test_analyze_counts_trips_and_collectives():
+    res = analyze(TOY, n_devices=8)
+    # dot flops: 2*8*16*16 per trip x 5 trips
+    assert res["flops_per_device"] == 2 * 8 * 16 * 16 * 5
+    # all-reduce wire (ring): 2 * bytes * (g-1)/g, g=4, x5 trips
+    want = 2 * (8 * 16 * 4) * 3 / 4 * 5
+    assert res["collective_bytes_per_device"]["all-reduce"] == want
+    assert res["collective_total"] == want
+
+
+def test_analyze_group_parsing_list_form():
+    hlo = TOY.replace("replica_groups=[2,4]<=[8]",
+                      "replica_groups={{0,1},{2,3},{4,5},{6,7}}")
+    res = analyze(hlo, n_devices=8)
+    want = 2 * (8 * 16 * 4) * 1 / 2 * 5   # g=2 now
+    assert res["collective_bytes_per_device"]["all-reduce"] == want

@@ -1,0 +1,153 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp ref across a
+shape/dtype sweep, plus hypothesis property tests and integration with the
+PackedTernary container."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CompressionConfig, compress, pack_ternary
+from repro.core.compeft import CompressedTensor
+from repro.kernels import ops, ref
+from repro.kernels.pack import pack_ternary_planes
+from repro.kernels.popcount_dot import popcount_dot
+from repro.kernels.ternary_matmul import ternary_matmul
+from repro.kernels.unpack_add import unpack_add
+
+LANE = 32
+
+
+def rand_planes(key, m, n):
+    rng = np.random.default_rng(key)
+    assert n % LANE == 0
+    pos = rng.integers(0, 2 ** 32, (m, n // LANE), dtype=np.uint32)
+    neg = rng.integers(0, 2 ** 32, (m, n // LANE), dtype=np.uint32)
+    neg = neg & ~pos  # disjoint
+    return jnp.asarray(pos), jnp.asarray(neg)
+
+
+MATMUL_CASES = [
+    # (M, K, N, bm, bk, bn)
+    (8, 32, 32, 8, 32, 32),
+    (16, 64, 128, 8, 32, 64),
+    (1, 128, 96, 1, 64, 32),
+    (33, 96, 64, 16, 32, 64),    # padding on every dim
+    (128, 128, 128, 128, 128, 128),
+]
+
+
+@pytest.mark.parametrize("M,K,N,bm,bk,bn", MATMUL_CASES)
+def test_ternary_matmul_matches_ref(M, K, N, bm, bk, bn):
+    pos, neg = rand_planes(0, K, N)
+    x = jnp.asarray(np.random.default_rng(1).normal(0, 1, (M, K)),
+                    jnp.float32)
+    scale = jnp.float32(0.37)
+    got = ternary_matmul(x, pos, neg, scale, bm=bm, bk=bk, bn=bn,
+                         interpret=True)
+    want = ref.ternary_matmul_ref(x, pos, neg, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ternary_matmul_dtypes(dtype):
+    pos, neg = rand_planes(2, 64, 64)
+    x = jnp.asarray(np.random.default_rng(3).normal(0, 1, (8, 64)), dtype)
+    got = ternary_matmul(x, pos, neg, jnp.float32(1.0), bm=8, bk=32, bn=32,
+                         interpret=True)
+    want = ref.ternary_matmul_ref(x.astype(jnp.float32), pos, neg, 1.0)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol,
+                               atol=tol)
+
+
+UNPACK_CASES = [(8, 32, 8, 32), (32, 128, 16, 64), (17, 96, 8, 64),
+                (256, 512, 256, 512)]
+
+
+@pytest.mark.parametrize("M,N,bm,bn", UNPACK_CASES)
+def test_unpack_add_matches_ref(M, N, bm, bn):
+    pos, neg = rand_planes(4, M, N)
+    base = jnp.asarray(np.random.default_rng(5).normal(0, 1, (M, N)),
+                       jnp.bfloat16)
+    got = unpack_add(base, pos, neg, jnp.float32(0.25), bm=bm, bn=bn,
+                     interpret=True)
+    want = ref.unpack_add_ref(base, pos, neg, jnp.float32(0.25))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-2,
+                               atol=1e-2)
+    assert got.dtype == base.dtype
+
+
+@pytest.mark.parametrize("M,N,bm,bn", [(8, 64, 8, 64), (30, 100, 16, 64),
+                                       (256, 512, 128, 256)])
+def test_pack_matches_ref(M, N, bm, bn):
+    tau = jnp.asarray(np.random.default_rng(6).normal(0, 1, (M, N)),
+                      jnp.float32)
+    thr = jnp.float32(1.0)
+    gp, gn = pack_ternary_planes(tau, thr, bm=bm, bn=bn, interpret=True)
+    wp, wn = ref.pack_ternary_planes_ref(tau, thr)
+    np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp))
+    np.testing.assert_array_equal(np.asarray(gn), np.asarray(wn))
+
+
+def test_pack_then_matmul_roundtrip():
+    """compress -> kernel-pack -> kernel-matmul == dense delta matmul."""
+    rng = np.random.default_rng(7)
+    K, N, M = 64, 96, 4
+    tau = jnp.asarray(rng.normal(0, 0.02, (K, N)), jnp.float32)
+    thr = jnp.quantile(jnp.abs(tau), 0.8)
+    pos, neg = ops.compress_to_planes(tau, thr)
+    x = jnp.asarray(rng.normal(0, 1, (M, K)), jnp.float32)
+    scale = jnp.float32(0.01)
+    got = ternary_matmul(x, pos, neg, scale, bm=4, bk=32, bn=32,
+                         interpret=True)
+    dense = jnp.where(jnp.abs(tau) >= thr, jnp.sign(tau), 0.0) * scale
+    want = x @ dense
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8))
+def test_popcount_dot_property(seed):
+    rng = np.random.default_rng(seed)
+    W = int(rng.integers(1, 40))
+    ap, an = rand_planes(seed, 1, W * LANE)
+    bp, bn = rand_planes(seed + 100, 1, W * LANE)
+    got = popcount_dot(ap.reshape(-1), an.reshape(-1), bp.reshape(-1),
+                       bn.reshape(-1), bw=64, interpret=True)
+    want = ref.popcount_dot_ref(ap.reshape(-1), an.reshape(-1),
+                                bp.reshape(-1), bn.reshape(-1))
+    assert int(got) == int(want)
+
+
+def test_ops_integration_with_compressed_tensor():
+    """End-to-end: Algorithm-1 compress -> pack -> kernel expert apply
+    equals apply_compressed."""
+    rng = np.random.default_rng(8)
+    base = jnp.asarray(rng.normal(0, 1, (48, 64)), jnp.bfloat16)
+    tau = {"w": jnp.asarray(rng.normal(0, 0.02, (48, 64)), jnp.float32)}
+    comp = compress(tau, CompressionConfig(density=0.2))
+    pt = pack_ternary(comp["w"])
+    got = ops.apply_ternary_delta(base, pt)
+    want = (base.astype(jnp.float32)
+            + comp["w"].signs.astype(jnp.float32) * comp["w"].scale
+            ).astype(jnp.bfloat16)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=1e-2)
+
+
+def test_ops_expert_dot_matches_core():
+    from repro.core.ternary_ops import scaled_dot
+    rng = np.random.default_rng(9)
+    a = CompressedTensor(signs=jnp.asarray(rng.integers(-1, 2, (128,)),
+                                           jnp.int8), scale=jnp.float32(0.5))
+    b = CompressedTensor(signs=jnp.asarray(rng.integers(-1, 2, (128,)),
+                                           jnp.int8), scale=jnp.float32(2.0))
+    pa, pb = pack_ternary(a), pack_ternary(b)
+    got = float(ops.expert_dot(pa, pb))
+    want = float(scaled_dot(pa, pb))
+    assert got == pytest.approx(want)

@@ -1,0 +1,89 @@
+"""Tests for bitplane packing, entropy accounting and the Golomb codec,
+including hypothesis property tests (pack/unpack and encode/decode are
+exact inverses for arbitrary ternary vectors)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import golomb_total_bits  # noqa: F401 (public API check)
+from repro.core import (entropy_bits, pack_bits, pack_ternary, unpack_bits,
+                        unpack_ternary)
+from repro.core.compeft import CompressedTensor
+from repro.core.golomb import (decode, encode, encoded_bits,
+                               theoretical_bits_check)
+
+
+def test_pack_unpack_roundtrip_exact():
+    rng = np.random.default_rng(0)
+    for n in (1, 31, 32, 33, 1000, 4096):
+        mask = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+        words = pack_bits(mask)
+        assert words.dtype == jnp.uint32
+        assert words.shape[0] == (n + 31) // 32
+        back = unpack_bits(words, n)
+        np.testing.assert_array_equal(np.array(back), np.array(mask))
+
+
+def test_pack_ternary_roundtrip():
+    rng = np.random.default_rng(1)
+    signs = jnp.asarray(rng.integers(-1, 2, (40, 17)), jnp.int8)
+    ct = CompressedTensor(signs=signs, scale=jnp.float32(0.37))
+    pt = pack_ternary(ct)
+    back = unpack_ternary(pt)
+    np.testing.assert_array_equal(np.array(back.signs), np.array(signs))
+    assert float(back.scale) == pytest.approx(0.37)
+    assert pt.packed_bytes == 2 * ((40 * 17 + 31) // 32) * 4 + 4
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.sampled_from([-1, 0, 1]), min_size=1, max_size=400),
+       st.floats(min_value=1e-6, max_value=10.0, allow_nan=False))
+def test_golomb_roundtrip_property(signs, scale):
+    arr = np.array(signs, dtype=np.int8)
+    blob = encode(arr, scale)
+    back, s = decode(blob)
+    np.testing.assert_array_equal(back, arr)
+    assert s == pytest.approx(scale, rel=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=512))
+def test_pack_bits_property(n):
+    rng = np.random.default_rng(n)
+    mask = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+    np.testing.assert_array_equal(
+        np.array(unpack_bits(pack_bits(mask), n)), np.array(mask))
+
+
+def test_entropy_formula_paper_value():
+    # k=0.05: H = 0.3382 bits/param (paper: "0.34 * d + 16")
+    h = (entropy_bits(1_000_000, 0.05) - 16) / 1_000_000
+    assert h == pytest.approx(0.3382, abs=2e-3)
+    # 16 / 0.34 ~= 47x (paper's claim)
+    assert 16.0 / h == pytest.approx(47.0, abs=1.0)
+
+
+def test_golomb_actual_close_to_theory():
+    rng = np.random.default_rng(3)
+    n = 200_000
+    for k in (0.05, 0.1, 0.2):
+        mask = rng.random(n) < k
+        signs = np.where(mask, rng.choice([-1, 1], n), 0).astype(np.int8)
+        actual = encoded_bits(signs)
+        theory = theoretical_bits_check(n, k)
+        assert actual == pytest.approx(theory, rel=0.08), (k, actual, theory)
+
+
+def test_golomb_bits_monotone_in_density():
+    n = 1_000_000
+    sizes = [golomb_total_bits(n, k) for k in (0.01, 0.05, 0.1, 0.3, 0.5)]
+    assert sizes == sorted(sizes)
+
+
+def test_empty_vector_encode():
+    blob = encode(np.zeros(100, np.int8), 1.0)
+    back, s = decode(blob)
+    assert back.sum() == 0 and len(back) == 100

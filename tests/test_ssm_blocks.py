@@ -1,0 +1,202 @@
+"""Chunked Mamba / RWKV6 implementations vs naive per-token recurrences."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MambaCfg, RWKVCfg
+from repro.models.mamba import (_ssm_scan_chunked, init_mamba_state,
+                                mamba_decode_step, mamba_forward)
+from repro.models.rwkv import (init_rwkv_state, rwkv_channel_mix,
+                               rwkv_time_mix)
+from repro.models.transformer import init_mamba as init_mamba_params
+from repro.models.transformer import init_rwkv as init_rwkv_params
+
+
+def naive_ssm(dA, dBx, C, h0):
+    B, T, Din, S = dA.shape
+    h = h0
+    ys = []
+    for t in range(T):
+        h = dA[:, t] * h + dBx[:, t]
+        ys.append(jnp.einsum("bds,bs->bd", h, C[:, t]))
+    return jnp.stack(ys, axis=1), h
+
+
+@pytest.mark.parametrize("T,chunk", [(8, 4), (10, 4), (16, 16), (7, 3)])
+def test_ssm_chunked_matches_naive(T, chunk):
+    rng = np.random.default_rng(0)
+    B, Din, S = 2, 6, 4
+    dt = jnp.asarray(rng.uniform(0.1, 0.5, (B, T, Din)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.1, 1.0, (Din, S)), jnp.float32)
+    B_ssm = jnp.asarray(rng.normal(0, 1, (B, T, S)), jnp.float32)
+    C = jnp.asarray(rng.normal(0, 1, (B, T, S)), jnp.float32)
+    x_act = jnp.asarray(rng.normal(0, 1, (B, T, Din)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(0, 1, (B, Din, S)), jnp.float32)
+    y, h = _ssm_scan_chunked(dt, A, B_ssm, C, x_act, h0, chunk=chunk)
+    dA = jnp.exp(dt[..., None] * A[None, None])
+    dBx = (dt * x_act)[..., None] * B_ssm[:, :, None, :]
+    y_ref, h_ref = naive_ssm(dA, dBx, C, h0)
+    np.testing.assert_allclose(np.array(y), np.array(y_ref), atol=1e-4)
+    np.testing.assert_allclose(np.array(h), np.array(h_ref), atol=1e-4)
+
+
+def test_mamba_forward_decode_consistency():
+    """Running T tokens at once == stepping one token at a time."""
+    key = jax.random.PRNGKey(0)
+    d, T, B = 16, 10, 2
+    cfg = MambaCfg(d_state=4, d_conv=4, expand=2, dt_rank=4)
+    p = init_mamba_params(key, d, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, d), jnp.float32)
+
+    y_full, _ = mamba_forward(x, p, cfg, chunk=4)
+
+    state = init_mamba_state(B, d, cfg, jnp.float32)
+    ys = []
+    for t in range(T):
+        y_t, state = mamba_decode_step(x[:, t:t + 1], p, cfg, state)
+        ys.append(y_t)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.array(y_full), np.array(y_step),
+                               atol=2e-4, rtol=1e-3)
+
+
+def naive_rwkv_heads(r, k, v, logw, u, S0):
+    """Reference recurrence.  r,k,v,logw: [B, T, H, dh]; S0: [B, H, dh, dh]."""
+    B, T, H, dh = r.shape
+    S = S0
+    ys = []
+    for t in range(T):
+        kv = jnp.einsum("bhd,bhe->bhde", k[:, t], v[:, t])
+        wkv = S + u[None, :, :, None] * kv
+        ys.append(jnp.einsum("bhd,bhde->bhe", r[:, t], wkv))
+        S = jnp.exp(logw[:, t])[..., None] * S + kv
+    return jnp.stack(ys, axis=1), S
+
+
+@pytest.mark.parametrize("T,chunk", [(8, 4), (12, 5), (6, 6)])
+def test_rwkv_chunked_core_matches_naive(T, chunk):
+    """Exercise the chunked kernel through rwkv_time_mix with decay forced
+    by parameters; compare to the naive recurrence on the same internal
+    r/k/v/w tensors by monkeypatching is heavy — instead validate the chunk
+    math directly with a standalone replica of the scan."""
+    from repro.models.rwkv import _decay, _ddlerp, _shift
+    rng = np.random.default_rng(1)
+    B, H, dh = 2, 2, 4
+    r = jnp.asarray(rng.normal(0, 1, (B, T, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, T, H, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, T, H, dh)), jnp.float32)
+    logw = jnp.asarray(-rng.uniform(0.01, 2.0, (B, T, H, dh)), jnp.float32)
+    u = jnp.asarray(rng.normal(0, 1, (H, dh)), jnp.float32)
+    S0 = jnp.asarray(rng.normal(0, 1, (B, H, dh, dh)), jnp.float32)
+
+    # --- chunked computation (mirrors rwkv_time_mix internals) ---
+    from jax import lax
+    pad = (-T) % chunk
+    rp, kp, vp = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                  for a in (r, k, v))
+    wp = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = (T + pad) // chunk
+    L = chunk
+    rc = rp.reshape(B, n, L, H, dh)
+    kc = kp.reshape(B, n, L, H, dh)
+    vc = vp.reshape(B, n, L, H, dh)
+    wc = wp.reshape(B, n, L, H, dh)
+    ci = jnp.cumsum(wc, axis=2)
+    ce = ci - wc
+    mask = jnp.tril(jnp.ones((L, L), bool), k=-1)
+
+    def step(S, xs):
+        rcc, kcc, vcc, cii, cee = xs
+        y_inter = jnp.einsum("blhd,bhde->blhe", rcc * jnp.exp(cee), S)
+        diff = cee[:, :, None] - cii[:, None, :]
+        A = jnp.einsum("blhd,bmhd,blmhd->blmh", rcc, kcc,
+                       jnp.exp(jnp.minimum(diff, 0.0)))
+        A = jnp.where(mask[None, :, :, None], A, 0.0)
+        y_intra = jnp.einsum("blmh,bmhe->blhe", A, vcc)
+        y_diag = jnp.einsum("blhd,blhd,blhe->blhe", rcc * u[None, None], kcc,
+                            vcc)
+        decay_all = jnp.exp(cii[:, -1][:, None] - cii)
+        S_new = jnp.exp(cii[:, -1])[..., None] * S + jnp.einsum(
+            "blhd,blhe->bhde", kcc * decay_all, vcc)
+        return S_new, y_inter + y_intra + y_diag
+
+    S_fin, ys = lax.scan(step, S0, tuple(jnp.moveaxis(a, 1, 0)
+                                         for a in (rc, kc, vc, ci, ce)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T + pad, H, dh)[:, :T]
+
+    y_ref, S_ref = naive_rwkv_heads(r, k, v, logw, u, S0)
+    np.testing.assert_allclose(np.array(y), np.array(y_ref), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.array(S_fin), np.array(S_ref), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_rwkv_time_mix_full_vs_step():
+    """Whole-sequence chunked path == token-by-token decode path."""
+    key = jax.random.PRNGKey(0)
+    d, T, B = 32, 9, 2
+    cfg = RWKVCfg(head_dim=8, decay_lora=8, mix_lora=4)
+    p = init_rwkv_params(key, d, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, T, d), jnp.float32) * 0.5
+
+    y_full, (S_full, last_full) = rwkv_time_mix(x, p, cfg, chunk=4)
+
+    S, tm, _ = init_rwkv_state(B, d, cfg, jnp.float32)
+    ys = []
+    for t in range(T):
+        y_t, (S, tm) = rwkv_time_mix(x[:, t:t + 1], p, cfg, state=(S, tm),
+                                     chunk=1)
+        ys.append(y_t)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.array(y_full), np.array(y_step), atol=2e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.array(S_full), np.array(S), atol=2e-4,
+                               rtol=1e-3)
+
+
+def test_rwkv_channel_mix_shift_consistency():
+    key = jax.random.PRNGKey(3)
+    d, T, B = 16, 6, 1
+    from repro.configs.base import FFNCfg
+    from repro.models.transformer import init_block
+    from repro.configs.base import BlockCfg, RWKVCfg
+    cfgb = BlockCfg(kind="rwkv", rwkv=RWKVCfg(head_dim=8, decay_lora=4,
+                                              mix_lora=4),
+                    ffn=FFNCfg(d_ff=32, activation="relu2"))
+
+    class _C:  # minimal cfg shim for init_block
+        d_model = d
+        dtype = "float32"
+        cross_attn = False
+        name = "t"
+        rms_eps = 1e-6
+    p = init_block(key, _C, cfgb)["ffn"]
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, T, d), jnp.float32)
+
+    y_full, _ = rwkv_channel_mix(x, p)
+    state = jnp.zeros((B, 1, d), jnp.float32)
+    ys = []
+    for t in range(T):
+        y_t, state = rwkv_channel_mix(x[:, t:t + 1], p, state=state)
+        ys.append(y_t)
+    np.testing.assert_allclose(np.array(y_full),
+                               np.array(jnp.concatenate(ys, 1)), atol=1e-5)
+
+
+def test_rwkv_matmul_form_matches_einsum():
+    """The GLA-style factorised intra-chunk product (perf path) must agree
+    with the exact einsum reference."""
+    key = jax.random.PRNGKey(0)
+    d, T, B = 64, 50, 2
+    cfg = RWKVCfg(head_dim=16, decay_lora=8, mix_lora=4)
+    p = init_rwkv_params(key, d, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, T, d), jnp.float32) * 0.5
+    for chunk in (8, 32):
+        y_e, (S_e, _) = rwkv_time_mix(x, p, cfg, chunk=chunk, impl="einsum")
+        y_m, (S_m, _) = rwkv_time_mix(x, p, cfg, chunk=chunk, impl="matmul")
+        np.testing.assert_allclose(np.asarray(y_m), np.asarray(y_e),
+                                   atol=1e-5, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(S_m), np.asarray(S_e),
+                                   atol=1e-5, rtol=1e-4)

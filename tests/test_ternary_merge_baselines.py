@@ -1,0 +1,184 @@
+"""Tests for ternary bitwise algebra, merging methods and baselines."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CompressionConfig, compress, decompress, pack_tree
+from repro.core.baselines import (bitdelta, dare, method_bits, pruned,
+                                  run_method, stc)
+from repro.core.compeft import CompressedTensor
+from repro.core.merging import (compose_lora, lorahub_search, merge_packed,
+                                pairwise_similarity_matrix, task_arithmetic,
+                                ties_merge)
+from repro.core.packing import pack_ternary
+from repro.core.ternary_ops import (cosine_similarity, hamming_distance, nnz,
+                                    packed_matvec, sign_agreement, ternary_dot)
+
+
+def rnd_signs(key, n):
+    rng = np.random.default_rng(key)
+    return jnp.asarray(rng.integers(-1, 2, n), jnp.int8)
+
+
+def packed(key, n, scale=1.0):
+    return pack_ternary(CompressedTensor(signs=rnd_signs(key, n),
+                                         scale=jnp.float32(scale)))
+
+
+# ---------------------------------------------------------------- ternary ops
+
+def test_ternary_dot_matches_dense():
+    for n in (10, 64, 100, 257):
+        a, b = rnd_signs(0, n), rnd_signs(1, n)
+        pa = pack_ternary(CompressedTensor(signs=a, scale=jnp.float32(1)))
+        pb = pack_ternary(CompressedTensor(signs=b, scale=jnp.float32(1)))
+        want = float(jnp.sum(a.astype(jnp.int32) * b.astype(jnp.int32)))
+        assert float(ternary_dot(pa, pb)) == want
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=300), st.integers(0, 10_000))
+def test_hamming_property(n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(-1, 2, n), jnp.int8)
+    b = jnp.asarray(rng.integers(-1, 2, n), jnp.int8)
+    pa = pack_ternary(CompressedTensor(signs=a, scale=jnp.float32(1)))
+    pb = pack_ternary(CompressedTensor(signs=b, scale=jnp.float32(1)))
+    want = int(np.sum(np.array(a) != np.array(b)))
+    assert int(hamming_distance(pa, pb)) == want
+
+
+def test_nnz_and_cosine():
+    a = jnp.asarray([1, -1, 0, 1, 0, -1, 1, 0], jnp.int8)
+    pa = pack_ternary(CompressedTensor(signs=a, scale=jnp.float32(1)))
+    assert int(nnz(pa)) == 5
+    assert float(cosine_similarity(pa, pa)) == pytest.approx(1.0)
+
+
+def test_sign_agreement():
+    a = jnp.asarray([1, -1, 1, 0], jnp.int8)
+    b = jnp.asarray([1, 1, 0, -1], jnp.int8)
+    pa = pack_ternary(CompressedTensor(signs=a, scale=jnp.float32(1)))
+    pb = pack_ternary(CompressedTensor(signs=b, scale=jnp.float32(1)))
+    # overlap positions: 0,1 -> agree at 0 only
+    assert float(sign_agreement(pa, pb)) == pytest.approx(0.5)
+
+
+def test_packed_matvec_matches_dense():
+    rng = np.random.default_rng(5)
+    signs = jnp.asarray(rng.integers(-1, 2, (24, 16)), jnp.int8)
+    ct = CompressedTensor(signs=signs, scale=jnp.float32(0.25))
+    pt = pack_ternary(ct)
+    x = jnp.asarray(rng.normal(0, 1, (16,)), jnp.float32)
+    want = (signs.astype(jnp.float32) @ x) * 0.25
+    np.testing.assert_allclose(np.array(packed_matvec(pt, x)), np.array(want),
+                               rtol=1e-5)
+
+
+# ------------------------------------------------------------------- merging
+
+def make_taus(n_tasks=3, shapes=((32, 16), (48,))):
+    rng = np.random.default_rng(11)
+    return [{f"w{i}": jnp.asarray(rng.normal(0, 0.02, s), jnp.float32)
+             for i, s in enumerate(shapes)} for _ in range(n_tasks)]
+
+
+def test_task_arithmetic_is_sum():
+    taus = make_taus()
+    m = task_arithmetic(taus, lam=0.5)
+    want = 0.5 * sum(np.array(t["w0"]) for t in taus)
+    np.testing.assert_allclose(np.array(m["w0"]), want, rtol=1e-5)
+
+
+def test_ties_zero_on_disagreement():
+    a = {"w": jnp.asarray([1.0, 1.0, 0.0, 0.0])}
+    b = {"w": jnp.asarray([-1.0, 1.0, 0.0, 0.0])}
+    m = ties_merge([a, b], density=1.0)
+    got = np.array(m["w"])
+    assert got[0] == 0.0           # exact sign conflict cancels
+    assert got[1] == pytest.approx(1.0)  # agreement -> mean
+
+
+def test_merge_packed_equals_dense_ta():
+    taus = make_taus()
+    comp = [compress(t, CompressionConfig(density=0.3)) for t in taus]
+    packed = [pack_tree(c) for c in comp]
+    fast = merge_packed(packed, lam=1.0)
+    slow = task_arithmetic([decompress(c) for c in comp], lam=1.0)
+    for kk in fast:
+        np.testing.assert_allclose(np.array(fast[kk], np.float32).reshape(-1),
+                                   np.array(slow[kk], np.float32).reshape(-1),
+                                   atol=1e-5)
+
+
+def test_compose_lora_eq1():
+    mods = make_taus(4)
+    w = jnp.asarray([0.5, 0.25, 0.25, 0.0])
+    m = compose_lora(mods, w)
+    want = sum(float(wi) * np.array(mi["w0"]) for wi, mi in zip(w, mods))
+    np.testing.assert_allclose(np.array(m["w0"]), want, rtol=1e-5)
+
+
+def test_lorahub_search_recovers_useful_weights():
+    mods = make_taus(3)
+    target = np.array(mods[0]["w0"]) * 1.0  # task 0 is the right expert
+
+    def loss(composed):
+        return float(np.sum((np.array(composed["w0"]) - target) ** 2))
+
+    w, best = lorahub_search(mods, loss, n_iters=80, seed=0, l1_reg=0.0)
+    assert best < loss(compose_lora(mods, jnp.zeros(3)))
+    assert w[0] > 0.3  # the matching expert got meaningful weight
+
+
+def test_similarity_matrix_identity_diag():
+    taus = make_taus(3)
+    packed = [pack_tree(compress(t, CompressionConfig(density=0.3)))
+              for t in taus]
+    m = pairwise_similarity_matrix(packed)
+    np.testing.assert_allclose(np.diag(m), 1.0)
+    assert np.all(np.abs(m) <= 1.0 + 1e-6)
+
+
+# ----------------------------------------------------------------- baselines
+
+def test_pruned_keeps_magnitudes():
+    t = {"w": jnp.asarray([0.1, -5.0, 0.01, 3.0])}
+    p = pruned(t, density=0.5)
+    np.testing.assert_allclose(np.array(p["w"]), [0.0, -5.0, 0.0, 3.0])
+
+
+def test_stc_scale_is_mean_survivor_magnitude():
+    t = {"w": jnp.asarray([0.1, -4.0, 0.01, 2.0])}
+    s = stc(t, density=0.5)
+    got = np.array(s["w"])
+    np.testing.assert_allclose(got, [0.0, -3.0, 0.0, 3.0], atol=1e-6)
+
+
+def test_bitdelta_density_one():
+    t = {"w": jnp.asarray([0.5, -1.5])}
+    b = bitdelta(t)
+    np.testing.assert_allclose(np.array(b["w"]), [1.0, -1.0])
+
+
+def test_dare_unbiased():
+    rng = np.random.default_rng(0)
+    t = {"w": jnp.asarray(rng.normal(0, 1, (20_000,)), jnp.float32)}
+    d = dare(t, density=0.5, key=jax.random.PRNGKey(0))
+    # E[dare(tau)] = tau -> means close
+    assert float(jnp.mean(d["w"] - t["w"])) == pytest.approx(0.0, abs=0.02)
+
+
+def test_run_method_dispatch_and_bits():
+    t = {"w": jnp.asarray(np.random.default_rng(1).normal(0, 1, 1000),
+                          jnp.float32)}
+    for m in ("compeft", "stc", "pruned", "bitdelta", "dare"):
+        out = run_method(m, t, density=0.2)
+        assert out["w"].shape == t["w"].shape
+        assert method_bits(m, 1000, 0.2) > 0
+    # compeft strictly cheaper than pruned (ternary vs 16-bit magnitudes)
+    assert method_bits("compeft", 10_000, 0.1) < method_bits("pruned", 10_000, 0.1)
