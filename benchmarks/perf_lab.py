@@ -74,10 +74,14 @@ def summarize(res: dict) -> dict:
     return a
 
 
-def save(name: str, records: list):
+def save_raw(name: str, records: list):
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, f"{name}.json"), "w") as f:
         json.dump(records, f, indent=1, default=float)
+
+
+def save(name: str, records: list):
+    save_raw(name, records)
     for r in records:
         print(f"[{r['tag']:>28s}] comp={r['t_compute_s']:.3e}s "
               f"mem={r['t_memory_s']:.3e}s coll={r['t_collective_s']:.3e}s "
@@ -147,10 +151,125 @@ def exp_llama4_prefill():
     save("llama4_prefill", rows)
 
 
+def _time(fn, reps=3):
+    """Best-of-reps wall time; blocks on all jax leaves."""
+    best = float("inf")
+    out = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(jax.tree_util.tree_leaves(
+            out, is_leaf=lambda x: hasattr(x, "pos")))
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _synth_expert(n_params=50_000_000, seed=0):
+    """Synthetic >=50M-param task vector shaped like a transformer block."""
+    rng = np.random.default_rng(seed)
+    d = 4096
+    tau, total, i = {}, 0, 0
+    while total < n_params:
+        tau[f"blocks/block{i}/w"] = jnp.asarray(
+            rng.normal(0, 0.02, (d, d)).astype(np.float32))
+        total += d * d
+        i += 1
+    return tau, total
+
+
+def exp_compress_swap():
+    """Tentpole measurement: single-pass streaming compression vs the seed
+    per-leaf quantile path, and packed-resident vs dense-resident expert
+    capacity/swap parity, on CPU interpret mode."""
+    from repro.core import (CompressionConfig, compress, compress_packed,
+                            pack_tree, tree_packed_bytes)
+    from repro.kernels.ops import apply_ternary_delta_flat
+    from repro.peft import compress_expert
+    from repro.serve import DeviceCache, ExpertStore
+
+    cfg = CompressionConfig(density=0.05, alpha=1.0)
+    tau, n_params = _synth_expert()
+    rec = {"tag": "compress_swap", "n_params": n_params,
+           "density": cfg.density}
+
+    # --- compression throughput: seed per-leaf loop vs streaming ---------
+    t_seed, packed_seed = _time(lambda: pack_tree(compress(tau, cfg)), reps=2)
+    t_stream, packed_new = _time(lambda: compress_packed(tau, cfg), reps=2)
+    rec["compress_seed_s"] = t_seed
+    rec["compress_stream_s"] = t_stream
+    rec["compress_speedup_x"] = t_seed / t_stream
+    rec["compress_stream_gbps"] = n_params * 4 / t_stream / 1e9
+    for k in tau:
+        np.testing.assert_allclose(float(packed_new[k].scale),
+                                   float(packed_seed[k].scale), rtol=1e-4)
+
+    # --- packed-resident capacity under a fixed HBM budget ---------------
+    store = ExpertStore()
+    small = {k: v[:512, :512] for k, v in list(tau.items())[:2]}
+    n_experts = 24
+    for i in range(n_experts):
+        rng = np.random.default_rng(100 + i)
+        e = {k: v + jnp.asarray(rng.normal(0, 0.01, v.shape), jnp.float32)
+             for k, v in small.items()}
+        store.put(compress_expert(f"e{i}", "full", e, density=0.05,
+                                  alpha=1.0))
+    dense_bytes = sum(int(np.prod(v.shape)) * 4 for v in small.values())
+    budget = int(dense_bytes * 1.5)        # seed layout: one dense expert
+    cache = DeviceCache(store, capacity_bytes=budget)
+    for i in range(n_experts):
+        cache.fetch(f"e{i}")
+    rec["budget_bytes"] = budget
+    rec["resident_packed"] = len(cache.resident())
+    rec["resident_dense_equiv"] = max(1, budget // dense_bytes)
+    rec["capacity_multiplier_x"] = (rec["resident_packed"]
+                                    / rec["resident_dense_equiv"])
+
+    # --- swap latency + numerical parity: fused plane merge vs dense -----
+    art = store.get("e0")
+    base = {k: jnp.asarray(np.random.default_rng(1).normal(0, 1, v.shape),
+                           jnp.float32) for k, v in small.items()}
+
+    def merge_packed():
+        return {k: apply_ternary_delta_flat(base[k], art.packed[k])
+                for k in base}
+
+    def merge_dense():
+        taud = art.to_dense_tau()
+        return {k: (base[k].astype(jnp.float32)
+                    + jnp.asarray(taud[k]).reshape(base[k].shape)
+                    ).astype(base[k].dtype) for k in base}
+
+    t_packed, merged_p = _time(merge_packed)
+    t_dense, merged_d = _time(merge_dense)
+    for k in base:
+        np.testing.assert_array_equal(np.asarray(merged_p[k]),
+                                      np.asarray(merged_d[k]))
+    rec["swap_packed_s"] = t_packed
+    rec["swap_dense_s"] = t_dense
+    rec["swap_bitwise_identical"] = True
+    rec["packed_expert_bytes"] = tree_packed_bytes(art.packed)
+    rec["dense_expert_bytes"] = dense_bytes
+
+    save_raw("compress_swap", [rec])
+    with open(os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_compress.json"), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    print(f"compress: seed={t_seed:.2f}s stream={t_stream:.2f}s "
+          f"({rec['compress_speedup_x']:.1f}x); "
+          f"capacity: {rec['resident_packed']} packed vs "
+          f"{rec['resident_dense_equiv']} dense "
+          f"({rec['capacity_multiplier_x']:.0f}x); "
+          f"swap: packed={t_packed*1e3:.1f}ms dense={t_dense*1e3:.1f}ms "
+          f"bitwise_identical={rec['swap_bitwise_identical']}")
+    assert rec["compress_speedup_x"] >= 3.0, rec["compress_speedup_x"]
+    assert rec["capacity_multiplier_x"] >= 8.0, rec["capacity_multiplier_x"]
+
+
 EXPS = {
     "compression_ablation": exp_compression_ablation,
     "rwkv_chunk": exp_rwkv_chunk,
     "llama4_prefill": exp_llama4_prefill,
+    "compress_swap": exp_compress_swap,
 }
 
 

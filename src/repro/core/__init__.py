@@ -4,7 +4,8 @@ baselines and the cross-pod gradient compressor."""
 from repro.core.compeft import (ALPHA_GRID, DENSITY_GRID, CompressedTensor,
                                 CompressionConfig, apply_compressed,
                                 calibrate_alpha, compress, compress_leaf,
-                                compression_summary, decompress, rescale)
+                                compress_packed, compression_summary,
+                                decompress, rescale)
 from repro.core.packing import (PackedTernary, entropy_bits,
                                 golomb_bits_per_position, golomb_total_bits,
                                 pack_bits, pack_ternary, pack_tree,
@@ -14,7 +15,8 @@ from repro.core.packing import (PackedTernary, entropy_bits,
 __all__ = [
     "ALPHA_GRID", "DENSITY_GRID", "CompressedTensor", "CompressionConfig",
     "apply_compressed", "calibrate_alpha", "compress", "compress_leaf",
-    "compression_summary", "decompress", "rescale", "PackedTernary",
+    "compress_packed", "compression_summary", "decompress", "rescale",
+    "PackedTernary",
     "entropy_bits", "golomb_bits_per_position", "golomb_total_bits",
     "pack_bits", "pack_ternary", "pack_tree", "tree_packed_bytes",
     "unpack_bits", "unpack_ternary", "unpack_tree",

@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.packing import PackedTernary
 from repro.kernels.pack import pack_ternary_planes
@@ -22,6 +23,42 @@ def apply_ternary_delta(base: jax.Array, pt: PackedTernary) -> jax.Array:
     pos = pt.pos.reshape(M, -1)
     neg = pt.neg.reshape(M, -1)
     return unpack_add(base, pos, neg, pt.scale, interpret=INTERPRET)
+
+
+MERGE_COLS = 4096  # flat-view row width for rank-agnostic merges (128 words)
+
+
+def apply_ternary_delta_flat(base: jax.Array, pt: PackedTernary) -> jax.Array:
+    """Rank-agnostic fused merge: base (any shape) + scale * (pos - neg).
+
+    The planes are bit-packed over the *flattened* C-order tensor, so the
+    merge views both operands as a padded [R, MERGE_COLS] buffer (row width
+    a multiple of the 32-bit lane keeps word alignment) and runs the same
+    bandwidth-bound unpack_add kernel.  This is the packed-resident swap
+    path: HBM traffic is base + 2 bits/param, no dense delta is ever
+    materialised.
+    """
+    LANE = 32
+    n = int(np.prod(base.shape))
+    nw = -(-n // LANE)
+    cols = min(MERGE_COLS, ((n + LANE - 1) // LANE) * LANE)
+    rows = -(-n // cols)
+    flat = base.reshape(-1)
+    pad = rows * cols - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), base.dtype)])
+    wpad = rows * (cols // LANE) - nw
+    pos = jnp.concatenate([pt.pos.reshape(-1),
+                           jnp.zeros((wpad,), jnp.uint32)]) if wpad else \
+        pt.pos.reshape(-1)
+    neg = jnp.concatenate([pt.neg.reshape(-1),
+                           jnp.zeros((wpad,), jnp.uint32)]) if wpad else \
+        pt.neg.reshape(-1)
+    out = unpack_add(flat.reshape(rows, cols),
+                     pos.reshape(rows, cols // LANE),
+                     neg.reshape(rows, cols // LANE),
+                     pt.scale, interpret=INTERPRET)
+    return out.reshape(-1)[:n].reshape(base.shape)
 
 
 def ternary_matvec(x: jax.Array, pt: PackedTernary) -> jax.Array:

@@ -6,9 +6,19 @@ emit the two uint32 bitplanes in one pass:
     keep = |tau| >= thr
     pos_bits = pack(keep & (tau > 0));  neg_bits = pack(keep & (tau < 0))
 
-The global threshold (one quantile per tensor) is computed outside — it is
-O(n) once per expert; the kernel is the bandwidth-bound part that runs over
-the full tensor and writes 2 bits/param.
+Two entry points:
+
+* :func:`pack_ternary_planes` — one tensor, one scalar threshold (the seed
+  per-leaf path and the unit-test surface);
+* :func:`pack_ternary_planes_segmented` — the streaming-compression fast
+  path: a single launch over the flat ``[R, C]`` segment buffer holding
+  *all* leaves of a pytree, with a per-row threshold vector (each row
+  belongs to exactly one leaf, so a per-row threshold is a per-leaf
+  threshold).  This is what turns N python-level compress calls into one
+  batched kernel.
+
+Thresholds come from :mod:`repro.kernels.histogram_quantile` — O(n), no
+sort; the kernels here are the bandwidth-bound part writing 2 bits/param.
 """
 
 from __future__ import annotations
@@ -19,21 +29,35 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tpu_params import streaming_cost, tpu_compiler_params
+
 LANE = 32
+
+
+def _pack_lanes(keep_pos, keep_neg):
+    bm, bn = keep_pos.shape
+    lanes_p = keep_pos.reshape(bm, bn // LANE, LANE)
+    lanes_n = keep_neg.reshape(bm, bn // LANE, LANE)
+    weights = (jnp.uint32(1) << jnp.arange(LANE, dtype=jnp.uint32))[None, None]
+    pos = jnp.sum(jnp.where(lanes_p, weights, jnp.uint32(0)), axis=-1,
+                  dtype=jnp.uint32)
+    neg = jnp.sum(jnp.where(lanes_n, weights, jnp.uint32(0)), axis=-1,
+                  dtype=jnp.uint32)
+    return pos, neg
 
 
 def _kernel(tau_ref, thr_ref, pos_ref, neg_ref):
     t = tau_ref[...].astype(jnp.float32)               # [BM, BN]
     thr = thr_ref[0, 0]
     keep = jnp.abs(t) >= thr
-    bm, bn = t.shape
-    lanes_p = (keep & (t > 0)).reshape(bm, bn // LANE, LANE)
-    lanes_n = (keep & (t < 0)).reshape(bm, bn // LANE, LANE)
-    weights = (jnp.uint32(1) << jnp.arange(LANE, dtype=jnp.uint32))[None, None]
-    pos_ref[...] = jnp.sum(
-        jnp.where(lanes_p, weights, jnp.uint32(0)), axis=-1, dtype=jnp.uint32)
-    neg_ref[...] = jnp.sum(
-        jnp.where(lanes_n, weights, jnp.uint32(0)), axis=-1, dtype=jnp.uint32)
+    pos_ref[...], neg_ref[...] = _pack_lanes(keep & (t > 0), keep & (t < 0))
+
+
+def _kernel_rows(tau_ref, thr_ref, pos_ref, neg_ref):
+    t = tau_ref[...].astype(jnp.float32)               # [BM, BN]
+    thr = thr_ref[...]                                  # [BM, 1]
+    keep = jnp.abs(t) >= thr
+    pos_ref[...], neg_ref[...] = _pack_lanes(keep & (t > 0), keep & (t < 0))
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
@@ -65,6 +89,70 @@ def pack_ternary_planes(tau: jax.Array, thr: jax.Array, *, bm: int = 256,
             jax.ShapeDtypeStruct((Mp, Np // LANE), jnp.uint32),
             jax.ShapeDtypeStruct((Mp, Np // LANE), jnp.uint32),
         ],
+        compiler_params=tpu_compiler_params(("parallel", "parallel"),
+                                            interpret=interpret),
+        cost_estimate=streaming_cost(Mp * Np, in_bytes_per_elem=4.0,
+                                     out_bytes_per_elem=0.25),
         interpret=interpret,
     )(tau, thr.reshape(1, 1).astype(jnp.float32))
     return pos[:M, : -(-N // LANE)], neg[:M, : -(-N // LANE)]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def pack_ternary_planes_segmented(tau: jax.Array, thr_rows: jax.Array, *,
+                                  bm: int = 256, bn: int = 512,
+                                  interpret: bool = True):
+    """Batched pack over a segment buffer: tau [R, C] (C % 32 == 0),
+    thr_rows [R] f32 per-row thresholds.  One launch for a whole pytree.
+
+    Returns (pos, neg) uint32 [R, C//32].  Padding rows pack to zero words
+    as long as their elements are zero and their threshold is > 0 — zeros
+    never set a bit in either plane regardless of the threshold.
+    """
+    R, C = tau.shape
+    assert C % LANE == 0, C
+    bm = min(bm, R)
+    bn = min(bn, C)
+    bn = (bn // LANE) * LANE
+    pad_r = (-R) % bm
+    assert C % bn == 0, (C, bn)
+    if pad_r:
+        tau = jnp.pad(tau, ((0, pad_r), (0, 0)))
+        thr_rows = jnp.pad(thr_rows, (0, pad_r))
+    Rp = tau.shape[0]
+
+    pos, neg = pl.pallas_call(
+        _kernel_rows,
+        grid=(Rp // bm, C // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn // LANE), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn // LANE), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Rp, C // LANE), jnp.uint32),
+            jax.ShapeDtypeStruct((Rp, C // LANE), jnp.uint32),
+        ],
+        compiler_params=tpu_compiler_params(("parallel", "parallel"),
+                                            interpret=interpret),
+        cost_estimate=streaming_cost(Rp * C, in_bytes_per_elem=4.0,
+                                     out_bytes_per_elem=0.25),
+        interpret=interpret,
+    )(tau.astype(jnp.float32), thr_rows.reshape(-1, 1).astype(jnp.float32))
+    return pos[:R], neg[:R]
+
+
+def pack_ternary_planes_segmented_ref(tau, thr_rows):
+    """Vectorised jnp mirror of the segmented kernel (CPU fast path)."""
+    t = tau.astype(jnp.float32)
+    thr = thr_rows.astype(jnp.float32)[:, None]
+    keep = jnp.abs(t) >= thr
+    R, C = t.shape
+    w = (jnp.uint32(1) << jnp.arange(LANE, dtype=jnp.uint32))
+    posm = (keep & (t > 0)).astype(jnp.uint32).reshape(R, C // LANE, LANE)
+    negm = (keep & (t < 0)).astype(jnp.uint32).reshape(R, C // LANE, LANE)
+    return (jnp.sum(posm * w, axis=-1, dtype=jnp.uint32),
+            jnp.sum(negm * w, axis=-1, dtype=jnp.uint32))

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.tpu_params import matmul_cost, tpu_compiler_params
+
 LANE = 32
 
 
@@ -86,6 +88,11 @@ def ternary_matmul(x: jax.Array, pos: jax.Array, neg: jax.Array,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        # i/j tiles are independent; k accumulates into the output block
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary"), interpret=interpret),
+        cost_estimate=matmul_cost(Mp, Np, Kpd,
+                                  elem_bytes=x.dtype.itemsize),
         interpret=interpret,
     )(x, pos, neg, scale.reshape(1, 1).astype(jnp.float32))
     return out[:M, :N]

@@ -1,0 +1,44 @@
+"""Shared Mosaic compiler hints for the Pallas kernels.
+
+``dimension_semantics`` tells the TPU lowering which grid dimensions are
+embarrassingly parallel (safe to pipeline/reorder across cores) and which
+carry a sequential accumulation ("arbitrary").  Interpret mode (CPU CI)
+ignores compiler hints, so we return ``None`` there and keep the kernels
+runnable on any backend.
+"""
+
+from __future__ import annotations
+
+from jax.experimental import pallas as pl
+
+
+def tpu_compiler_params(dimension_semantics: tuple[str, ...], *,
+                        interpret: bool = False):
+    """TPUCompilerParams with the given grid semantics, or None off-TPU."""
+    if interpret:
+        return None
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.TPUCompilerParams(dimension_semantics=dimension_semantics)
+
+
+def matmul_cost(m: int, n: int, k: int, *, elem_bytes: int = 4,
+                packed_k_bytes: int | None = None) -> pl.CostEstimate:
+    """CostEstimate for a dense x packed-ternary matmul: FLOPs from the MXU
+    contraction, bytes from x + the 2-bit planes + the f32 output."""
+    plane_bytes = (packed_k_bytes if packed_k_bytes is not None
+                   else 2 * (k * n // 8))          # two planes, 1 bit each
+    return pl.CostEstimate(
+        flops=2 * m * n * k,
+        bytes_accessed=m * k * elem_bytes + plane_bytes + m * n * 4,
+        transcendentals=0,
+    )
+
+
+def streaming_cost(n_elems: int, *, in_bytes_per_elem: float,
+                   out_bytes_per_elem: float) -> pl.CostEstimate:
+    """CostEstimate for a bandwidth-bound streaming kernel (pack/unpack)."""
+    return pl.CostEstimate(
+        flops=4 * n_elems,   # compare/shift/mask per element, roughly
+        bytes_accessed=int(n_elems * (in_bytes_per_elem + out_bytes_per_elem)),
+        transcendentals=0,
+    )

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tpu_params import streaming_cost, tpu_compiler_params
+
 LANE = 32
 
 
@@ -59,6 +61,12 @@ def unpack_add(base: jax.Array, pos: jax.Array, neg: jax.Array,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), base.dtype),
+        compiler_params=tpu_compiler_params(("parallel", "parallel"),
+                                            interpret=interpret),
+        cost_estimate=streaming_cost(
+            Mp * Np,
+            in_bytes_per_elem=base.dtype.itemsize + 0.25,
+            out_bytes_per_elem=float(base.dtype.itemsize)),
         interpret=interpret,
     )(base, pos, neg, scale.reshape(1, 1).astype(jnp.float32))
     return out[:M, :N]

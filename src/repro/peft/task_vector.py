@@ -10,8 +10,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import (CompressionConfig, compress, decompress, pack_tree,
-                        tree_packed_bytes, unpack_tree)
+from repro.core import (CompressionConfig, compress, compress_packed,
+                        decompress, pack_tree, tree_packed_bytes, unpack_tree)
 
 PyTree = Any
 
@@ -55,11 +55,26 @@ class ExpertArtifact:
 
 
 def compress_expert(name: str, kind: str, tau: PyTree, density: float,
-                    alpha: float, per_tensor: bool = True) -> ExpertArtifact:
-    comp = compress(tau, CompressionConfig(density=density, alpha=alpha,
-                                           per_tensor=per_tensor))
-    return ExpertArtifact(name=name, kind=kind, packed=pack_tree(comp),
-                          density=density, alpha=alpha)
+                    alpha: float, per_tensor: bool = True,
+                    method: str = "streaming") -> ExpertArtifact:
+    """Compress a task vector into the packed serving artifact.
+
+    ``method='streaming'`` (default) runs the single-pass histogram-quantile
+    + batched-pack pipeline and never materialises dense int8 signs;
+    ``method='exact'`` is the seed sort-based per-leaf path, kept as the
+    numerics oracle.
+    """
+    cfg = CompressionConfig(density=density, alpha=alpha,
+                            per_tensor=per_tensor)
+    if method == "streaming":
+        packed = compress_packed(tau, cfg)
+    elif method == "exact":
+        packed = pack_tree(compress(tau, cfg))
+    else:
+        raise ValueError(f"unknown compression method {method!r}")
+    return ExpertArtifact(name=name, kind=kind, packed=packed,
+                          density=density, alpha=alpha,
+                          meta={"method": method})
 
 
 def reconstruct_expert(theta_init: PyTree, artifact: ExpertArtifact,

@@ -15,11 +15,9 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.model import ModelApi
 from repro.models.transformer import Runtime
-from repro.peft.task_vector import apply_task_vector
 from repro.serve.expert_cache import DeviceCache, ExpertStore
 
 PyTree = Any
@@ -66,26 +64,29 @@ class ServeEngine:
         if self._merged_name == expert:
             return self._merged_params
         t0 = time.perf_counter()
-        tau_flat = self.cache.fetch(expert)     # {path: delta} dict tree
-        params = self._apply_delta(tau_flat)
+        packed = self.cache.fetch(expert)    # {path: PackedTernary} tree
+        params = self._apply_packed(packed)
         self._merged_name = expert
         self._merged_params = params
         self.swap_log.append({"expert": expert,
                               "seconds": time.perf_counter() - t0})
         return params
 
-    def _apply_delta(self, tau_pathdict) -> PyTree:
-        """Merge a {path: dense delta} dict into a copy of base params."""
+    def _apply_packed(self, packed_pathdict) -> PyTree:
+        """Merge a {path: PackedTernary} dict into a copy of base params.
+
+        One fused unpack_add pass per leaf, straight from the 2-bit planes
+        the DeviceCache keeps resident — the dense delta is never
+        materialised (the seed's {path: dense} round-trip is gone).
+        """
+        from repro.kernels.ops import apply_ternary_delta_flat
         from repro.peft.lora import _path_str
         flat, treedef = jax.tree_util.tree_flatten_with_path(self.base)
         out = []
         for path, leaf in flat:
-            ps = _path_str(path)
-            if ps in tau_pathdict:
-                d = jnp.asarray(tau_pathdict[ps]).reshape(leaf.shape)
-                out.append((leaf.astype(jnp.float32) + d).astype(leaf.dtype))
-            else:
-                out.append(leaf)
+            pt = packed_pathdict.get(_path_str(path))
+            out.append(leaf if pt is None
+                       else apply_ternary_delta_flat(leaf, pt))
         return jax.tree_util.tree_unflatten(treedef, out)
 
     # ---------------- serving loop ----------------

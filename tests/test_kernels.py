@@ -6,8 +6,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # optional dev dep; fall back to a seed sweep
+    HAVE_HYPOTHESIS = False
 
 from repro.core import CompressionConfig, compress, pack_ternary
 from repro.core.compeft import CompressedTensor
@@ -110,9 +115,7 @@ def test_pack_then_matmul_roundtrip():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 8))
-def test_popcount_dot_property(seed):
+def _popcount_dot_property(seed):
     rng = np.random.default_rng(seed)
     W = int(rng.integers(1, 40))
     ap, an = rand_planes(seed, 1, W * LANE)
@@ -122,6 +125,17 @@ def test_popcount_dot_property(seed):
     want = ref.popcount_dot_ref(ap.reshape(-1), an.reshape(-1),
                                 bp.reshape(-1), bn.reshape(-1))
     assert int(got) == int(want)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 8))
+    def test_popcount_dot_property(seed):
+        _popcount_dot_property(seed)
+else:
+    @pytest.mark.parametrize("seed", range(1, 9))
+    def test_popcount_dot_property(seed):
+        _popcount_dot_property(seed)
 
 
 def test_ops_integration_with_compressed_tensor():

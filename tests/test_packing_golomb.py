@@ -5,8 +5,13 @@ exact inverses for arbitrary ternary vectors)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # optional dev dep; fall back to seed sweeps
+    HAVE_HYPOTHESIS = False
 
 from repro.core import golomb_total_bits  # noqa: F401 (public API check)
 from repro.core import (entropy_bits, pack_bits, pack_ternary, unpack_bits,
@@ -38,10 +43,7 @@ def test_pack_ternary_roundtrip():
     assert pt.packed_bytes == 2 * ((40 * 17 + 31) // 32) * 4 + 4
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.sampled_from([-1, 0, 1]), min_size=1, max_size=400),
-       st.floats(min_value=1e-6, max_value=10.0, allow_nan=False))
-def test_golomb_roundtrip_property(signs, scale):
+def _golomb_roundtrip_property(signs, scale):
     arr = np.array(signs, dtype=np.int8)
     blob = encode(arr, scale)
     back, s = decode(blob)
@@ -49,13 +51,34 @@ def test_golomb_roundtrip_property(signs, scale):
     assert s == pytest.approx(scale, rel=1e-6)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(min_value=1, max_value=512))
-def test_pack_bits_property(n):
+def _pack_bits_property(n):
     rng = np.random.default_rng(n)
     mask = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
     np.testing.assert_array_equal(
         np.array(unpack_bits(pack_bits(mask), n)), np.array(mask))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.sampled_from([-1, 0, 1]), min_size=1, max_size=400),
+           st.floats(min_value=1e-6, max_value=10.0, allow_nan=False))
+    def test_golomb_roundtrip_property(signs, scale):
+        _golomb_roundtrip_property(signs, scale)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=1, max_value=512))
+    def test_pack_bits_property(n):
+        _pack_bits_property(n)
+else:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_golomb_roundtrip_property(seed):
+        rng = np.random.default_rng(seed)
+        signs = rng.integers(-1, 2, int(rng.integers(1, 400))).tolist()
+        _golomb_roundtrip_property(signs, float(rng.uniform(1e-6, 10.0)))
+
+    @pytest.mark.parametrize("n", [1, 31, 32, 33, 100, 511, 512])
+    def test_pack_bits_property(n):
+        _pack_bits_property(n)
 
 
 def test_entropy_formula_paper_value():
