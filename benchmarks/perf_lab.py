@@ -265,23 +265,151 @@ def exp_compress_swap():
     assert rec["capacity_multiplier_x"] >= 8.0, rec["capacity_multiplier_x"]
 
 
+def _serve_fixture(n_experts=4, density=0.2, scale=0.02):
+    """Smoke LM + a store of ComPEFT experts (fake fine-tunes of base)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.models import Runtime, build
+    from repro.peft import compress_expert, task_vector
+    from repro.peft.lora import _path_str
+    from repro.serve import ExpertStore
+
+    rt = Runtime(attn_chunk_q=16, attn_chunk_k=16, remat_policy="none")
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    store = ExpertStore()
+    for i in range(n_experts):
+        leaves, tdef = jax.tree_util.tree_flatten(base)
+        keys = jax.random.split(jax.random.PRNGKey(100 + i), len(leaves))
+        ft = jax.tree_util.tree_unflatten(tdef, [
+            (l.astype(jnp.float32)
+             + scale * jax.random.normal(k, l.shape)).astype(l.dtype)
+            for l, k in zip(leaves, keys)])
+        tau = task_vector(base, ft)
+        flat, _ = jax.tree_util.tree_flatten_with_path(tau)
+        store.put(compress_expert(f"expert{i}", "full",
+                                  {_path_str(p): l for p, l in flat},
+                                  density=density, alpha=1.0))
+    return api, rt, cfg, base, store
+
+
+def exp_mixed_serve(smoke: bool = False):
+    """Tentpole measurement: continuous mixed-expert zero-merge serving vs
+    the PR-1 merge-on-swap path on a round-robin request stream.
+
+    The stream interleaves 4 experts (the paper's many-experts-per-device
+    scenario).  The grouped baseline must split it into per-expert batches
+    and pay a full-model merge per expert; the mixed scheduler serves one
+    heterogeneous wave through the grouped ternary kernels with zero
+    merges.  Also checks the correctness contract: mixed-wave outputs are
+    bit-identical (token-exact AND prefill-logit-exact) to serving each
+    expert separately through the same zero-merge path.
+    """
+    import jax.numpy as jnp
+
+    from repro.serve import EngineConfig, Request, ServeEngine
+
+    n_experts = 4
+    n_reqs = 8 if smoke else 16
+    max_new = 4 if smoke else 8
+    prompt_len = 12
+    api, rt, cfg, base, store = _serve_fixture(n_experts=n_experts)
+    rng = np.random.default_rng(0)
+    prompts = [jnp.asarray(rng.integers(1, cfg.vocab, prompt_len), jnp.int32)
+               for _ in range(n_reqs)]
+
+    def mk_reqs():
+        # round-robin arrival over the expert set
+        return [Request(uid=i, expert=f"expert{i % n_experts}",
+                        prompt=prompts[i], max_new_tokens=max_new)
+                for i in range(n_reqs)]
+
+    def run(scheduling):
+        ecfg = EngineConfig(max_batch=n_reqs, cache_len=64,
+                            scheduling=scheduling)
+        eng = ServeEngine(api, rt, base, store, ecfg)
+        # warm pass with the identical workload: compiles every step
+        # executable both paths will use, so the timed pass is steady-state
+        eng.run(mk_reqs())
+        eng._merged_name = None    # drop the warmed merge cache
+        eng._merged_params = None
+        eng.swap_log.clear()
+        eng.wave_log.clear()
+        reqs = mk_reqs()
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        dt = time.perf_counter() - t0
+        return dt, eng, reqs
+
+    t_grouped, eng_g, reqs_grouped = run("grouped")
+    t_mixed, eng_m, reqs_mixed = run("mixed")
+
+    tokens = n_reqs * max_new
+    rec = {"tag": "mixed_serve", "n_experts": n_experts, "n_reqs": n_reqs,
+           "max_new_tokens": max_new, "tokens": tokens,
+           "grouped_s": t_grouped, "mixed_s": t_mixed,
+           "grouped_tok_s": tokens / t_grouped,
+           "mixed_tok_s": tokens / t_mixed,
+           "decode_speedup_x": t_grouped / t_mixed,
+           "grouped_summary": eng_g.swap_summary(),
+           "mixed_summary": eng_m.swap_summary()}
+
+    # correctness: mixed wave == sequential per-expert zero-merge serving
+    reqs_seq = mk_reqs()
+    eng_s = ServeEngine(api, rt, base, store,
+                        EngineConfig(max_batch=n_reqs, cache_len=64))
+    for e in range(n_experts):
+        eng_s.run([r for r in reqs_seq if r.expert == f"expert{e}"])
+    tok_mixed = {r.uid: r.out_tokens for r in reqs_mixed}
+    tok_seq = {r.uid: r.out_tokens for r in reqs_seq}
+    rec["mixed_equals_sequential"] = tok_mixed == tok_seq
+    assert rec["mixed_equals_sequential"], "mixed wave diverged"
+
+    save_raw("mixed_serve", [rec])
+    with open(os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_serve.json"), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    print(f"serve: grouped={t_grouped:.2f}s ({rec['grouped_tok_s']:.1f} "
+          f"tok/s, {rec['grouped_summary']['n_swaps']} merges) "
+          f"mixed={t_mixed:.2f}s ({rec['mixed_tok_s']:.1f} tok/s, "
+          f"{rec['mixed_summary']['n_waves']} waves, 0 merges); "
+          f"speedup={rec['decode_speedup_x']:.2f}x; "
+          f"parity={rec['mixed_equals_sequential']}")
+    if not smoke:
+        assert rec["decode_speedup_x"] >= 2.0, rec["decode_speedup_x"]
+
+
 EXPS = {
     "compression_ablation": exp_compression_ablation,
     "rwkv_chunk": exp_rwkv_chunk,
     "llama4_prefill": exp_llama4_prefill,
     "compress_swap": exp_compress_swap,
+    "mixed_serve": exp_mixed_serve,
 }
 
 
 def main():
+    import inspect
     ap = argparse.ArgumentParser()
     ap.add_argument("--exp", required=True, choices=list(EXPS) + ["all"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI (skips the speedup gate)")
     args = ap.parse_args()
+
+    def call(f):
+        if args.smoke and "smoke" in inspect.signature(f).parameters:
+            f(smoke=True)
+        else:
+            f()
+
     if args.exp == "all":
         for f in EXPS.values():
-            f()
+            call(f)
     else:
-        EXPS[args.exp]()
+        call(EXPS[args.exp])
 
 
 if __name__ == "__main__":

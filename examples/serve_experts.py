@@ -76,7 +76,8 @@ def main():
     print("swap stats:", {k: v for k, v in s.items()
                           if k in ('hits', 'misses', 'promotions',
                                    'store_to_host_bytes',
-                                   'host_to_device_bytes', 'n_swaps')})
+                                   'host_to_device_bytes', 'n_swaps',
+                                   'n_waves', 'admitted', 'stack_builds')})
     dense_equiv = uncompressed_baseline_bytes(store.get("expert0")) * 2
     print(f"wire bytes per miss: {dense_equiv:,} dense f32 baseline vs "
           f"{s['store_to_host_bytes'] // max(s['misses'],1):,} compressed "

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import golomb
-from repro.core.compeft import CompressionConfig, compress
+from repro.core.compeft import CompressionConfig, compress_packed
 from repro.peft.lora import _path_str
 
 PyTree = Any
@@ -123,26 +123,32 @@ def export_expert(theta_init: PyTree, theta_ft: PyTree, out_path: str,
                   density: float = 0.05, alpha: float = 1.0) -> dict:
     """Compress theta_ft - theta_init with Algorithm 1 and write a Golomb
     stream per leaf.  Returns size accounting.  This IS the paper: the
-    artifact shipped between store/CPU/accelerator tiers."""
+    artifact shipped between store/CPU/accelerator tiers.
+
+    Compression runs through ``compress_packed`` — the single-pass
+    streaming pipeline (histogram-quantile thresholds + one batched pack
+    launch over every leaf) — so dense int8 signs exist only transiently on
+    the host, per leaf, on the way into the vectorized Golomb encoder.
+    """
+    from repro.core.packing import signs_np
     from repro.peft.task_vector import task_vector
     tau = task_vector(theta_init, theta_ft)
-    comp = compress(tau, CompressionConfig(density=density, alpha=alpha))
+    packed = compress_packed(tau, CompressionConfig(density=density,
+                                                    alpha=alpha))
     flat, _ = jax.tree_util.tree_flatten_with_path(
-        comp, is_leaf=lambda x: hasattr(x, "signs"))
+        packed, is_leaf=lambda x: hasattr(x, "pos"))
     blobs = {}
     manifest = {"density": density, "alpha": alpha, "leaves": []}
     dense_bytes = 0
-    for i, (p, ct) in enumerate(flat):
+    for i, (p, pt) in enumerate(flat):
         ps = _path_str(p)
-        signs = np.asarray(jax.device_get(ct.signs))
-        blob = golomb.encode(signs, float(ct.scale))
+        blob = golomb.encode(signs_np(pt), float(pt.scale))
         key = f"e{i}_{_san(ps)[:80]}"
         blobs[key] = np.frombuffer(blob, np.uint8)
         manifest["leaves"].append({"path": ps, "key": key,
-                                   "shape": list(signs.shape),
-                                   "dtype": str(np.asarray(
-                                       jax.device_get(ct.decompress())).dtype)})
-        dense_bytes += signs.size * 2  # bf16 baseline
+                                   "shape": list(pt.shape),
+                                   "dtype": str(jnp.dtype(pt.orig_dtype))})
+        dense_bytes += pt.n_elements * 2  # bf16 baseline
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     np.savez(out_path, manifest=json.dumps(manifest), **blobs)
     comp_bytes = sum(b.nbytes for b in blobs.values())

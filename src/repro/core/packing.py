@@ -152,3 +152,55 @@ def tree_packed_bytes(packed: Any) -> int:
     leaves = jax.tree_util.tree_leaves(
         packed, is_leaf=lambda x: isinstance(x, PackedTernary))
     return sum(l.packed_bytes for l in leaves)
+
+
+def signs_np(pt: PackedTernary) -> np.ndarray:
+    """Host int8 {-1,0,1} signs of a PackedTernary, flat C-order.
+
+    Pure numpy bit unpack (no jax dispatch) — the bridge from the packed
+    device format to host-side codecs (Golomb export) and inspection.
+    """
+    n = pt.n_elements
+    pos = np.asarray(jax.device_get(pt.pos)).view(np.uint8)
+    neg = np.asarray(jax.device_get(pt.neg)).view(np.uint8)
+    pb = np.unpackbits(pos, bitorder="little")[:n]
+    nb = np.unpackbits(neg, bitorder="little")[:n]
+    return pb.astype(np.int8) - nb.astype(np.int8)
+
+
+def stack_packed(experts: list[dict]) -> dict:
+    """Stack E experts' {path: PackedTernary} dicts into per-path buffers.
+
+    Returns {path: (pos [E, W], neg [E, W], scales [E], shape)} — the
+    device-resident form the batched serving kernels consume (one stacked
+    buffer per leaf instead of E scattered plane pairs).  Experts missing a
+    path contribute an all-zero plane pair with scale 0, so ragged expert
+    leaf-sets stack fine.
+    """
+    paths: dict[str, tuple] = {}
+    for ex in experts:
+        for path, pt in ex.items():
+            paths.setdefault(path, (pt.pos.size, tuple(pt.shape)))
+    stacks = {}
+    for path, (n_words, shape) in paths.items():
+        pos, neg, scales = [], [], []
+        for ex in experts:
+            pt = ex.get(path)
+            if pt is None:
+                z = jnp.zeros((n_words,), jnp.uint32)
+                pos.append(z)
+                neg.append(z)
+                scales.append(jnp.zeros((), jnp.float32))
+            else:
+                assert tuple(pt.shape) == shape, (path, pt.shape, shape)
+                pos.append(pt.pos.reshape(-1))
+                neg.append(pt.neg.reshape(-1))
+                scales.append(pt.scale.astype(jnp.float32))
+        stacks[path] = (jnp.stack(pos), jnp.stack(neg), jnp.stack(scales),
+                        shape)
+    return stacks
+
+
+def stacked_bytes(stacks: dict) -> int:
+    return sum(int(p.size + n.size) * 4 + 4 * int(s.size)
+               for p, n, s, _ in stacks.values())

@@ -1,6 +1,8 @@
 """Public jit'd entry points for the Pallas kernels, with automatic
-interpret-mode selection (interpret=True off-TPU so CI validates kernel
-bodies on CPU; compiled pallas on real TPUs)."""
+interpret-mode selection.  Off-TPU the bandwidth-bound serving ops route to
+their vectorised jnp mirrors (same math, no interpreter tax — the PR-1
+convention established by ``compress_packed``); on real TPUs they compile
+the Pallas kernels.  Interpret-mode Pallas stays test-only."""
 
 from __future__ import annotations
 
@@ -9,12 +11,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.packing import PackedTernary
+from repro.kernels import ref
 from repro.kernels.pack import pack_ternary_planes
 from repro.kernels.popcount_dot import popcount_dot
-from repro.kernels.ternary_matmul import ternary_matmul
-from repro.kernels.unpack_add import unpack_add
+from repro.kernels.ternary_matmul import ternary_matmul, ternary_matmul_grouped
+from repro.kernels.unpack_add import unpack_add, unpack_add_many
 
 INTERPRET = jax.default_backend() != "tpu"
+
+_unpack_add_ref = jax.jit(ref.unpack_add_ref)
+_unpack_add_many_ref = jax.jit(ref.unpack_add_many_ref)
+_ternary_matmul_ref = jax.jit(ref.ternary_matmul_ref)
+_grouped_ref = jax.jit(ref.ternary_matmul_grouped_ref,
+                       static_argnames=("transpose_rhs", "n_out"))
+
+
+def _fused_unpack_add(base, pos, neg, scale):
+    if INTERPRET:
+        return _unpack_add_ref(base, pos, neg, scale)
+    return unpack_add(base, pos, neg, scale, interpret=False)
+
+
+def _fused_unpack_add_many(base, pos, neg, scales):
+    if INTERPRET:
+        return _unpack_add_many_ref(base, pos, neg, scales)
+    return unpack_add_many(base, pos, neg, scales, interpret=False)
 
 
 def apply_ternary_delta(base: jax.Array, pt: PackedTernary) -> jax.Array:
@@ -22,10 +43,27 @@ def apply_ternary_delta(base: jax.Array, pt: PackedTernary) -> jax.Array:
     M, N = base.shape
     pos = pt.pos.reshape(M, -1)
     neg = pt.neg.reshape(M, -1)
-    return unpack_add(base, pos, neg, pt.scale, interpret=INTERPRET)
+    return _fused_unpack_add(base, pos, neg, pt.scale)
 
 
 MERGE_COLS = 4096  # flat-view row width for rank-agnostic merges (128 words)
+
+
+def _flat_rows(base: jax.Array):
+    """Padded [R, cols] flat view geometry for a leaf of any rank."""
+    LANE = 32
+    n = int(np.prod(base.shape))
+    cols = min(MERGE_COLS, ((n + LANE - 1) // LANE) * LANE)
+    rows = -(-n // cols)
+    return n, rows, cols
+
+
+def _pad_flat(arr, count, dtype=None):
+    flat = arr.reshape(-1)
+    if count:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((count,), dtype or flat.dtype)])
+    return flat
 
 
 def apply_ternary_delta_flat(base: jax.Array, pt: PackedTernary) -> jax.Array:
@@ -34,30 +72,46 @@ def apply_ternary_delta_flat(base: jax.Array, pt: PackedTernary) -> jax.Array:
     The planes are bit-packed over the *flattened* C-order tensor, so the
     merge views both operands as a padded [R, MERGE_COLS] buffer (row width
     a multiple of the 32-bit lane keeps word alignment) and runs the same
-    bandwidth-bound unpack_add kernel.  This is the packed-resident swap
+    bandwidth-bound unpack_add math.  This is the packed-resident swap
     path: HBM traffic is base + 2 bits/param, no dense delta is ever
     materialised.
     """
     LANE = 32
-    n = int(np.prod(base.shape))
+    n, rows, cols = _flat_rows(base)
     nw = -(-n // LANE)
-    cols = min(MERGE_COLS, ((n + LANE - 1) // LANE) * LANE)
-    rows = -(-n // cols)
-    flat = base.reshape(-1)
-    pad = rows * cols - n
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), base.dtype)])
+    flat = _pad_flat(base, rows * cols - n)
     wpad = rows * (cols // LANE) - nw
-    pos = jnp.concatenate([pt.pos.reshape(-1),
-                           jnp.zeros((wpad,), jnp.uint32)]) if wpad else \
-        pt.pos.reshape(-1)
-    neg = jnp.concatenate([pt.neg.reshape(-1),
-                           jnp.zeros((wpad,), jnp.uint32)]) if wpad else \
-        pt.neg.reshape(-1)
-    out = unpack_add(flat.reshape(rows, cols),
-                     pos.reshape(rows, cols // LANE),
-                     neg.reshape(rows, cols // LANE),
-                     pt.scale, interpret=INTERPRET)
+    pos = _pad_flat(pt.pos, wpad, jnp.uint32)
+    neg = _pad_flat(pt.neg, wpad, jnp.uint32)
+    out = _fused_unpack_add(flat.reshape(rows, cols),
+                            pos.reshape(rows, cols // LANE),
+                            neg.reshape(rows, cols // LANE), pt.scale)
+    return out.reshape(-1)[:n].reshape(base.shape)
+
+
+def apply_ternary_delta_many_flat(base: jax.Array, pts, weights=None
+                                  ) -> jax.Array:
+    """Fused multi-expert merge of one leaf: base + sum_e w_e*scale_e*Δ_e.
+
+    ``pts`` is a sequence of PackedTernary over the same leaf shape;
+    ``weights`` (optional, len E) are the merged-ensemble mixing
+    coefficients α_e.  One sweep over base instead of E round-trips —
+    bit-identical to looping :func:`apply_ternary_delta_flat` with the
+    scaled deltas.
+    """
+    LANE = 32
+    n, rows, cols = _flat_rows(base)
+    nw = -(-n // LANE)
+    wpad = rows * (cols // LANE) - nw
+    flat = _pad_flat(base, rows * cols - n)
+    pos = jnp.stack([_pad_flat(pt.pos, wpad, jnp.uint32)
+                     .reshape(rows, cols // LANE) for pt in pts])
+    neg = jnp.stack([_pad_flat(pt.neg, wpad, jnp.uint32)
+                     .reshape(rows, cols // LANE) for pt in pts])
+    scales = jnp.stack([pt.scale.astype(jnp.float32) for pt in pts])
+    if weights is not None:
+        scales = scales * jnp.asarray(weights, jnp.float32)
+    out = _fused_unpack_add_many(flat.reshape(rows, cols), pos, neg, scales)
     return out.reshape(-1)[:n].reshape(base.shape)
 
 
@@ -68,8 +122,31 @@ def ternary_matvec(x: jax.Array, pt: PackedTernary) -> jax.Array:
     neg = pt.neg.reshape(K, -1)
     squeeze = x.ndim == 1
     x2 = x[None] if squeeze else x
-    y = ternary_matmul(x2, pos, neg, pt.scale, interpret=INTERPRET)[:, :N]
+    if INTERPRET:
+        y = _ternary_matmul_ref(x2, pos, neg, pt.scale)[:, :N]
+    else:
+        y = ternary_matmul(x2, pos, neg, pt.scale, interpret=False)[:, :N]
     return y[0] if squeeze else y
+
+
+def grouped_delta_matmul(x: jax.Array, pos: jax.Array, neg: jax.Array,
+                         scales: jax.Array, expert_idx: jax.Array, *,
+                         transpose_rhs: bool = False,
+                         n_out: int | None = None) -> jax.Array:
+    """Zero-merge hot path: per-row-expert delta contraction.
+
+    x: [M, K]; pos/neg: stacked [E, K, N//32] ([E, N, ceil(K/32)] when
+    ``transpose_rhs``); scales [E]; expert_idx [M] int32 (-1 → zero delta).
+    Returns the f32 delta [M, N] to add onto ``x @ W_base``.
+    """
+    if INTERPRET:
+        y = _grouped_ref(x, pos, neg, scales, expert_idx,
+                         transpose_rhs=transpose_rhs)
+    else:
+        y = ternary_matmul_grouped(x, pos, neg, scales, expert_idx,
+                                   transpose_rhs=transpose_rhs,
+                                   interpret=False)
+    return y if n_out is None else y[:, :n_out]
 
 
 def compress_to_planes(tau: jax.Array, thr: jax.Array):

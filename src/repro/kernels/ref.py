@@ -47,6 +47,47 @@ def pack_ternary_planes_ref(tau, thr):
     return pos, neg
 
 
+def unpack_add_many_ref(base, pos, neg, scales):
+    """Loop of unpack_add_ref — the bit-exact oracle for the fused
+    multi-expert merge (round-trips through base.dtype per expert)."""
+    out = base
+    for e in range(pos.shape[0]):
+        out = unpack_add_ref(out, pos[e], neg[e], scales[e])
+    return out
+
+
+def ternary_matmul_grouped_ref(x, pos, neg, scales, expert_idx,
+                               transpose_rhs: bool = False, n_out=None):
+    """Per-row-expert delta: y[m] = scales[e(m)] * (x[m] @ T_{e(m)}).
+
+    pos/neg: [E, K, N//32] ([E, N, ceil(K/32)] when ``transpose_rhs``).
+    Rows with expert_idx == -1 get a zero delta.  Mirrors the grouped
+    kernel's accumulation order (per-expert masked matmuls, scale last) so
+    mixed-batch rows are bitwise what a single-expert run produces.
+    """
+    E = pos.shape[0]
+    x32 = x.astype(jnp.float32)
+    M, K = x32.shape
+    if transpose_rhs:
+        N = pos.shape[1]
+        n_dense = K
+    else:
+        N = pos.shape[2] * LANE if n_out is None else n_out
+        n_dense = pos.shape[2] * LANE
+    acc = jnp.zeros((M, N), jnp.float32)
+    eid = expert_idx.astype(jnp.int32)[:, None]
+    for e in range(E):
+        w = dense_of_planes(pos[e], neg[e], n_dense)
+        if transpose_rhs:
+            w = w.T                                   # [K, N]
+        sel = (eid == e).astype(jnp.float32)
+        acc += jnp.dot(x32 * sel, w[:, :N])
+    srow = jnp.zeros((M, 1), jnp.float32)
+    for e in range(E):
+        srow += jnp.where(eid == e, scales[e].astype(jnp.float32), 0.0)
+    return acc * srow
+
+
 def popcount_dot_ref(a_pos, a_neg, b_pos, b_neg):
     n = a_pos.shape[0] * LANE
     a = dense_of_planes(a_pos[None], a_neg[None], n)[0]

@@ -1,15 +1,31 @@
-"""Pallas TPU kernel: dense × packed-ternary matmul.
+"""Pallas TPU kernels: dense × packed-ternary matmul.
+
+Single-expert form:
 
     y[M, N] = scale * ( x[M, K] @ (pos - neg)[K, N] )
 
 with the ternary matrix stored as two uint32 bitplanes packed along the
 *output* dim (C-order of a [K, N] weight): planes have shape [K, N//32].
 
+Grouped (per-row-expert) form — the zero-merge serving hot path:
+
+    y[m, :] = scale[e(m)] * ( x[m, :] @ T_{e(m)} )
+
+with E experts' planes stacked as [E, K, N//32] and a per-row ``expert_idx``
+vector.  One launch contracts a decode batch that mixes experts against all
+resident ternary deltas; the caller adds ``x @ W_base`` (the base weights
+are never re-materialised per expert, and the experts are never merged).
+``transpose_rhs=True`` takes planes packed along the *contraction* dim
+([N, K//32], e.g. an embedding table reused as a tied LM head) and computes
+``x @ T^t`` without repacking.
+
 TPU adaptation of the paper's §2.2 "binary vector" computation: the ternary
 delta streams HBM→VMEM at 2 bits/param (16x less bandwidth than bf16), is
 unpacked to ±1 tiles in-register, and contracts on the MXU.  Decode-time
 expert application is memory-bound, so the bandwidth saving is the win;
-the unpack ALU work rides free under the matmul.
+the unpack ALU work rides free under the matmul.  In the grouped kernel the
+per-expert row masks cost E small VPU selects per tile; each expert's
+contribution still contracts on the MXU.
 
 Grid: (M/BM, N/BN, K/BK), K innermost for accumulation in the VMEM output
 block.  Block shapes keep the MXU dims at 128 multiples.
@@ -24,9 +40,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.kernels.tpu_params import matmul_cost, tpu_compiler_params
+from repro.kernels.tpu_params import (grouped_matmul_cost, lane_block,
+                                      matmul_cost, tpu_compiler_params)
 
 LANE = 32
+
+
+def _unpack_tile(pw, nw, dtype=jnp.int8):
+    """[BK, W] uint32 plane pair -> [BK, W*32] ±1 tile."""
+    shifts = jnp.arange(LANE, dtype=jnp.uint32)[None, None, :]
+    pb = ((pw[:, :, None] >> shifts) & jnp.uint32(1)).astype(dtype)
+    nb = ((nw[:, :, None] >> shifts) & jnp.uint32(1)).astype(dtype)
+    return (pb - nb).reshape(pw.shape[0], pw.shape[1] * LANE)
 
 
 def _kernel(x_ref, pos_ref, neg_ref, scale_ref, o_ref, *, n_k: int):
@@ -37,12 +62,7 @@ def _kernel(x_ref, pos_ref, neg_ref, scale_ref, o_ref, *, n_k: int):
         o_ref[...] = jnp.zeros_like(o_ref)
 
     xb = x_ref[...]                                   # [BM, BK]
-    pw = pos_ref[...]                                 # [BK, BN//32] uint32
-    nw = neg_ref[...]
-    shifts = jnp.arange(LANE, dtype=jnp.uint32)[None, None, :]
-    pb = ((pw[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.int8)
-    nb = ((nw[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.int8)
-    w = (pb - nb).reshape(pw.shape[0], pw.shape[1] * LANE)  # [BK, BN]
+    w = _unpack_tile(pos_ref[...], neg_ref[...])      # [BK, BN]
     acc = jnp.dot(xb.astype(jnp.float32), w.astype(jnp.float32),
                   preferred_element_type=jnp.float32)
     o_ref[...] += acc
@@ -65,8 +85,7 @@ def ternary_matmul(x: jax.Array, pos: jax.Array, neg: jax.Array,
 
     bm = min(bm, M)
     bk = min(bk, K)
-    bn = min(bn, N)
-    assert bn % LANE == 0
+    bn = lane_block(bn, N)
     pad_m, pad_k, pad_n = (-M) % bm, (-K) % bk, (-N) % bn
     if pad_m or pad_k:
         x = jnp.pad(x, ((0, pad_m), (0, pad_k)))
@@ -95,4 +114,111 @@ def ternary_matmul(x: jax.Array, pos: jax.Array, neg: jax.Array,
                                   elem_bytes=x.dtype.itemsize),
         interpret=interpret,
     )(x, pos, neg, scale.reshape(1, 1).astype(jnp.float32))
+    return out[:M, :N]
+
+
+def _kernel_grouped(x_ref, pos_ref, neg_ref, scales_ref, eid_ref, o_ref, *,
+                    n_k: int, n_e: int, transpose_rhs: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xb = x_ref[...].astype(jnp.float32)               # [BM, BK]
+    eid = eid_ref[...]                                # [BM, 1] int32
+    acc = jnp.zeros_like(o_ref)
+    for e in range(n_e):                              # static unroll over E
+        w = _unpack_tile(pos_ref[e], neg_ref[e]).astype(jnp.float32)
+        if transpose_rhs:                             # w: [BN, BK] -> use w^t
+            w = w.T
+        sel = (eid == e).astype(jnp.float32)          # [BM, 1] row mask
+        acc += jnp.dot(xb * sel, w, preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+    @pl.when(k == n_k - 1)
+    def _scale():
+        eid_f = eid_ref[...]
+        srow = jnp.zeros_like(eid_f, dtype=jnp.float32)
+        for e in range(n_e):                          # per-row scale gather
+            srow += jnp.where(eid_f == e, scales_ref[e, 0], 0.0)
+        o_ref[...] *= srow
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                             "transpose_rhs"))
+def ternary_matmul_grouped(x: jax.Array, pos: jax.Array, neg: jax.Array,
+                           scales: jax.Array, expert_idx: jax.Array, *,
+                           transpose_rhs: bool = False, bm: int = 128,
+                           bn: int = 128, bk: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """Per-row-expert delta contraction over stacked planes, one launch.
+
+    x: [M, K] float; pos/neg: [E, K, N//32] uint32 ([E, N, K//32] when
+    ``transpose_rhs``); scales: [E] f32; expert_idx: [M] int32 in [0, E)
+    (-1 rows get a zero delta).  Returns [M, N] f32 with
+    ``y[m] = scales[expert_idx[m]] * (x[m] @ T_{expert_idx[m]})`` — row-wise
+    bit-identical to running :func:`ternary_matmul` per expert with the same
+    block shapes and selecting rows.
+    """
+    M, K = x.shape
+    E = pos.shape[0]
+    if transpose_rhs:
+        N, Wk = pos.shape[1], pos.shape[2]
+        assert Wk == -(-K // LANE), (pos.shape, K)
+    else:
+        Kp, Wn = pos.shape[1], pos.shape[2]
+        assert Kp == K, (pos.shape, K)
+        N = Wn * LANE
+    assert scales.shape == (E,), scales.shape
+    assert expert_idx.shape == (M,), (expert_idx.shape, M)
+
+    bm = min(bm, M)
+    bk = lane_block(bk, K) if transpose_rhs else min(bk, K)
+    bn = min(bn, N) if transpose_rhs else lane_block(bn, N)
+    pad_m, pad_k, pad_n = (-M) % bm, (-K) % bk, (-N) % bn
+    if pad_m or pad_k:
+        x = jnp.pad(x, ((0, pad_m), (0, pad_k)))
+    if pad_m:
+        expert_idx = jnp.pad(expert_idx, (0, pad_m), constant_values=-1)
+    if transpose_rhs:
+        pad_w = (K + pad_k) // LANE - pos.shape[2]
+        if pad_n or pad_w:
+            pos = jnp.pad(pos, ((0, 0), (0, pad_n), (0, pad_w)))
+            neg = jnp.pad(neg, ((0, 0), (0, pad_n), (0, pad_w)))
+    else:
+        if pad_k or pad_n:
+            pos = jnp.pad(pos, ((0, 0), (0, pad_k), (0, pad_n // LANE)))
+            neg = jnp.pad(neg, ((0, 0), (0, pad_k), (0, pad_n // LANE)))
+    Mp, Kpd, Np = M + pad_m, K + pad_k, N + pad_n
+    n_k = Kpd // bk
+
+    if transpose_rhs:
+        plane_block = (E, bn, bk // LANE)
+        plane_map = lambda i, j, k: (0, j, k)  # noqa: E731
+    else:
+        plane_block = (E, bk, bn // LANE)
+        plane_map = lambda i, j, k: (0, k, j)  # noqa: E731
+
+    grid = (Mp // bm, Np // bn, n_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel_grouped, n_k=n_k, n_e=E,
+                          transpose_rhs=transpose_rhs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec(plane_block, plane_map),
+            pl.BlockSpec(plane_block, plane_map),
+            pl.BlockSpec((E, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary"), interpret=interpret),
+        cost_estimate=grouped_matmul_cost(Mp, Np, Kpd, E,
+                                          elem_bytes=x.dtype.itemsize),
+        interpret=interpret,
+    )(x, pos, neg, scales.reshape(-1, 1).astype(jnp.float32),
+      expert_idx.reshape(-1, 1).astype(jnp.int32))
     return out[:M, :N]

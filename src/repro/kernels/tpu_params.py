@@ -11,6 +11,19 @@ from __future__ import annotations
 
 from jax.experimental import pallas as pl
 
+LANE = 32   # uint32 bit lanes (TPU VPU native word)
+
+
+def lane_block(b: int, n: int) -> int:
+    """Clamp a block width to [LANE, ~n] while keeping it a LANE multiple.
+
+    ``min(b, n)`` alone breaks the ``% LANE`` contract whenever n (or the
+    caller's b) is not a multiple of 32 — the small-shape bug; the floor at
+    one lane keeps tiny-N inputs legal (they pad up to one word).  Shared
+    by every kernel that tiles a packed-plane dimension.
+    """
+    return max(LANE, (min(b, n) // LANE) * LANE)
+
 
 def tpu_compiler_params(dimension_semantics: tuple[str, ...], *,
                         interpret: bool = False):
@@ -40,5 +53,22 @@ def streaming_cost(n_elems: int, *, in_bytes_per_elem: float,
     return pl.CostEstimate(
         flops=4 * n_elems,   # compare/shift/mask per element, roughly
         bytes_accessed=int(n_elems * (in_bytes_per_elem + out_bytes_per_elem)),
+        transcendentals=0,
+    )
+
+
+def grouped_matmul_cost(m: int, n: int, k: int, n_experts: int, *,
+                        elem_bytes: int = 4) -> pl.CostEstimate:
+    """CostEstimate for the per-row-expert grouped ternary matmul.
+
+    Each of the E stacked experts contracts a row-masked copy of x on the
+    MXU (E full matmuls of FLOPs), but the bytes are x once + E sets of
+    2-bit planes + the f32 output — the kernel stays bandwidth-cheap even
+    though the masked-contraction FLOPs scale with E.
+    """
+    plane_bytes = n_experts * 2 * (k * n // 8)      # two planes, 1 bit each
+    return pl.CostEstimate(
+        flops=2 * m * n * k * max(n_experts, 1),
+        bytes_accessed=m * k * elem_bytes + plane_bytes + m * n * 4,
         transcendentals=0,
     )

@@ -1,11 +1,21 @@
-"""Pallas TPU kernel: fused ternary decompress + add (expert loading).
+"""Pallas TPU kernels: fused ternary decompress + add (expert loading).
+
+Single-expert form (the PR-1 swap fast path):
 
     W_out[M, N] = W_base[M, N] + scale * (pos - neg)[M, N]
 
-planes packed along the last dim: [M, N//32] uint32.  One pass over the
-base weight: HBM traffic is  base(2B) + 2bits  per param instead of the
-naive  base(2B) + dense-delta(2B) + write(2B)  of materialise-then-add —
-this is the swap-latency fast path of the paper's Table 5 on TPU.
+Multi-expert form (``unpack_add_many`` — merged-ensemble mode):
+
+    W_out[M, N] = W_base[M, N] + sum_e scale[e] * (pos_e - neg_e)[M, N]
+
+planes packed along the last dim: [M, ceil(N/32)] uint32 (bits >= N in the
+last word must be zero — that is what the pack kernels emit).  One pass over
+the base weight: HBM traffic is  base(2B) + E * 2bits  per param instead of
+E full read-modify-write sweeps (base 3*2B each) of applying the experts one
+at a time — the multi-expert generalisation of the paper's Table-5 swap
+claim.  The expert grid dimension accumulates with a round-trip through the
+output dtype per expert, so the fused result is bit-identical to looping the
+single-expert kernel.
 """
 
 from __future__ import annotations
@@ -16,38 +26,52 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.tpu_params import streaming_cost, tpu_compiler_params
+from repro.kernels.tpu_params import (lane_block, streaming_cost,
+                                      tpu_compiler_params)
 
 LANE = 32
 
 
-def _kernel(base_ref, pos_ref, neg_ref, scale_ref, o_ref):
-    pw = pos_ref[...]
-    nw = neg_ref[...]
+def _unpack_delta(pw, nw):
     shifts = jnp.arange(LANE, dtype=jnp.uint32)[None, None, :]
     pb = ((pw[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
     nb = ((nw[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
-    delta = (pb - nb).reshape(pw.shape[0], pw.shape[1] * LANE)
+    return (pb - nb).reshape(pw.shape[0], pw.shape[1] * LANE)
+
+
+def _kernel(base_ref, pos_ref, neg_ref, scale_ref, o_ref):
+    delta = _unpack_delta(pos_ref[...], neg_ref[...])
     base = base_ref[...].astype(jnp.float32)
     o_ref[...] = (base + scale_ref[0, 0] * delta).astype(o_ref.dtype)
+
+
+def _pad_inputs(base, pos, neg, bm, bn):
+    """Pad base to whole blocks and planes to matching word counts."""
+    M, N = base.shape
+    Wn = -(-N // LANE)
+    pad_m, pad_n = (-M) % bm, (-N) % bn
+    if pad_m or pad_n:
+        base = jnp.pad(base, ((0, pad_m), (0, pad_n)))
+    Np = N + pad_n
+    pad_w = Np // LANE - Wn
+    plane_pad = [(0, 0)] * (pos.ndim - 2) + [(0, pad_m), (0, pad_w)]
+    if pad_m or pad_w:
+        pos = jnp.pad(pos, plane_pad)
+        neg = jnp.pad(neg, plane_pad)
+    return base, pos, neg
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def unpack_add(base: jax.Array, pos: jax.Array, neg: jax.Array,
                scale: jax.Array, *, bm: int = 256, bn: int = 512,
                interpret: bool = True) -> jax.Array:
-    """base: [M, N]; pos/neg: [M, N//32] uint32; scale scalar.  Returns
+    """base: [M, N]; pos/neg: [M, ceil(N/32)] uint32; scale scalar.  Returns
     base + scale*(pos-neg) in base.dtype."""
     M, N = base.shape
-    assert pos.shape == (M, N // LANE), (pos.shape, base.shape)
+    assert pos.shape == (M, -(-N // LANE)), (pos.shape, base.shape)
     bm = min(bm, M)
-    bn = min(bn, N)
-    assert bn % LANE == 0
-    pad_m, pad_n = (-M) % bm, (-N) % bn
-    if pad_m or pad_n:
-        base = jnp.pad(base, ((0, pad_m), (0, pad_n)))
-        pos = jnp.pad(pos, ((0, pad_m), (0, pad_n // LANE)))
-        neg = jnp.pad(neg, ((0, pad_m), (0, pad_n // LANE)))
+    bn = lane_block(bn, N)
+    base, pos, neg = _pad_inputs(base, pos, neg, bm, bn)
     Mp, Np = base.shape
 
     out = pl.pallas_call(
@@ -69,4 +93,60 @@ def unpack_add(base: jax.Array, pos: jax.Array, neg: jax.Array,
             out_bytes_per_elem=float(base.dtype.itemsize)),
         interpret=interpret,
     )(base, pos, neg, scale.reshape(1, 1).astype(jnp.float32))
+    return out[:M, :N]
+
+
+def _kernel_many(base_ref, pos_ref, neg_ref, scale_ref, o_ref, *, n_e: int):
+    e = pl.program_id(2)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = base_ref[...]
+
+    delta = _unpack_delta(pos_ref[0], neg_ref[0])
+    acc = o_ref[...].astype(jnp.float32) + scale_ref[0, 0] * delta
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def unpack_add_many(base: jax.Array, pos: jax.Array, neg: jax.Array,
+                    scales: jax.Array, *, bm: int = 256, bn: int = 512,
+                    interpret: bool = True) -> jax.Array:
+    """Fused multi-expert merge: one sweep over base applies E experts.
+
+    base: [M, N]; pos/neg: [E, M, ceil(N/32)] uint32 stacked planes;
+    scales: [E] f32 per-expert scales.  Returns
+    ``base + sum_e scales[e] * (pos_e - neg_e)`` in base.dtype, accumulated
+    expert-by-expert through base.dtype so the result is bit-identical to
+    looping :func:`unpack_add`.
+    """
+    M, N = base.shape
+    E = pos.shape[0]
+    assert pos.shape == (E, M, -(-N // LANE)), (pos.shape, base.shape)
+    assert scales.shape == (E,), scales.shape
+    bm = min(bm, M)
+    bn = lane_block(bn, N)
+    base, pos, neg = _pad_inputs(base, pos, neg, bm, bn)
+    Mp, Np = base.shape
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_many, n_e=E),
+        grid=(Mp // bm, Np // bn, E),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, e: (i, j)),
+            pl.BlockSpec((1, bm, bn // LANE), lambda i, j, e: (e, i, j)),
+            pl.BlockSpec((1, bm, bn // LANE), lambda i, j, e: (e, i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, e: (e, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, e: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), base.dtype),
+        # i/j tiles independent; e accumulates into the output block
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary"), interpret=interpret),
+        cost_estimate=streaming_cost(
+            Mp * Np,
+            in_bytes_per_elem=base.dtype.itemsize + 0.25 * E,
+            out_bytes_per_elem=float(base.dtype.itemsize)),
+        interpret=interpret,
+    )(base, pos, neg, scales.reshape(-1, 1).astype(jnp.float32))
     return out[:M, :N]

@@ -266,25 +266,43 @@ def finalize_partial(o: jax.Array, m: jax.Array, l: jax.Array) -> jax.Array:
 
 
 def qkv_project(x: jax.Array, p: dict, cfg: AttnCfg, positions: jax.Array,
-                rms_eps: float = 1e-6):
-    """x: [B, T, Dm] -> q, k, v with rope (and optional bias / qk-norm)."""
+                rms_eps: float = 1e-6, dp=None, eid=None):
+    """x: [B, T, Dm] -> q, k, v with rope (and optional bias / qk-norm).
+
+    ``dp``/``eid`` carry the zero-merge expert overlay (stacked ternary
+    planes + per-row expert ids); each projection then adds the grouped
+    delta contraction instead of ever merging expert weights."""
     from repro.models.common import rms_norm
+    from repro.models.delta import add_delta, delta_proj, eff_param
+    dp = dp or {}
 
     q = jnp.einsum("btd,dhk->bthk", x, p["wq"], optimize=True)
     k = jnp.einsum("btd,dhk->bthk", x, p["wk"], optimize=True)
     v = jnp.einsum("btd,dhk->bthk", x, p["wv"], optimize=True)
+    if dp:
+        q = add_delta(q, delta_proj(x, dp.get("wq"), eid))
+        k = add_delta(k, delta_proj(x, dp.get("wk"), eid))
+        v = add_delta(v, delta_proj(x, dp.get("wv"), eid))
     if cfg.qkv_bias:
-        q = q + p["bq"]
-        k = k + p["bk"]
-        v = v + p["bv"]
+        q = q + eff_param(p["bq"], dp.get("bq"), eid)
+        k = k + eff_param(p["bk"], dp.get("bk"), eid)
+        v = v + eff_param(p["bv"], dp.get("bv"), eid)
     if cfg.qk_norm:
-        q = rms_norm(q, p["q_norm"], rms_eps)
-        k = rms_norm(k, p["k_norm"], rms_eps)
+        q = rms_norm(q, eff_param(p["q_norm"], dp.get("q_norm"), eid,
+                                  expand=2), rms_eps)
+        k = rms_norm(k, eff_param(p["k_norm"], dp.get("k_norm"), eid,
+                                  expand=2), rms_eps)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     return q, k, v
 
 
-def out_project(attn_out: jax.Array, p: dict) -> jax.Array:
+def out_project(attn_out: jax.Array, p: dict, dp=None, eid=None) -> jax.Array:
     """[B, T, Hq, D] @ wo[Hq, D, Dm] -> [B, T, Dm]."""
-    return jnp.einsum("bthk,hkd->btd", attn_out, p["wo"], optimize=True)
+    out = jnp.einsum("bthk,hkd->btd", attn_out, p["wo"], optimize=True)
+    if dp and dp.get("wo") is not None:
+        from repro.models.delta import add_delta, delta_proj
+        B, T, H, D = attn_out.shape
+        d = delta_proj(attn_out.reshape(B, T, H * D), dp["wo"], eid)
+        out = add_delta(out, d)
+    return out

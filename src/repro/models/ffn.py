@@ -23,17 +23,24 @@ def _act(x: jax.Array, kind: str) -> jax.Array:
     raise ValueError(kind)
 
 
-def dense_ffn(x: jax.Array, p: dict, cfg: FFNCfg) -> jax.Array:
-    """x: [B, T, D].  Gated (swiglu/geglu): out = (act(x@wg) * (x@wu)) @ wo."""
+def dense_ffn(x: jax.Array, p: dict, cfg: FFNCfg, dp=None,
+              eid=None) -> jax.Array:
+    """x: [B, T, D].  Gated (swiglu/geglu): out = (act(x@wg) * (x@wu)) @ wo.
+
+    ``dp``/``eid``: zero-merge expert overlay — per-row grouped ternary
+    delta added to each projection instead of merging expert weights."""
+    from repro.models.delta import add_delta, delta_proj
+    dp = dp or {}
+    g_lin = jnp.einsum("btd,df->btf", x, p["wg"], optimize=True)
+    g_lin = add_delta(g_lin, delta_proj(x, dp.get("wg"), eid))
     if cfg.activation in ("swiglu", "geglu"):
-        g = _act(jnp.einsum("btd,df->btf", x, p["wg"], optimize=True),
-                 cfg.activation)
         u = jnp.einsum("btd,df->btf", x, p["wu"], optimize=True)
-        h = g * u
+        u = add_delta(u, delta_proj(x, dp.get("wu"), eid))
+        h = _act(g_lin, cfg.activation) * u
     else:
-        h = _act(jnp.einsum("btd,df->btf", x, p["wg"], optimize=True),
-                 cfg.activation)
-    return jnp.einsum("btf,fd->btd", h, p["wo"], optimize=True)
+        h = _act(g_lin, cfg.activation)
+    out = jnp.einsum("btf,fd->btd", h, p["wo"], optimize=True)
+    return add_delta(out, delta_proj(h, dp.get("wo"), eid))
 
 
 def _expert_ffn(h_in: jax.Array, p: dict, cfg: FFNCfg) -> jax.Array:
@@ -107,7 +114,9 @@ def moe_ffn(x: jax.Array, p: dict, cfg: FFNCfg) -> tuple[jax.Array, jax.Array]:
     return out.reshape(B, T, D), aux
 
 
-def ffn_apply(x: jax.Array, p: dict, cfg: FFNCfg) -> tuple[jax.Array, jax.Array]:
+def ffn_apply(x: jax.Array, p: dict, cfg: FFNCfg, dp=None,
+              eid=None) -> tuple[jax.Array, jax.Array]:
     if cfg.moe is not None:
+        assert not dp, "zero-merge overlay does not cover MoE FFNs"
         return moe_ffn(x, p, cfg)
-    return dense_ffn(x, p, cfg), jnp.zeros((), jnp.float32)
+    return dense_ffn(x, p, cfg, dp=dp, eid=eid), jnp.zeros((), jnp.float32)

@@ -83,16 +83,19 @@ def build(cfg: ModelConfig) -> ModelApi:
         loss = cross_entropy(logits_text, targets) + AUX_LOSS_WEIGHT * aux
         return loss, (logits_text, aux)
 
-    def prefill_fn(params, batch, rt: Runtime, cache_len: int):
+    def prefill_fn(params, batch, rt: Runtime, cache_len: int,
+                   delta=None, eid=None):
         enc_out = None
         if is_encdec:
             enc_out = tf.encode(params, batch["frames"], cfg, rt)
         mm = batch.get("mm_embeds") if is_vlm else None
         return tf.prefill(params, batch["tokens"], cfg, rt, cache_len,
-                          mm_embeds=mm, enc_out=enc_out)
+                          mm_embeds=mm, enc_out=enc_out, delta=delta,
+                          eid=eid)
 
-    def decode_fn(params, token, cache, rt: Runtime):
-        return tf.decode_step(params, token, cache, cfg, rt)
+    def decode_fn(params, token, cache, rt: Runtime, delta=None, eid=None):
+        return tf.decode_step(params, token, cache, cfg, rt, delta=delta,
+                              eid=eid)
 
     def init_cache(batch: int, cache_len: int):
         return tf.init_decode_cache(cfg, batch, cache_len)

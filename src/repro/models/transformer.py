@@ -31,6 +31,8 @@ from repro.models.attention import (KVCache, cache_write,
                                     out_project, qkv_project)
 from repro.models.common import (dense_init, dtype_of, embed_init, rms_norm,
                                  softcap, split_keys)
+from repro.models.delta import (add_delta, eff_param, embed_delta_rows,
+                                delta_proj, tied_logits_delta)
 
 PyTree = Any
 
@@ -247,10 +249,14 @@ def init_params(key: jax.Array, cfg: ModelConfig) -> PyTree:
 
 
 def _apply_attn_block(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime,
-                      positions, enc_out=None, collect_cache=False):
-    h = rms_norm(x, bp["pre_norm"], cfg.rms_eps, _gemma(cfg))
+                      positions, enc_out=None, collect_cache=False,
+                      dp=None, eid=None):
+    dp = dp or {}
+    h = rms_norm(x, eff_param(bp["pre_norm"], dp.get("pre_norm"), eid),
+                 cfg.rms_eps, _gemma(cfg))
     heads_ok = getattr(rt.shard, "heads_shardable", lambda hh: False)
-    q, k, v = qkv_project(h, bp["attn"], b.attn, positions, cfg.rms_eps)
+    q, k, v = qkv_project(h, bp["attn"], b.attn, positions, cfg.rms_eps,
+                          dp=dp.get("attn"), eid=eid)
     q = rt.shard(q, ("batch", "seq", "heads", None))
     k = rt.shard(k, ("batch", "seq", "kv_heads", None))
     # pin the flash scan-carry sharding only when the heads cannot take the
@@ -260,9 +266,11 @@ def _apply_attn_block(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime,
     o = flash_attention(q, k, v, b.attn, causal=b.attn.causal,
                         chunk_q=rt.attn_chunk_q, chunk_k=rt.attn_chunk_k,
                         shard_fn=pin)
-    o = out_project(o, bp["attn"])
+    o = out_project(o, bp["attn"], dp=dp.get("attn"), eid=eid)
     if b.sandwich_norm:
-        o = rms_norm(o, bp["post_attn_norm"], cfg.rms_eps, _gemma(cfg))
+        o = rms_norm(o, eff_param(bp["post_attn_norm"],
+                                  dp.get("post_attn_norm"), eid),
+                     cfg.rms_eps, _gemma(cfg))
     x = x + o
     if enc_out is not None and "cross" in bp:
         hc = rms_norm(x, bp["cross_norm"], cfg.rms_eps)
@@ -281,27 +289,34 @@ def _apply_attn_block(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime,
     return x, cache_out
 
 
-def _apply_ffn(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime):
+def _apply_ffn(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime,
+               dp=None, eid=None):
     if b.ffn is None:
         return x, jnp.zeros((), jnp.float32)
-    h = rms_norm(x, bp["ffn_norm"], cfg.rms_eps, _gemma(cfg))
-    out, aux = ffn_mod.ffn_apply(h, bp["ffn"], b.ffn)
+    dp = dp or {}
+    h = rms_norm(x, eff_param(bp["ffn_norm"], dp.get("ffn_norm"), eid),
+                 cfg.rms_eps, _gemma(cfg))
+    out, aux = ffn_mod.ffn_apply(h, bp["ffn"], b.ffn, dp=dp.get("ffn"),
+                                 eid=eid)
     out = rt.shard(out, ("batch", "seq", "embed_act"))
     if b.sandwich_norm:
-        out = rms_norm(out, bp["post_ffn_norm"], cfg.rms_eps, _gemma(cfg))
+        out = rms_norm(out, eff_param(bp["post_ffn_norm"],
+                                      dp.get("post_ffn_norm"), eid),
+                       cfg.rms_eps, _gemma(cfg))
     return x + out, aux
 
 
 def _apply_block_train(x, bp, b: BlockCfg = None, cfg: ModelConfig = None,
                        rt: Runtime = None, positions=None, state=None,
-                       enc_out=None, collect_cache=False):
+                       enc_out=None, collect_cache=False, dp=None, eid=None):
     """Returns (x, aux, cache_entry, new_state)."""
     aux = jnp.zeros((), jnp.float32)
     cache_entry, new_state = None, None
     if b.kind == "attn":
         x, cache_entry = _apply_attn_block(x, bp, b, cfg, rt, positions,
-                                           enc_out, collect_cache)
-        x, aux = _apply_ffn(x, bp, b, cfg, rt)
+                                           enc_out, collect_cache,
+                                           dp=dp, eid=eid)
+        x, aux = _apply_ffn(x, bp, b, cfg, rt, dp=dp, eid=eid)
     elif b.kind == "mamba":
         h = rms_norm(x, bp["pre_norm"], cfg.rms_eps)
         out, new_state = mamba_mod.mamba_forward(
@@ -325,19 +340,21 @@ def _apply_block_train(x, bp, b: BlockCfg = None, cfg: ModelConfig = None,
 
 
 def _unit_scan(x, stacked_blocks, cfg: ModelConfig, rt: Runtime, positions,
-               pattern, enc_out=None, collect_cache=False, states=None):
+               pattern, enc_out=None, collect_cache=False, states=None,
+               delta_blocks=None, eid=None):
     """Scan over units.  Returns (x, aux_sum, caches, new_states)."""
 
     def body(carry, xs):
         h, aux = carry
-        unit_params = xs[0]
-        unit_states = xs[1]
+        unit_params, unit_states, unit_delta = xs
         caches, new_states = [], []
         for i, b in enumerate(pattern):
             st = unit_states[i] if unit_states is not None else None
+            dp = (unit_delta.get(f"block{i}")
+                  if unit_delta is not None else None)
             block_fn = partial(_apply_block_train, b=b, cfg=cfg, rt=rt,
                                positions=positions, enc_out=enc_out,
-                               collect_cache=collect_cache)
+                               collect_cache=collect_cache, dp=dp, eid=eid)
             if rt.remat_policy == "block" and len(pattern) > 1:
                 block_fn = jax.checkpoint(
                     block_fn, policy=jax.checkpoint_policies.nothing_saveable,
@@ -356,16 +373,19 @@ def _unit_scan(x, stacked_blocks, cfg: ModelConfig, rt: Runtime, positions,
                               policy=jax.checkpoint_policies.nothing_saveable)
     (x, aux), ys = lax.scan(
         body, (x, jnp.zeros((), jnp.float32)),
-        (stacked_blocks, states))
+        (stacked_blocks, states, delta_blocks))
     return x, aux, ys[0], ys[1]
 
 
 def embed_tokens(params, tokens, cfg: ModelConfig, rt: Runtime,
-                 mm_embeds=None):
+                 mm_embeds=None, delta=None, eid=None):
     if rt.embed_lookup is not None:
         x = rt.embed_lookup(params["embed"], tokens)
     else:
         x = params["embed"][tokens]  # gather; vocab-sharded under GSPMD
+    if delta is not None:
+        d = embed_delta_rows(delta.get("embed"), tokens, eid, cfg.d_model)
+        x = add_delta(x, d)
     if cfg.embed_scale:
         x = (x.astype(jnp.float32) * np.sqrt(cfg.d_model)).astype(x.dtype)
     if cfg.frontend is not None and mm_embeds is not None:
@@ -375,10 +395,18 @@ def embed_tokens(params, tokens, cfg: ModelConfig, rt: Runtime,
     return rt.shard(x, ("batch", "seq", "embed_act"))
 
 
-def logits_of(params, x, cfg: ModelConfig, rt: Runtime):
-    x = rms_norm(x, params["final_norm"], cfg.rms_eps, _gemma(cfg))
+def logits_of(params, x, cfg: ModelConfig, rt: Runtime, delta=None,
+              eid=None):
+    delta = delta or {}
+    x = rms_norm(x, eff_param(params["final_norm"], delta.get("final_norm"),
+                              eid), cfg.rms_eps, _gemma(cfg))
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
     logits = jnp.einsum("btd,dv->btv", x, head, optimize=True)
+    if cfg.tie_embeddings:
+        d = tied_logits_delta(x, delta.get("embed"), eid, cfg.vocab)
+    else:
+        d = delta_proj(x, delta.get("lm_head"), eid)
+    logits = add_delta(logits, d)
     logits = softcap(logits, cfg.logit_softcap)
     return rt.shard(logits, ("batch", "seq", "vocab_act"))
 
@@ -455,18 +483,23 @@ def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
 
 
 def _decode_block(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime, st,
-                  cur, cross_kv=None):
+                  cur, cross_kv=None, dp=None, eid=None):
     """One-token step through one block.  Returns (x, new_state)."""
     decode_attn = rt.decode_attn or default_decode_cache_attn
+    dp = dp or {}
     if b.kind == "attn":
-        h = rms_norm(x, bp["pre_norm"], cfg.rms_eps, _gemma(cfg))
+        h = rms_norm(x, eff_param(bp["pre_norm"], dp.get("pre_norm"), eid),
+                     cfg.rms_eps, _gemma(cfg))
         positions = cur[None, None].astype(jnp.int32)  # [1,1] broadcasts to [B,T=1]
-        q, k, v = qkv_project(h, bp["attn"], b.attn, positions, cfg.rms_eps)
+        q, k, v = qkv_project(h, bp["attn"], b.attn, positions, cfg.rms_eps,
+                              dp=dp.get("attn"), eid=eid)
         o, ck, cv, pos = decode_attn(q, k, v, st["k"], st["v"], st["pos"],
                                      cur, b.attn)
-        o = out_project(o, bp["attn"])
+        o = out_project(o, bp["attn"], dp=dp.get("attn"), eid=eid)
         if b.sandwich_norm:
-            o = rms_norm(o, bp["post_attn_norm"], cfg.rms_eps, _gemma(cfg))
+            o = rms_norm(o, eff_param(bp["post_attn_norm"],
+                                      dp.get("post_attn_norm"), eid),
+                         cfg.rms_eps, _gemma(cfg))
         x = x + o
         if cross_kv is not None:
             hc = rms_norm(x, bp["cross_norm"], cfg.rms_eps)
@@ -478,7 +511,7 @@ def _decode_block(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime, st,
                 dataclasses.replace(b.attn, causal=False, window=None))
             x = x + out_project(finalize_partial(o2, m2, l2)[:, None]
                                 .astype(x.dtype), bp["cross"])
-        x, _ = _apply_ffn(x, bp, b, cfg, rt)
+        x, _ = _apply_ffn(x, bp, b, cfg, rt, dp=dp, eid=eid)
         return x, {"k": ck, "v": cv, "pos": pos}
     if b.kind == "mamba":
         h = rms_norm(x, bp["pre_norm"], cfg.rms_eps)
@@ -500,34 +533,42 @@ def _decode_block(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime, st,
     raise ValueError(b.kind)
 
 
-def decode_step(params, token, cache, cfg: ModelConfig, rt: Runtime):
+def decode_step(params, token, cache, cfg: ModelConfig, rt: Runtime,
+                delta=None, eid=None):
     """token [B, 1] int32 -> (logits [B, 1, V], new_cache)."""
     if rt.embed_lookup is not None:
         x = rt.embed_lookup(params["embed"], token)
     else:
         x = params["embed"][token]
+    if delta is not None:
+        x = add_delta(x, embed_delta_rows(delta.get("embed"), token, eid,
+                                          cfg.d_model))
     if cfg.embed_scale:
         x = (x.astype(jnp.float32) * np.sqrt(cfg.d_model)).astype(x.dtype)
     x = rt.shard(x, ("batch", "seq", "embed_act"))
     cur = cache["cur"]
     cross = cache.get("cross")
+    delta_blocks = delta.get("blocks") if delta is not None else None
 
     def body(carry, xs):
         h = carry
-        unit_params, unit_cache, unit_cross = xs
+        unit_params, unit_cache, unit_cross, unit_delta = xs
         new_states = {}
         for i, b in enumerate(cfg.pattern):
             ck = (unit_cross["k"], unit_cross["v"]) if (
                 unit_cross is not None and b.kind == "attn") else None
+            dp = (unit_delta.get(f"block{i}")
+                  if unit_delta is not None else None)
             h, ns = _decode_block(h, unit_params[f"block{i}"], b, cfg, rt,
-                                  unit_cache[f"block{i}"], cur, cross_kv=ck)
+                                  unit_cache[f"block{i}"], cur, cross_kv=ck,
+                                  dp=dp, eid=eid)
             new_states[f"block{i}"] = ns
         return h, new_states
 
     x = x.astype(dtype_of(cfg))
-    x, new_layers = lax.scan(body, x,
-                             (params["blocks"], cache["layers"], cross))
-    logits = logits_of(params, x, cfg, rt)
+    x, new_layers = lax.scan(
+        body, x, (params["blocks"], cache["layers"], cross, delta_blocks))
+    logits = logits_of(params, x, cfg, rt, delta=delta, eid=eid)
     new_cache = dict(cache)
     new_cache["layers"] = new_layers
     new_cache["cur"] = cur + 1
@@ -552,16 +593,19 @@ def _ring_fill(full: jax.Array, pos_abs: int, S: int):
 
 
 def prefill(params, tokens, cfg: ModelConfig, rt: Runtime, cache_len: int,
-            mm_embeds=None, enc_out=None):
+            mm_embeds=None, enc_out=None, delta=None, eid=None):
     """Run the full prompt, returning (last-token logits, filled cache)."""
-    x = embed_tokens(params, tokens, cfg, rt, mm_embeds)
+    x = embed_tokens(params, tokens, cfg, rt, mm_embeds, delta=delta,
+                     eid=eid)
     T = x.shape[1]
     B = x.shape[0]
     positions = jnp.arange(T)[None, :]
     states0 = _init_unit_states(cfg, B, stacked=True)
     x, aux, caches, new_states = _unit_scan(
         x, params["blocks"], cfg, rt, positions, cfg.pattern,
-        collect_cache=True, states=states0, enc_out=enc_out)
+        collect_cache=True, states=states0, enc_out=enc_out,
+        delta_blocks=delta.get("blocks") if delta is not None else None,
+        eid=eid)
 
     cache = init_decode_cache(cfg, B, cache_len, dtype=dtype_of(cfg))
     for i, b in enumerate(cfg.pattern):
@@ -580,7 +624,7 @@ def prefill(params, tokens, cfg: ModelConfig, rt: Runtime, cache_len: int,
     cache["cur"] = jnp.asarray(T, jnp.int32)
     if enc_out is not None:
         cache["cross"] = cross_cache_from_encoder(params, enc_out, cfg)
-    logits = logits_of(params, x[:, -1:], cfg, rt)
+    logits = logits_of(params, x[:, -1:], cfg, rt, delta=delta, eid=eid)
     return logits, cache
 
 

@@ -1,24 +1,43 @@
-"""Multi-expert serving engine: request batching, expert routing, swap-aware
-scheduling, prefill+decode loop.
+"""Multi-expert serving engine: continuous mixed-expert batching over
+packed ternary experts.
 
-Requests name an expert; the scheduler greedily groups same-expert requests
-into batches (S-LoRA-style adapter batching is approximated by merge-on-
-swap, which is the right trade-off once ComPEFT makes swaps ~16-50x
-cheaper — the quantitative claim the paper makes in §3.4)."""
+Requests name an expert.  Since PR 2 the default scheduler is **mixed**:
+requests are admitted FIFO into waves of up to ``max_batch`` rows *across*
+experts, and a wave runs prefill/decode against the **base** parameters
+plus a zero-merge overlay — the stacked bitplanes of every expert in the
+wave, contracted per row by the grouped ternary kernels
+(S-LoRA-style heterogeneous batching over ComPEFT modules; cf. "Composing
+Parameter-Efficient Modules with Arithmetic Operations", Zhang et al.
+2023, for why merged/composed ternary experts behave).  No merged
+parameter tree is ever materialised, so a mixed request stream never pays
+swap-merge round trips.  When a row finishes its generation budget and
+requests are still queued, the slot is refilled in place: the newcomer's
+prompt is left-padded to the wave's current position, prefilled as a
+single row, and its KV state spliced into the running batch (continuous
+batching).
+
+Merge-on-swap (the PR-1 path: ``unpack_add`` every leaf into a copy of the
+base) survives as a fallback for model families the overlay cannot express
+(MoE/mamba/rwkv/enc-dec) and for waves whose expert set exceeds the stack
+budget.  ``scheduling="grouped"`` forces the old greedy same-expert
+scheduler — kept as the measured baseline of ``perf_lab --exp
+mixed_serve``."""
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
+from collections import defaultdict, deque
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.models.delta import build_overlay, plan_overlay
 from repro.models.model import ModelApi
 from repro.models.transformer import Runtime
-from repro.serve.expert_cache import DeviceCache, ExpertStore
+from repro.serve.expert_cache import BASE, DeviceCache, ExpertStore
 
 PyTree = Any
 
@@ -37,6 +56,9 @@ class EngineConfig:
     max_batch: int = 8
     cache_len: int = 128
     device_cache_bytes: int = 1 << 28
+    scheduling: str = "mixed"     # "mixed" (zero-merge) | "grouped" (merge)
+    max_stack: int = 8            # max distinct experts stacked per wave
+    continuous: bool = True       # refill finished slots mid-wave
 
 
 class ServeEngine:
@@ -51,15 +73,22 @@ class ServeEngine:
         self.store = store
         self.cfg = ecfg
         self.cache = DeviceCache(store, ecfg.device_cache_bytes)
-        self._merged: dict[str, PyTree] = {}
         self._merged_name: Optional[str] = None
         self._merged_params: Optional[PyTree] = None
+        self._plan = plan_overlay(base_params, api.cfg)
+        self._overlays: dict[tuple, Any] = {}
+        # the serve step functions are jitted once per (batch shape, overlay
+        # structure); rt and cache_len are static
+        self._prefill = jax.jit(api.prefill, static_argnums=(2, 3))
+        self._decode = jax.jit(api.decode_step, static_argnums=(3,))
         self.swap_log: list = []
+        self.wave_log: list = []
 
     # ---------------- expert management ----------------
 
     def _params_for(self, expert: str) -> PyTree:
-        if expert == "__base__":
+        """Merge-on-swap fallback: full merged params for one expert."""
+        if expert == BASE:
             return self.base
         if self._merged_name == expert:
             return self._merged_params
@@ -89,10 +118,62 @@ class ServeEngine:
                        else apply_ternary_delta_flat(leaf, pt))
         return jax.tree_util.tree_unflatten(treedef, out)
 
+    def merged_ensemble_params(self, experts: list[str],
+                               weights: Optional[list[float]] = None
+                               ) -> PyTree:
+        """Merged-ensemble mode: W_base + sum_e α_e Δ_e in ONE sweep.
+
+        The fused ``unpack_add_many`` kernel applies every expert's planes
+        during a single pass over the base weights instead of E
+        read-modify-write round trips over HBM; bit-identical to applying
+        the (α-scaled) experts one at a time.
+        """
+        from repro.kernels.ops import apply_ternary_delta_many_flat
+        from repro.peft.lora import _path_str
+        packs = [self.cache.fetch(e) for e in experts]
+        w = weights if weights is not None else [1.0] * len(experts)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.base)
+        out = []
+        for path, leaf in flat:
+            ps = _path_str(path)
+            pts, ws = [], []
+            for pk, wi in zip(packs, w):
+                if ps in pk:
+                    pts.append(pk[ps])
+                    ws.append(wi)
+            out.append(leaf if not pts
+                       else apply_ternary_delta_many_flat(leaf, pts, ws))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _overlay_for(self, experts: tuple) -> Optional[dict]:
+        """Zero-merge overlay for an ordered expert set (None → fallback)."""
+        if self._plan is None:
+            return None
+        if experts in self._overlays:
+            # an eviction of any member drops the underlying stack; the
+            # shaped overlay must not outlive it (HBM accounting + staleness)
+            if self.cache.has_stack(experts):
+                return self._overlays[experts]
+            del self._overlays[experts]
+        stacks = self.cache.stacked(experts)
+        overlay = build_overlay(self._plan, stacks)
+        if overlay is not None:
+            while len(self._overlays) >= DeviceCache.MAX_STACKS:
+                self._overlays.pop(next(iter(self._overlays)))
+            self._overlays[experts] = overlay
+        return overlay
+
     # ---------------- serving loop ----------------
 
-    def run(self, requests: list[Request]) -> list[Request]:
-        """Greedy same-expert batching; prefill then decode each group."""
+    def run(self, requests: list[Request],
+            scheduling: Optional[str] = None) -> list[Request]:
+        mode = scheduling or self.cfg.scheduling
+        if mode == "grouped":
+            return self._run_grouped(requests)
+        return self._run_mixed(requests)
+
+    def _run_grouped(self, requests: list[Request]) -> list[Request]:
+        """PR-1 baseline: greedy same-expert batching, merge per expert."""
         groups: dict[str, list[Request]] = defaultdict(list)
         for r in requests:
             groups[r.expert].append(r)
@@ -102,11 +183,133 @@ class ServeEngine:
                 self._serve_batch(params, reqs[i:i + self.cfg.max_batch])
         return requests
 
-    def _serve_batch(self, params, reqs: list[Request]) -> None:
+    def _run_mixed(self, requests: list[Request]) -> list[Request]:
+        """Continuous mixed-expert batching (zero-merge hot path)."""
+        if self._plan is None:
+            # family not coverable at all: hand the WHOLE list to the
+            # grouped scheduler so it merges once per expert, not per wave
+            return self._run_grouped(requests)
+        queue = deque(requests)
+        while queue:
+            wave, experts = [], []
+            while queue and len(wave) < self.cfg.max_batch:
+                r = queue[0]
+                if (r.expert not in experts
+                        and len(experts) >= self.cfg.max_stack):
+                    break                      # over-capacity: next wave
+                if r.expert not in experts:
+                    experts.append(r.expert)
+                wave.append(queue.popleft())
+            overlay = self._overlay_for(tuple(experts))
+            if overlay is None:
+                # family/leaf not coverable -> merge-on-swap fallback
+                self._run_grouped(wave)
+                continue
+            self._serve_wave(wave, experts, overlay, queue)
+        return requests
+
+    def _pad_prompts(self, reqs: list[Request]) -> jax.Array:
         T = max(int(r.prompt.shape[0]) for r in reqs)
-        toks = jnp.stack([jnp.pad(r.prompt, (T - r.prompt.shape[0], 0),
-                                  constant_values=1) for r in reqs])
-        batch = {"tokens": toks.astype(jnp.int32)}
+        return jnp.stack([jnp.pad(r.prompt, (T - r.prompt.shape[0], 0),
+                                  constant_values=1) for r in reqs]
+                         ).astype(jnp.int32)
+
+    def _can_admit(self) -> bool:
+        # slot refill splices per-row KV state; only the pure-attention
+        # families keep all decode state per-row
+        return (self.cfg.continuous
+                and all(b.kind == "attn" for b in self.api.cfg.pattern))
+
+    def _serve_wave(self, wave: list[Request], experts: list[str],
+                    overlay: dict, queue: deque) -> None:
+        t0 = time.perf_counter()
+        slot = {e: i for i, e in enumerate(experts)}
+        eid = jnp.asarray([slot[r.expert] for r in wave], jnp.int32)
+        batch = {"tokens": self._pad_prompts(wave)}
+        logits, cache = self._prefill(self.base, batch, self.rt,
+                                      self.cfg.cache_len, delta=overlay,
+                                      eid=eid)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        rows: list[Optional[Request]] = list(wave)
+        admitted = 0
+        while True:
+            tok_np = np.asarray(tok).ravel()   # one host sync per step
+            for j, r in enumerate(rows):
+                if r is not None and len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(tok_np[j]))
+            done = [j for j, r in enumerate(rows) if r is None
+                    or len(r.out_tokens) >= r.max_new_tokens]
+            # continuous admission: refill finished slots in place
+            if queue and self._can_admit():
+                cur = int(cache["cur"])
+                for j in done:
+                    if not queue:
+                        break
+                    nxt = queue[0]
+                    if (nxt.expert not in slot
+                            and len(slot) >= self.cfg.max_stack):
+                        break
+                    if int(nxt.prompt.shape[0]) > cur:
+                        break                 # cannot left-pad down
+                    if cur + nxt.max_new_tokens > self.cfg.cache_len:
+                        break                 # would wrap the KV ring
+                    if nxt.expert not in slot:
+                        grown = self._overlay_for(tuple(experts
+                                                        + [nxt.expert]))
+                        if grown is None:
+                            break             # newcomer not coverable
+                        experts.append(nxt.expert)
+                        slot[nxt.expert] = len(experts) - 1
+                        overlay = grown
+                    queue.popleft()
+                    rows[j] = nxt
+                    eid = eid.at[j].set(slot[nxt.expert])
+                    tok, cache = self._admit_row(nxt, j, cur, cache, tok,
+                                                 overlay, eid)
+                    # the newcomer's prefill argmax IS its first generated
+                    # token; record it now — the next loop-top append only
+                    # sees the decode output that consumes it
+                    if nxt.max_new_tokens > 0:
+                        nxt.out_tokens.append(int(tok[j, 0]))
+                    admitted += 1
+                done = [j for j, r in enumerate(rows) if r is None
+                        or len(r.out_tokens) >= r.max_new_tokens]
+            if len(done) == len(rows):
+                break
+            logits, cache = self._decode(self.base, tok, cache, self.rt,
+                                         delta=overlay, eid=eid)
+            tok = jnp.argmax(logits[:, -1],
+                             axis=-1).astype(jnp.int32)[:, None]
+        self.wave_log.append({"rows": len(wave), "experts": len(experts),
+                              "admitted": admitted,
+                              "seconds": time.perf_counter() - t0})
+
+    def _admit_row(self, r: Request, j: int, cur: int, cache, tok,
+                   overlay, eid):
+        """Prefill one newcomer left-padded to the wave position and splice
+        its KV state into row j of the running batch."""
+        prompt = jnp.pad(r.prompt, (cur - int(r.prompt.shape[0]), 0),
+                         constant_values=1)[None].astype(jnp.int32)
+        row_eid = eid[j][None]
+        row_logits, row_cache = self._prefill(
+            self.base, {"tokens": prompt}, self.rt, self.cfg.cache_len,
+            delta=overlay, eid=row_eid)
+
+        def splice(c, rc):
+            if c.ndim >= 2 and rc.ndim == c.ndim and rc.shape[1] == 1:
+                return c.at[:, j].set(rc[:, 0])
+            return c
+        new_cache = dict(cache)
+        new_cache["layers"] = jax.tree_util.tree_map(splice, cache["layers"],
+                                                     row_cache["layers"])
+        tok = tok.at[j].set(
+            jnp.argmax(row_logits[:, -1], axis=-1).astype(jnp.int32))
+        return tok, new_cache
+
+    def _serve_batch(self, params, reqs: list[Request]) -> None:
+        """Merge-path batch (single expert): prefill then decode."""
+        toks = self._pad_prompts(reqs)
+        batch = {"tokens": toks}
         if self.api.cfg.frontend is not None:
             n = self.api.cfg.frontend.n_tokens
             e = self.api.cfg.frontend.embed_dim
@@ -114,15 +317,16 @@ class ServeEngine:
             key = ("frames" if self.api.cfg.family == "audio"
                    else "mm_embeds")
             batch[key] = stub
-        logits, cache = self.api.prefill(params, batch, self.rt,
-                                         self.cfg.cache_len)
+        logits, cache = self._prefill(params, batch, self.rt,
+                                      self.cfg.cache_len)
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         steps = max(r.max_new_tokens for r in reqs)
         for _ in range(steps):
+            tok_np = np.asarray(tok).ravel()   # one host sync per step
             for j, r in enumerate(reqs):
                 if len(r.out_tokens) < r.max_new_tokens:
-                    r.out_tokens.append(int(tok[j, 0]))
-            logits, cache = self.api.decode_step(params, tok, cache, self.rt)
+                    r.out_tokens.append(int(tok_np[j]))
+            logits, cache = self._decode(params, tok, cache, self.rt)
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
 
     # ---------------- accounting ----------------
@@ -131,4 +335,6 @@ class ServeEngine:
         s = self.cache.stats.as_dict()
         s["n_swaps"] = len(self.swap_log)
         s["swap_seconds"] = sum(x["seconds"] for x in self.swap_log)
+        s["n_waves"] = len(self.wave_log)
+        s["admitted"] = sum(x["admitted"] for x in self.wave_log)
         return s

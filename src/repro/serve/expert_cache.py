@@ -2,17 +2,20 @@
 
 Three tiers mirror §1 of the paper:
 
-  ExpertStore   (disk/network tier)  — Golomb-coded ComPEFT blobs
+  ExpertStore   (disk/network tier)  — packed artifacts, or Golomb-coded
+                                       blobs (``cold_golomb=True``) decoded
+                                       on promotion in one vectorized pass
   HostCache     (CPU RAM tier)       — packed bitplane trees (2 bits/param)
   DeviceCache   (HBM tier, LRU)      — *packed* bitplane trees, bounded by a
                                        byte budget; evicts LRU
 
 The device tier is packed-resident: experts stay in the 2-bit bitplane form
-end-to-end and are merged into the base weights by the fused ``unpack_add``
-kernel at swap time.  Compared to the seed's dense-delta residency this fits
-~16x more experts into the same HBM budget (f32 deltas) and makes promotion
-a metadata move — the bytes that cross each tier boundary are always the
-compressed bytes, which is the paper's Table-5 claim.
+end-to-end.  Since PR 2 the cache also exposes **stacked plane buffers**
+(:meth:`DeviceCache.stacked`): for a set of resident experts, one
+``[E, words]`` buffer per leaf path that the batched serving kernels
+(``ternary_matmul_grouped`` / ``unpack_add_many``) consume directly — the
+zero-merge mixed-expert decode path never materialises merged parameters.
+Stacks are invalidated when a member is evicted.
 
 Swap cost accounting is explicit: every promotion records bytes moved, so
 benchmarks can report transmission bytes and load latency, and the engine
@@ -24,15 +27,18 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import OrderedDict
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import numpy as np
 
 from repro.core import tree_packed_bytes
+from repro.core.packing import stack_packed, stacked_bytes
 from repro.peft.task_vector import ExpertArtifact
 
 PyTree = Any
+
+BASE = "__base__"   # pseudo-expert: serve the unmodified base weights
 
 
 @dataclasses.dataclass
@@ -44,44 +50,112 @@ class SwapStats:
     hits: int = 0
     misses: int = 0
     seconds: float = 0.0
+    stack_builds: int = 0
+    stack_hits: int = 0
+    stack_bytes: int = 0
+    golomb_decode_seconds: float = 0.0
 
     def as_dict(self):
         return dataclasses.asdict(self)
 
 
 class ExpertStore:
-    """Cold tier: name -> ExpertArtifact (packed ternary; Golomb bytes are
-    the on-disk format via checkpoint.manager.export_expert)."""
+    """Cold tier: name -> ExpertArtifact.
 
-    def __init__(self):
+    ``cold_golomb=True`` stores Golomb-Rice streams (the paper's
+    storage-optimal wire format) instead of bitplanes; promotion then pays
+    one *batched* host-side decode over all leaves of the expert
+    (:func:`repro.core.golomb.decode_tree` — the vectorized codec, no
+    per-bit Python loops) before packing to device planes.
+    """
+
+    def __init__(self, cold_golomb: bool = False):
+        self.cold_golomb = cold_golomb
         self._store: dict[str, ExpertArtifact] = {}
+        self._blobs: dict[str, dict] = {}
+        self._meta: dict[str, dict] = {}
 
     def put(self, art: ExpertArtifact) -> None:
-        self._store[art.name] = art
+        if not self.cold_golomb:
+            self._store[art.name] = art
+            return
+        from repro.core import golomb
+        from repro.core.packing import signs_np
+        blobs, meta = {}, {}
+        flat = art.packed if isinstance(art.packed, dict) else None
+        assert flat is not None, "cold_golomb store expects {path: planes}"
+        for path, pt in flat.items():
+            blobs[path] = golomb.encode(signs_np(pt), float(pt.scale))
+            meta[path] = {"shape": tuple(pt.shape),
+                          "orig_dtype": pt.orig_dtype}
+        self._blobs[art.name] = blobs
+        self._meta[art.name] = {"leaf": meta, "kind": art.kind,
+                                "density": art.density, "alpha": art.alpha}
 
     def get(self, name: str) -> ExpertArtifact:
-        return self._store[name]
+        if not self.cold_golomb:
+            return self._store[name]
+        from repro.core import golomb
+        m = self._meta[name]
+        decoded = golomb.decode_tree(self._blobs[name])   # one batched pass
+        packed = {path: _planes_from_signs(signs, scale,
+                                           m["leaf"][path]["shape"],
+                                           m["leaf"][path]["orig_dtype"])
+                  for path, (signs, scale) in decoded.items()}
+        return ExpertArtifact(name=name, kind=m["kind"], packed=packed,
+                              density=m["density"], alpha=m["alpha"])
 
     def names(self):
-        return list(self._store)
+        return list(self._blobs if self.cold_golomb else self._store)
 
     def nbytes(self, name: str) -> int:
+        if self.cold_golomb:
+            return sum(len(b) for b in self._blobs[name].values())
         return self._store[name].nbytes
+
+
+def _planes_from_signs(signs: np.ndarray, scale: float,
+                       shape: tuple, orig_dtype) -> Any:
+    """Host int8 signs -> PackedTernary (np packbits, little-endian words)."""
+    import jax.numpy as jnp
+
+    from repro.core.packing import LANE, PackedTernary
+    n = signs.size
+    pad = (-n) % LANE
+    if pad:
+        signs = np.concatenate([signs, np.zeros((pad,), np.int8)])
+    pos = np.packbits(signs == 1, bitorder="little").view(np.uint32)
+    neg = np.packbits(signs == -1, bitorder="little").view(np.uint32)
+    return PackedTernary(pos=jnp.asarray(pos), neg=jnp.asarray(neg),
+                         scale=jnp.asarray(scale, jnp.float32),
+                         shape=tuple(shape), orig_dtype=orig_dtype)
 
 
 class DeviceCache:
     """LRU cache of *packed bitplane trees* under a byte budget (HBM
-    residency of ComPEFT experts; 2 bits/param instead of dense deltas)."""
+    residency of ComPEFT experts; 2 bits/param instead of dense deltas),
+    plus stacked per-path plane buffers for mixed-expert batches."""
+
+    MAX_STACKS = 4   # LRU bound on distinct expert-set stacks kept resident
 
     def __init__(self, store: ExpertStore, capacity_bytes: int):
         self.store = store
         self.capacity = capacity_bytes
         self._cache: OrderedDict[str, PyTree] = OrderedDict()
         self._sizes: dict[str, int] = {}
+        self._stacks: OrderedDict[tuple, dict] = OrderedDict()
         self.stats = SwapStats()
 
     def resident_bytes(self) -> int:
-        return sum(self._sizes.values())
+        """Packed trees + stacked buffers — everything under the budget."""
+        return sum(self._sizes.values()) + self.stats.stack_bytes
+
+    def _evict_one(self) -> None:
+        old, _ = self._cache.popitem(last=False)
+        self._sizes.pop(old)
+        self.stats.evictions += 1
+        for key in [k for k in self._stacks if old in k]:
+            self.stats.stack_bytes -= stacked_bytes(self._stacks.pop(key))
 
     def fetch(self, name: str) -> PyTree:
         """-> tree of PackedTernary, promoted to device-resident if needed."""
@@ -92,21 +166,52 @@ class DeviceCache:
         self.stats.misses += 1
         t0 = time.perf_counter()
         art = self.store.get(name)
-        self.stats.store_to_host_bytes += art.nbytes   # compressed transfer!
+        if self.store.cold_golomb:
+            self.stats.golomb_decode_seconds += time.perf_counter() - t0
+        self.stats.store_to_host_bytes += self.store.nbytes(name)
         packed = jax.tree_util.tree_map(
             jax.device_put, art.packed,
             is_leaf=lambda x: hasattr(x, "pos"))
         size = tree_packed_bytes(packed)
         while self._cache and (self.resident_bytes() + size > self.capacity):
-            old, _ = self._cache.popitem(last=False)
-            self._sizes.pop(old)
-            self.stats.evictions += 1
+            self._evict_one()
         self._cache[name] = packed
         self._sizes[name] = size
         self.stats.host_to_device_bytes += size        # packed, not dense
         self.stats.promotions += 1
         self.stats.seconds += time.perf_counter() - t0
         return packed
+
+    def stacked(self, names: tuple) -> dict:
+        """Stacked plane buffers for an ordered expert set (slot e = names[e]).
+
+        Returns {path: (pos [E, W], neg [E, W], scales [E], shape)}.  Built
+        from the resident packed trees (promoting as needed) and cached per
+        expert-set; eviction of any member invalidates the stack.  Unknown
+        names (e.g. ``__base__``) contribute all-zero slots.
+        """
+        key = tuple(names)
+        hit = self._stacks.get(key)
+        if hit is not None:
+            self._stacks.move_to_end(key)
+            self.stats.stack_hits += 1
+            return hit
+        # only the BASE sentinel maps to a zero slot; unknown names must
+        # fail loudly, exactly like the merge path's store.get
+        trees = [{} if n == BASE else self.fetch(n) for n in key]
+        stacks = stack_packed(trees)
+        while len(self._stacks) >= self.MAX_STACKS:
+            _, old = self._stacks.popitem(last=False)
+            self.stats.stack_bytes -= stacked_bytes(old)
+        self._stacks[key] = stacks
+        self.stats.stack_builds += 1
+        self.stats.stack_bytes += stacked_bytes(stacks)
+        return stacks
+
+    def has_stack(self, names: tuple) -> bool:
+        """True while the stack for this expert set is still resident (an
+        eviction of any member drops it — consumers must rebuild)."""
+        return tuple(names) in self._stacks
 
     def resident(self):
         return list(self._cache)

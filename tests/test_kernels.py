@@ -19,8 +19,8 @@ from repro.core.compeft import CompressedTensor
 from repro.kernels import ops, ref
 from repro.kernels.pack import pack_ternary_planes
 from repro.kernels.popcount_dot import popcount_dot
-from repro.kernels.ternary_matmul import ternary_matmul
-from repro.kernels.unpack_add import unpack_add
+from repro.kernels.ternary_matmul import ternary_matmul, ternary_matmul_grouped
+from repro.kernels.unpack_add import unpack_add, unpack_add_many
 
 LANE = 32
 
@@ -32,6 +32,11 @@ def rand_planes(key, m, n):
     neg = rng.integers(0, 2 ** 32, (m, n // LANE), dtype=np.uint32)
     neg = neg & ~pos  # disjoint
     return jnp.asarray(pos), jnp.asarray(neg)
+
+
+def rand_plane_stack(key, e, m, n):
+    ps, ns = zip(*[rand_planes(key + 17 * i, m, n) for i in range(e)])
+    return jnp.stack(ps), jnp.stack(ns)
 
 
 MATMUL_CASES = [
@@ -136,6 +141,154 @@ else:
     @pytest.mark.parametrize("seed", range(1, 9))
     def test_popcount_dot_property(seed):
         _popcount_dot_property(seed)
+
+
+# ---------------------------------------------------------------------------
+# Batched kernels (PR 2): stacked-plane variants must be bit-identical to
+# looping the single-expert kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,N,E,bm,bn", [(8, 64, 1, 8, 64),
+                                         (17, 96, 3, 8, 64),
+                                         (33, 160, 5, 16, 96)])
+def test_unpack_add_many_bit_identical_to_loop(M, N, E, bm, bn):
+    pos, neg = rand_plane_stack(10, E, M, N)
+    base = jnp.asarray(np.random.default_rng(11).normal(0, 1, (M, N)),
+                       jnp.bfloat16)
+    scales = jnp.asarray(np.random.default_rng(12).normal(0, 0.3, E),
+                         jnp.float32)
+    got = unpack_add_many(base, pos, neg, scales, bm=bm, bn=bn,
+                          interpret=True)
+    want = base
+    for e in range(E):
+        want = unpack_add(want, pos[e], neg[e], scales[e], bm=bm, bn=bn,
+                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+    # jnp mirror used by the CPU serve path agrees too
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_add_many_ref(base, pos, neg, scales),
+                   np.float32),
+        np.asarray(want, np.float32))
+
+
+def test_unpack_add_many_ragged_expert_set():
+    """Zero planes + zero scale slots (experts missing a leaf) are no-ops."""
+    M, N, E = 16, 64, 3
+    pos, neg = rand_plane_stack(13, E, M, N)
+    z = jnp.zeros_like(pos[0])
+    pos = pos.at[1].set(z)
+    neg = neg.at[1].set(z)
+    scales = jnp.asarray([0.5, 0.0, -0.25], jnp.float32)
+    base = jnp.asarray(np.random.default_rng(14).normal(0, 1, (M, N)),
+                       jnp.float32)
+    got = unpack_add_many(base, pos, neg, scales, bm=8, bn=64, interpret=True)
+    two = unpack_add(base, pos[0], neg[0], scales[0], bm=8, bn=64,
+                     interpret=True)
+    two = unpack_add(two, pos[2], neg[2], scales[2], bm=8, bn=64,
+                     interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(two))
+
+
+def test_unpack_add_small_shape_regression():
+    """N < LANE (and N % LANE != 0) used to break the bn % LANE assert."""
+    for M, N in [(5, 16), (8, 40), (3, 1)]:
+        n_words = -(-N // LANE)
+        pos, neg = rand_planes(20 + N, M, n_words * LANE)
+        mask = ((1 << (N % LANE)) - 1) if N % LANE else 0xFFFFFFFF
+        pos = pos.at[:, -1].set(pos[:, -1] & jnp.uint32(mask))
+        neg = neg.at[:, -1].set(neg[:, -1] & jnp.uint32(mask))
+        base = jnp.asarray(np.random.default_rng(21).normal(0, 1, (M, N)),
+                           jnp.float32)
+        got = unpack_add(base, pos, neg, jnp.float32(0.5), interpret=True)
+        want = ref.unpack_add_ref(base, pos, neg, jnp.float32(0.5))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ternary_matmul_small_bn_regression():
+    """A non-LANE-multiple bn is clamped, not asserted on."""
+    pos, neg = rand_planes(22, 64, 32)
+    x = jnp.asarray(np.random.default_rng(23).normal(0, 1, (4, 64)),
+                    jnp.float32)
+    got = ternary_matmul(x, pos, neg, jnp.float32(1.0), bm=4, bk=32, bn=48,
+                         interpret=True)
+    want = ref.ternary_matmul_ref(x, pos, neg, 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("M,K,N,E", [(8, 32, 32, 1), (13, 96, 64, 3),
+                                     (33, 64, 128, 4)])
+def test_grouped_matmul_bit_identical_to_single(M, K, N, E):
+    """Row-wise, the grouped kernel == the single-expert kernel run per
+    expert (same block shapes) with rows selected by expert id."""
+    pos, neg = rand_plane_stack(30, E, K, N)
+    x = jnp.asarray(np.random.default_rng(31).normal(0, 1, (M, K)),
+                    jnp.float32)
+    scales = jnp.asarray(np.random.default_rng(32).normal(0, 0.5, E),
+                         jnp.float32)
+    eid = jnp.asarray(np.random.default_rng(33).integers(0, E, M), jnp.int32)
+    kw = dict(bm=8, bk=32, bn=32, interpret=True)
+    got = ternary_matmul_grouped(x, pos, neg, scales, eid, **kw)
+    per = jnp.stack([ternary_matmul(x, pos[e], neg[e], scales[e], **kw)
+                     for e in range(E)])
+    want = per[eid, jnp.arange(M)]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_grouped_matmul_negative_rows_zero():
+    """expert_idx == -1 rows (base-only requests) get an exact zero delta."""
+    M, K, N, E = 9, 64, 64, 2
+    pos, neg = rand_plane_stack(34, E, K, N)
+    x = jnp.asarray(np.random.default_rng(35).normal(0, 1, (M, K)),
+                    jnp.float32)
+    eid = jnp.asarray([0, -1, 1, -1, 0, 1, -1, 0, 1], jnp.int32)
+    got = ternary_matmul_grouped(x, pos, neg, jnp.ones((E,), jnp.float32),
+                                 eid, bm=8, bk=32, bn=32, interpret=True)
+    assert np.all(np.asarray(got)[np.asarray(eid) < 0] == 0.0)
+
+
+def test_grouped_matmul_transposed_matches_ref():
+    """transpose_rhs consumes [E, N, ceil(K/32)] planes (tied LM head)."""
+    M, K, N, E = 7, 48, 64, 3           # K not a lane multiple
+    rng = np.random.default_rng(36)
+    n_words = -(-K // LANE)
+    ps, ns = [], []
+    mask = (1 << (K % LANE)) - 1 if K % LANE else 0xFFFFFFFF
+    for e in range(E):
+        p, n = rand_planes(40 + e, N, n_words * LANE)
+        ps.append(p.at[:, -1].set(p[:, -1] & jnp.uint32(mask)))
+        ns.append(n.at[:, -1].set(n[:, -1] & jnp.uint32(mask)))
+    pos, neg = jnp.stack(ps), jnp.stack(ns)
+    x = jnp.asarray(rng.normal(0, 1, (M, K)), jnp.float32)
+    scales = jnp.asarray(rng.normal(0, 0.5, E), jnp.float32)
+    eid = jnp.asarray(rng.integers(0, E, M), jnp.int32)
+    got = ternary_matmul_grouped(x, pos, neg, scales, eid,
+                                 transpose_rhs=True, bm=8, bk=32, bn=32,
+                                 interpret=True)
+    want = ref.ternary_matmul_grouped_ref(x, pos, neg, scales, eid,
+                                          transpose_rhs=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_grouped_ref_mixed_rows_equal_single_expert_runs():
+    """The jnp serve-path mirror: a mixed batch is row-wise bitwise what
+    single-expert batches produce (the engine's parity contract)."""
+    M, K, N, E = 12, 64, 96, 3
+    pos, neg = rand_plane_stack(50, E, K, N)
+    x = jnp.asarray(np.random.default_rng(51).normal(0, 1, (M, K)),
+                    jnp.float32)
+    scales = jnp.asarray([0.3, -0.7, 1.1], jnp.float32)
+    eid = jnp.asarray(np.random.default_rng(52).integers(0, E, M), jnp.int32)
+    mixed = ref.ternary_matmul_grouped_ref(x, pos, neg, scales, eid)
+    single = jnp.stack([
+        ref.ternary_matmul_grouped_ref(x, pos[e:e + 1], neg[e:e + 1],
+                                       scales[e:e + 1],
+                                       jnp.zeros((M,), jnp.int32))
+        for e in range(E)])
+    np.testing.assert_array_equal(np.asarray(mixed),
+                                  np.asarray(single[eid, jnp.arange(M)]))
 
 
 def test_ops_integration_with_compressed_tensor():

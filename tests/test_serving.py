@@ -80,6 +80,7 @@ def test_packed_residency_capacity_multiplier():
 
 
 def test_engine_end_to_end_multi_expert():
+    """Default (mixed) scheduling: heterogeneous waves, ZERO merges."""
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
@@ -98,8 +99,255 @@ def test_engine_end_to_end_multi_expert():
         assert len(r.out_tokens) == 4
         assert all(0 <= t < cfg.vocab for t in r.out_tokens)
     s = eng.swap_summary()
-    assert s["n_swaps"] == 2           # one merge per expert
+    assert s["n_swaps"] == 0           # zero-merge hot path
+    assert s["n_waves"] >= 1
+    assert s["stack_builds"] >= 1
     assert s["store_to_host_bytes"] > 0
+
+
+def test_engine_grouped_mode_still_merges():
+    """scheduling='grouped' keeps the PR-1 merge-on-swap baseline."""
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    store = make_experts(api, base, n=2)
+    eng = ServeEngine(api, RT, base, store,
+                      EngineConfig(max_batch=4, cache_len=48,
+                                   scheduling="grouped"))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, expert=f"expert{i % 2}",
+                    prompt=jnp.asarray(rng.integers(1, cfg.vocab, 12),
+                                       jnp.int32), max_new_tokens=4)
+            for i in range(6)]
+    eng.run(reqs)
+    s = eng.swap_summary()
+    assert s["n_swaps"] == 2           # one merge per expert
+    assert s["n_waves"] == 0
+    for r in reqs:
+        assert len(r.out_tokens) == 4
+
+
+def test_mixed_wave_bit_identical_to_sequential():
+    """The tentpole correctness contract: a mixed-expert wave produces
+    exactly the tokens each request gets when its expert is served alone
+    through the same zero-merge path."""
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    store = make_experts(api, base, n=3, scale=0.03)
+    rng = np.random.default_rng(1)
+    prompts = [jnp.asarray(rng.integers(1, cfg.vocab, 10), jnp.int32)
+               for _ in range(6)]
+
+    def mk():
+        return [Request(uid=i, expert=f"expert{i % 3}", prompt=prompts[i],
+                        max_new_tokens=4) for i in range(6)]
+
+    eng = ServeEngine(api, RT, base, store,
+                      EngineConfig(max_batch=6, cache_len=48))
+    mixed = mk()
+    eng.run(mixed)
+
+    eng2 = ServeEngine(api, RT, base, store,
+                       EngineConfig(max_batch=6, cache_len=48))
+    seq = mk()
+    for e in range(3):
+        eng2.run([r for r in seq if r.expert == f"expert{e}"])
+    assert ({r.uid: r.out_tokens for r in mixed}
+            == {r.uid: r.out_tokens for r in seq})
+
+
+def test_mixed_wave_base_rows():
+    """__base__ requests ride in a mixed wave with a zero delta."""
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    store = make_experts(api, base, n=1, scale=0.05)
+    rng = np.random.default_rng(2)
+    prompt = jnp.asarray(rng.integers(1, cfg.vocab, 10), jnp.int32)
+    reqs = [Request(uid=0, expert="__base__", prompt=prompt,
+                    max_new_tokens=4),
+            Request(uid=1, expert="expert0", prompt=prompt,
+                    max_new_tokens=4)]
+    eng = ServeEngine(api, RT, base, store,
+                      EngineConfig(max_batch=2, cache_len=48))
+    eng.run(reqs)
+    solo = Request(uid=2, expert="__base__", prompt=prompt, max_new_tokens=4)
+    eng2 = ServeEngine(api, RT, base, store,
+                       EngineConfig(max_batch=2, cache_len=48))
+    eng2.run([solo])
+    assert reqs[0].out_tokens == solo.out_tokens
+    assert eng.swap_summary()["n_swaps"] == 0
+
+
+def test_continuous_admission_refills_slots():
+    """More requests than batch slots: finished rows are refilled in place
+    (one wave, spliced prefills) instead of starting fresh waves."""
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    store = make_experts(api, base, n=2)
+    rng = np.random.default_rng(3)
+    reqs = [Request(uid=i, expert=f"expert{i % 2}",
+                    prompt=jnp.asarray(rng.integers(1, cfg.vocab, 8),
+                                       jnp.int32),
+                    max_new_tokens=2 + (i % 3))
+            for i in range(7)]
+    eng = ServeEngine(api, RT, base, store,
+                      EngineConfig(max_batch=3, cache_len=64))
+    eng.run(reqs)
+    for r in reqs:
+        assert len(r.out_tokens) == r.max_new_tokens
+        assert all(0 <= t < cfg.vocab for t in r.out_tokens)
+    s = eng.swap_summary()
+    assert s["admitted"] >= 1
+    assert s["n_swaps"] == 0
+
+
+def test_unsupported_family_falls_back_to_merge():
+    """A family the overlay cannot express (MoE) serves via merge-on-swap
+    even under mixed scheduling."""
+    cfg = get_smoke_config("mixtral_8x7b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    store = make_experts(api, base, n=2, scale=0.02)
+    eng = ServeEngine(api, RT, base, store,
+                      EngineConfig(max_batch=4, cache_len=48))
+    assert eng._plan is None
+    rng = np.random.default_rng(4)
+    reqs = [Request(uid=i, expert=f"expert{i % 2}",
+                    prompt=jnp.asarray(rng.integers(1, cfg.vocab, 8),
+                                       jnp.int32), max_new_tokens=2)
+            for i in range(4)]
+    eng.run(reqs)
+    for r in reqs:
+        assert len(r.out_tokens) == 2
+    assert eng.swap_summary()["n_swaps"] == 2   # fallback merged per expert
+
+
+def test_merged_ensemble_single_sweep():
+    """unpack_add_many consumer: W + sum_e a_e D_e in one sweep equals
+    applying the scaled experts one at a time."""
+    from repro.kernels.ops import apply_ternary_delta_flat
+    from repro.core.packing import PackedTernary
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    store = make_experts(api, base, n=3, scale=0.03)
+    eng = ServeEngine(api, RT, base, store, EngineConfig(cache_len=32))
+    weights = [0.5, 1.0, 0.25]
+    got = eng.merged_ensemble_params([f"expert{i}" for i in range(3)],
+                                     weights)
+
+    from repro.peft.lora import _path_str
+    flat, treedef = jax.tree_util.tree_flatten_with_path(base)
+    want = []
+    packs = [store.get(f"expert{i}").packed for i in range(3)]
+    for path, leaf in flat:
+        ps = _path_str(path)
+        acc = leaf
+        for pk, w in zip(packs, weights):
+            if ps in pk:
+                pt = pk[ps]
+                scaled = PackedTernary(pos=pt.pos, neg=pt.neg,
+                                       scale=pt.scale * w, shape=pt.shape,
+                                       orig_dtype=pt.orig_dtype)
+                acc = apply_ternary_delta_flat(acc, scaled)
+        want.append(acc)
+    want = jax.tree_util.tree_unflatten(treedef, want)
+    for g, w in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g, np.float32),
+                                      np.asarray(w, np.float32))
+
+
+def test_golomb_cold_store_roundtrip():
+    """cold_golomb store tier: promotion decodes all leaves in one batched
+    pass and reproduces the exact packed planes."""
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    warm = make_experts(api, base, n=1)
+    art = warm.get("expert0")
+    from repro.serve import ExpertStore
+    cold = ExpertStore(cold_golomb=True)
+    cold.put(art)
+    assert cold.nbytes("expert0") < art.nbytes     # golomb < bitplanes
+    back = cold.get("expert0")
+    for path, pt in art.packed.items():
+        bpt = back.packed[path]
+        np.testing.assert_array_equal(np.asarray(pt.pos),
+                                      np.asarray(bpt.pos))
+        np.testing.assert_array_equal(np.asarray(pt.neg),
+                                      np.asarray(bpt.neg))
+        np.testing.assert_allclose(float(pt.scale), float(bpt.scale),
+                                   rtol=1e-6)
+
+
+def test_admitted_row_keeps_first_token():
+    """Regression: a slot-refilled request's first generated token is the
+    argmax of its (left-padded) prefill — it must not be dropped."""
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    store = make_experts(api, base, n=2, scale=0.03)
+    rng = np.random.default_rng(5)
+    pa = jnp.asarray(rng.integers(1, cfg.vocab, 8), jnp.int32)
+    pb = jnp.asarray(rng.integers(1, cfg.vocab, 6), jnp.int32)
+    a = Request(uid=0, expert="expert0", prompt=pa, max_new_tokens=1)
+    b = Request(uid=1, expert="expert1", prompt=pb, max_new_tokens=2)
+    eng = ServeEngine(api, RT, base, store,
+                      EngineConfig(max_batch=1, cache_len=32))
+    eng.run([a, b])
+    assert eng.swap_summary()["admitted"] == 1
+
+    # expected: B prefilled left-padded to cur=8 (A's prompt len, A decoded
+    # 0 steps past prefill), then one decode step — through the same
+    # zero-merge overlay
+    overlay = eng._overlay_for(("expert0", "expert1"))
+    eid = jnp.asarray([1], jnp.int32)
+    padded = jnp.pad(pb, (8 - pb.shape[0], 0), constant_values=1)[None]
+    logits, cache = api.prefill(base, {"tokens": padded}, RT, 32,
+                                delta=overlay, eid=eid)
+    t1 = int(jnp.argmax(logits[0, -1]))
+    logits2, _ = api.decode_step(base, jnp.asarray([[t1]], jnp.int32),
+                                 cache, RT, delta=overlay, eid=eid)
+    t2 = int(jnp.argmax(logits2[0, -1]))
+    assert b.out_tokens == [t1, t2]
+
+
+def test_mixed_unknown_expert_raises():
+    """A typo'd expert name must fail loudly under mixed scheduling, not
+    silently serve base weights (only __base__ gets the zero slot)."""
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    store = make_experts(api, base, n=1)
+    eng = ServeEngine(api, RT, base, store,
+                      EngineConfig(max_batch=2, cache_len=32))
+    bad = Request(uid=0, expert="expert_9",
+                  prompt=jnp.ones((6,), jnp.int32), max_new_tokens=2)
+    with pytest.raises(KeyError):
+        eng.run([bad])
+
+
+def test_stacked_buffers_invalidated_on_eviction():
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    store = make_experts(api, base, n=3)
+    from repro.serve import DeviceCache
+    one = store.get("expert0").nbytes
+    cache = DeviceCache(store, capacity_bytes=int(one * 2.5))
+    cache.stacked(("expert0", "expert1"))
+    assert cache.stats.stack_builds == 1
+    cache.stacked(("expert0", "expert1"))
+    assert cache.stats.stack_hits == 1
+    cache.fetch("expert2")                 # evicts expert0 -> stack dropped
+    assert cache.stats.evictions >= 1
+    assert cache.stats.stack_bytes == 0
+    cache.stacked(("expert0", "expert1"))  # rebuilt
+    assert cache.stats.stack_builds == 2
 
 
 def test_packed_swap_bitwise_matches_dense_path():
