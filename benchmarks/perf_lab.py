@@ -180,21 +180,25 @@ def _synth_expert(n_params=50_000_000, seed=0):
 def exp_compress_swap():
     """Tentpole measurement: single-pass streaming compression vs the seed
     per-leaf quantile path, and packed-resident vs dense-resident expert
-    capacity/swap parity, on CPU interpret mode."""
-    from repro.core import (CompressionConfig, compress, compress_packed,
-                            pack_tree, tree_packed_bytes)
+    capacity/swap parity, on CPU interpret mode — expert lifecycle through
+    ``repro.api`` (method='exact' is the seed path, 'streaming' the PR-1
+    pipeline)."""
+    from repro import api as capi
+    from repro.expert import PACKED
     from repro.kernels.ops import apply_ternary_delta_flat
-    from repro.peft import compress_expert
-    from repro.serve import DeviceCache, ExpertStore
 
-    cfg = CompressionConfig(density=0.05, alpha=1.0)
+    density, alpha = 0.05, 1.0
     tau, n_params = _synth_expert()
     rec = {"tag": "compress_swap", "n_params": n_params,
-           "density": cfg.density}
+           "density": density}
 
     # --- compression throughput: seed per-leaf loop vs streaming ---------
-    t_seed, packed_seed = _time(lambda: pack_tree(compress(tau, cfg)), reps=2)
-    t_stream, packed_new = _time(lambda: compress_packed(tau, cfg), reps=2)
+    t_seed, packed_seed = _time(
+        lambda: capi.compress(tau, density=density, alpha=alpha,
+                              method="exact").as_(PACKED), reps=2)
+    t_stream, packed_new = _time(
+        lambda: capi.compress(tau, density=density, alpha=alpha,
+                              method="streaming").as_(PACKED), reps=2)
     rec["compress_seed_s"] = t_seed
     rec["compress_stream_s"] = t_stream
     rec["compress_speedup_x"] = t_seed / t_stream
@@ -204,18 +208,18 @@ def exp_compress_swap():
                                    float(packed_seed[k].scale), rtol=1e-4)
 
     # --- packed-resident capacity under a fixed HBM budget ---------------
-    store = ExpertStore()
+    registry = capi.registry()
     small = {k: v[:512, :512] for k, v in list(tau.items())[:2]}
     n_experts = 24
     for i in range(n_experts):
         rng = np.random.default_rng(100 + i)
         e = {k: v + jnp.asarray(rng.normal(0, 0.01, v.shape), jnp.float32)
              for k, v in small.items()}
-        store.put(compress_expert(f"e{i}", "full", e, density=0.05,
-                                  alpha=1.0))
+        registry.add(capi.compress(e, name=f"e{i}", density=density,
+                                   alpha=alpha))
     dense_bytes = sum(int(np.prod(v.shape)) * 4 for v in small.values())
     budget = int(dense_bytes * 1.5)        # seed layout: one dense expert
-    cache = DeviceCache(store, capacity_bytes=budget)
+    cache = registry.device(budget)
     for i in range(n_experts):
         cache.fetch(f"e{i}")
     rec["budget_bytes"] = budget
@@ -225,7 +229,7 @@ def exp_compress_swap():
                                     / rec["resident_dense_equiv"])
 
     # --- swap latency + numerical parity: fused plane merge vs dense -----
-    art = store.get("e0")
+    art = registry.get("e0")
     base = {k: jnp.asarray(np.random.default_rng(1).normal(0, 1, v.shape),
                            jnp.float32) for k, v in small.items()}
 
@@ -247,7 +251,7 @@ def exp_compress_swap():
     rec["swap_packed_s"] = t_packed
     rec["swap_dense_s"] = t_dense
     rec["swap_bitwise_identical"] = True
-    rec["packed_expert_bytes"] = tree_packed_bytes(art.packed)
+    rec["packed_expert_bytes"] = art.nbytes(PACKED)
     rec["dense_expert_bytes"] = dense_bytes
 
     save_raw("compress_swap", [rec])
@@ -266,21 +270,19 @@ def exp_compress_swap():
 
 
 def _serve_fixture(n_experts=4, density=0.2, scale=0.02):
-    """Smoke LM + a store of ComPEFT experts (fake fine-tunes of base)."""
+    """Smoke LM + ComPEFT Expert artifacts (fake fine-tunes of base)."""
     import jax
     import jax.numpy as jnp
 
+    from repro import api as capi
     from repro.configs import get_smoke_config
     from repro.models import Runtime, build
-    from repro.peft import compress_expert, task_vector
-    from repro.peft.lora import _path_str
-    from repro.serve import ExpertStore
 
     rt = Runtime(attn_chunk_q=16, attn_chunk_k=16, remat_policy="none")
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
-    store = ExpertStore()
+    experts = []
     for i in range(n_experts):
         leaves, tdef = jax.tree_util.tree_flatten(base)
         keys = jax.random.split(jax.random.PRNGKey(100 + i), len(leaves))
@@ -288,12 +290,9 @@ def _serve_fixture(n_experts=4, density=0.2, scale=0.02):
             (l.astype(jnp.float32)
              + scale * jax.random.normal(k, l.shape)).astype(l.dtype)
             for l, k in zip(leaves, keys)])
-        tau = task_vector(base, ft)
-        flat, _ = jax.tree_util.tree_flatten_with_path(tau)
-        store.put(compress_expert(f"expert{i}", "full",
-                                  {_path_str(p): l for p, l in flat},
-                                  density=density, alpha=1.0))
-    return api, rt, cfg, base, store
+        experts.append(capi.compress(base, ft, name=f"expert{i}",
+                                     density=density, alpha=1.0))
+    return api, rt, cfg, base, experts
 
 
 def exp_mixed_serve(smoke: bool = False):
@@ -310,13 +309,14 @@ def exp_mixed_serve(smoke: bool = False):
     """
     import jax.numpy as jnp
 
-    from repro.serve import EngineConfig, Request, ServeEngine
+    from repro import api as capi
+    from repro.serve import Request
 
     n_experts = 4
     n_reqs = 8 if smoke else 16
     max_new = 4 if smoke else 8
     prompt_len = 12
-    api, rt, cfg, base, store = _serve_fixture(n_experts=n_experts)
+    api, rt, cfg, base, experts = _serve_fixture(n_experts=n_experts)
     rng = np.random.default_rng(0)
     prompts = [jnp.asarray(rng.integers(1, cfg.vocab, prompt_len), jnp.int32)
                for _ in range(n_reqs)]
@@ -328,9 +328,11 @@ def exp_mixed_serve(smoke: bool = False):
                 for i in range(n_reqs)]
 
     def run(scheduling):
-        ecfg = EngineConfig(max_batch=n_reqs, cache_len=64,
-                            scheduling=scheduling)
-        eng = ServeEngine(api, rt, base, store, ecfg)
+        # fresh registry per run: each engine gets its own device tier, so
+        # swap stats and promotions are not shared across measurements
+        eng = capi.serve(api, rt, base, capi.registry(experts=experts),
+                         max_batch=n_reqs, cache_len=64,
+                         scheduling=scheduling)
         # warm pass with the identical workload: compiles every step
         # executable both paths will use, so the timed pass is steady-state
         eng.run(mk_reqs())
@@ -359,8 +361,8 @@ def exp_mixed_serve(smoke: bool = False):
 
     # correctness: mixed wave == sequential per-expert zero-merge serving
     reqs_seq = mk_reqs()
-    eng_s = ServeEngine(api, rt, base, store,
-                        EngineConfig(max_batch=n_reqs, cache_len=64))
+    eng_s = capi.serve(api, rt, base, capi.registry(experts=experts),
+                       max_batch=n_reqs, cache_len=64)
     for e in range(n_experts):
         eng_s.run([r for r in reqs_seq if r.expert == f"expert{e}"])
     tok_mixed = {r.uid: r.out_tokens for r in reqs_mixed}

@@ -19,16 +19,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api as capi
 from repro.configs import get_smoke_config
-from repro.core import (ALPHA_GRID, CompressionConfig, compress,
-                        compression_summary, decompress, entropy_bits,
-                        golomb_total_bits, pack_tree, tree_packed_bytes)
+from repro.core import ALPHA_GRID, golomb_total_bits, rescale
 from repro.core.baselines import METHODS, method_bits, run_method
 from repro.core.golomb import decode as golomb_decode
 from repro.core.golomb import encode as golomb_encode
-from repro.core.merging import (compose_lora, lorahub_search, task_arithmetic,
-                                ties_merge)
+from repro.core.merging import compose_lora, lorahub_search
 from repro.data.pipeline import eval_loss, make_batch_for
+from repro.expert import PACKED, TERNARY
 from repro.models import Runtime, build
 from repro.peft import LoraConfig, apply_lora, init_lora, task_vector
 from repro.train import TrainConfig, init_train_state, make_train_step
@@ -123,9 +122,10 @@ def bench_compression_ratio(quick=False):
         l_orig = expert_eval(cfg, api, base, lcfg, experts[task][1], task)
         l_base = expert_eval(cfg, api, base, lcfg, experts[task][0], task)
         for k in (0.05, 0.1, 0.2, 0.3, 0.5):
-            comp = compress(tau, CompressionConfig(density=k, alpha=1.0))
-            summ = compression_summary(tau, comp)
-            lora_hat = apply_tau(experts, task, decompress(comp))
+            ex = capi.compress(tau, name=f"task{task}_k{k}", kind="lora",
+                               density=k, alpha=1.0)
+            summ = ex.summary()
+            lora_hat = apply_tau(experts, task, ex.to_dense_tau())
             l_comp = expert_eval(cfg, api, base, lcfg, lora_hat, task)
             results[f"task{task}_k{k}"] = {
                 "ratio_entropy": summ["compression_x_entropy"],
@@ -197,9 +197,9 @@ def bench_alpha_sweep(quick=False):
     t0 = time.perf_counter()
     grid = ALPHA_GRID if not quick else (0.5, 1.0, 2.0, 4.0)
     for k in (0.05, 0.2, 0.5):
-        comp = compress(tau, CompressionConfig(density=k, alpha=1.0))
+        from repro.core import decompress
+        comp = capi.compress(tau, density=k, alpha=1.0).as_(TERNARY)
         for a in grid:
-            from repro.core import rescale
             th = decompress(rescale(comp, 1.0, a))
             l = expert_eval(cfg, api, base, lcfg,
                             apply_tau(experts, task, th), task)
@@ -224,8 +224,8 @@ def bench_transmission_latency(quick=False):
     results = {}
     t0 = time.perf_counter()
     for k in (0.05, 0.2):
-        comp = compress(tau, CompressionConfig(density=k))
-        packed = pack_tree(comp)
+        ex = capi.compress(tau, density=k)
+        comp = ex.as_(TERNARY)
         dense_bytes = sum(l.size * 2 for l in jax.tree_util.tree_leaves(tau))
         golomb_bytes = 0
         enc_t = dec_t = 0.0
@@ -243,11 +243,11 @@ def bench_transmission_latency(quick=False):
         results[f"k{k}"] = {
             "dense_bytes": dense_bytes,
             "golomb_bytes": golomb_bytes,
-            "bitplane_bytes": tree_packed_bytes(packed),
+            "bitplane_bytes": ex.nbytes(PACKED),
             "net_s_dense": dense_bytes / 125e6,
             "net_s_comp": golomb_bytes / 125e6,
             "pcie_ms_dense": dense_bytes / 16e9 * 1e3,
-            "pcie_ms_comp": tree_packed_bytes(packed) / 16e9 * 1e3,
+            "pcie_ms_comp": ex.nbytes(PACKED) / 16e9 * 1e3,
             "encode_s": enc_t, "decode_s": dec_t,
         }
     us = (time.perf_counter() - t0) * 1e6 / len(results)
@@ -267,9 +267,8 @@ def bench_merging(quick=False):
     cfg, api, base, lcfg, experts = setup(quick)
     tasks = (1, 2, 3)
     taus = [tau_of(experts, t) for t in tasks]
-    comp_taus = [decompress(compress(t, CompressionConfig(density=0.2,
-                                                          alpha=1.0)))
-                 for t in taus]
+    arts = [capi.compress(t, name=f"task{i}", kind="lora", density=0.2,
+                          alpha=1.0) for i, t in enumerate(taus)]
 
     def avg_loss(tau_merged):
         losses = []
@@ -280,10 +279,11 @@ def bench_merging(quick=False):
 
     t0 = time.perf_counter()
     results = {
-        "ta_raw": avg_loss(task_arithmetic(taus, lam=0.7)),
-        "ta_compeft": avg_loss(task_arithmetic(comp_taus, lam=0.7)),
-        "ties_raw": avg_loss(ties_merge(taus, density=0.3, lam=0.7)),
-        "ties_compeft": avg_loss(ties_merge(comp_taus, density=0.3, lam=0.7)),
+        "ta_raw": avg_loss(capi.merge(taus, "task_arithmetic", lam=0.7)),
+        "ta_compeft": avg_loss(capi.merge(arts, "task_arithmetic", lam=0.7)),
+        "ties_raw": avg_loss(capi.merge(taus, "ties", lam=0.7, density=0.3)),
+        "ties_compeft": avg_loss(capi.merge(arts, "ties", lam=0.7,
+                                            density=0.3)),
         "zero": avg_loss(jax.tree_util.tree_map(jnp.zeros_like, taus[0])),
     }
     us = (time.perf_counter() - t0) * 1e6 / len(results)
@@ -308,7 +308,7 @@ def bench_pareto(quick=False):
         "bytes": n * 2,
         "loss": expert_eval(cfg, api, base, lcfg, experts[task][1], task)}}
     for k in (0.05, 0.2):
-        th = decompress(compress(tau, CompressionConfig(density=k)))
+        th = capi.compress(tau, density=k).to_dense_tau()
         results[f"comlora_k{k}"] = {
             "bytes": golomb_total_bits(n, k) / 8,
             "loss": expert_eval(cfg, api, base, lcfg,
@@ -330,7 +330,7 @@ def bench_pareto(quick=False):
         "loss": eval_loss(api, apply_ia3(base, ia3), RT, cfg, task,
                           n_batches=2, seq_len=48, global_batch=8)}
     tau_i = task_vector(init_ia3(base), ia3)
-    th = decompress(compress(tau_i, CompressionConfig(density=0.2)))
+    th = capi.compress(tau_i, density=0.2).to_dense_tau()
     ia3_hat = jax.tree_util.tree_map(
         lambda a, d: a + d, init_ia3(base), th)
     results["comia3_k0.2"] = {
@@ -353,7 +353,7 @@ def bench_lorahub(quick=False):
     cfg, api, base, lcfg, experts = setup(quick)
     unseen = 100  # mixture of tasks 1-3: solvable by composition
     modules_raw = [tau_of(experts, t) for t in (1, 2, 3)]
-    modules_comp = [decompress(compress(t, CompressionConfig(density=0.2)))
+    modules_comp = [capi.compress(t, density=0.2).to_dense_tau()
                     for t in modules_raw]
 
     def few_shot_loss(tau_comb):

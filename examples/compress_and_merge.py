@@ -1,6 +1,6 @@
 """Expert algebra on compressed artifacts: Task Arithmetic, TIES merging and
-LoraHub-style few-shot composition over ComPEFT-compressed task vectors
-(paper §3.6/3.7).
+LoraHub-style few-shot composition over ComPEFT ``Expert`` artifacts
+(paper §3.6/3.7), through the ``repro.api`` facade.
 
     PYTHONPATH=src python examples/compress_and_merge.py
 """
@@ -9,14 +9,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api as capi
 from repro.configs import get_smoke_config
-from repro.core import CompressionConfig, compress, decompress, pack_tree
-from repro.core.merging import (compose_lora, lorahub_search, merge_packed,
-                                pairwise_similarity_matrix, task_arithmetic,
-                                ties_merge)
+from repro.core.merging import lorahub_search, pairwise_similarity_matrix
 from repro.data.pipeline import eval_loss, make_batch_for
+from repro.expert import PACKED
 from repro.models import Runtime, build
-from repro.peft import LoraConfig, apply_lora, init_lora, task_vector
+from repro.peft import LoraConfig, apply_lora, init_lora
 
 RT = Runtime(attn_chunk_q=16, attn_chunk_k=16, remat_policy="none")
 
@@ -44,20 +43,21 @@ def main():
         experts[task] = (lora0, lora)
         print(f"expert {task} trained")
 
-    taus = {t: task_vector(*experts[t]) for t in experts}
-    comp = {t: compress(taus[t], CompressionConfig(density=0.2))
-            for t in taus}
-    packed = {t: pack_tree(comp[t]) for t in comp}
+    # one Expert artifact per task: tau = lora - lora0, Algorithm 1
+    arts = {t: capi.compress(experts[t][0], experts[t][1],
+                             name=f"task{t}", kind="lora", density=0.2)
+            for t in experts}
 
     print("\nexpert similarity (popcount cosine):")
-    sim = pairwise_similarity_matrix(list(packed.values()))
+    sim = pairwise_similarity_matrix([a.as_(PACKED) for a in arts.values()])
     print(np.round(sim, 3))
 
     print("\nmerging (lower eval loss on each task is better):")
-    merged_ta = task_arithmetic([decompress(comp[t]) for t in comp], lam=0.7)
-    merged_ties = ties_merge([decompress(comp[t]) for t in comp],
+    merged_ta = capi.merge(list(arts.values()), method="task_arithmetic",
+                           lam=0.7)
+    merged_ties = capi.merge(list(arts.values()), method="ties",
                              density=0.3, lam=0.7)
-    merged_fast = merge_packed(list(packed.values()), lam=0.7)
+    merged_fast = capi.merge(list(arts.values()), method="packed", lam=0.7)
     for name, m in (("task-arithmetic", merged_ta), ("ties", merged_ties),
                     ("packed-TA (bitplane fast path)", merged_fast)):
         losses = []
@@ -72,7 +72,7 @@ def main():
         print(f"  {name:32s}: avg loss {np.mean(losses):.4f}")
 
     print("\nLoraHub few-shot composition for unseen mixture task 100:")
-    mods = [decompress(comp[t]) for t in comp]
+    mods = [arts[t].to_dense_tau() for t in arts]
 
     def few_shot(tc):
         lora_c = jax.tree_util.tree_map(

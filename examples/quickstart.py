@@ -1,19 +1,21 @@
-"""Quickstart: ComPEFT in 60 seconds.
+"""Quickstart: ComPEFT in 60 seconds, through the ``repro.api`` facade.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Compresses a task vector with Algorithm 1, shows the storage accounting
-(entropy / Golomb / bitplanes), round-trips the Golomb codec, and runs the
-bitwise expert-similarity ops.
+One ``Expert`` artifact moves across the whole representation lattice —
+DENSE (task vector) -> TERNARY -> PACKED (2-bit bitplanes) -> GOLOMB
+(wire format) — with storage accounting at every stop, plus the bitwise
+expert-similarity ops and a save/load round trip.
 """
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import os
+import tempfile
 
-from repro.core import (CompressionConfig, compress, compression_summary,
-                        decompress, pack_tree, tree_packed_bytes)
-from repro.core.golomb import decode, encode
+import numpy as np
+import jax.numpy as jnp
+
+from repro import api
+from repro.expert import DENSE, GOLOMB, PACKED, TERNARY
 from repro.core.ternary_ops import cosine_similarity, scaled_dot
 
 
@@ -26,8 +28,8 @@ def main():
                                     jnp.float32)}
 
     print("== Algorithm 1: sparsify + ternary-quantize (k=5%, alpha=1) ==")
-    comp = compress(tau, CompressionConfig(density=0.05, alpha=1.0))
-    s = compression_summary(tau, comp)
+    ex = api.compress(tau, name="quickstart", density=0.05, alpha=1.0)
+    s = ex.summary()
     print(f"  params            : {s['n_params']:,}")
     print(f"  surviving (nnz)   : {s['nnz']:,}  (density {s['density']:.3f})")
     print(f"  dense bf16        : {s['dense_bits']/8/1024:.1f} KiB")
@@ -37,24 +39,29 @@ def main():
           f"({s['compression_x_bitplane']:.1f}x)")
     print(f"  reconstruction err: {s['rel_recon_err']:.3f} (relative)")
 
-    print("\n== Golomb codec round-trip (storage format) ==")
-    leaf = comp["layer0/wq"]
-    blob = encode(np.asarray(leaf.signs), float(leaf.scale))
-    back, scale = decode(blob)
-    assert (back == np.asarray(leaf.signs).reshape(-1)).all()
-    print(f"  encoded {leaf.signs.size:,} ternary values -> {len(blob):,} "
-          f"bytes (exact round-trip OK)")
+    print("\n== Representation lattice (one artifact, four forms) ==")
+    for rep in (DENSE, TERNARY, PACKED, GOLOMB):
+        print(f"  nbytes({rep:7s})   : {ex.nbytes(rep):,}")
+
+    print("\n== Golomb round trip (storage format) ==")
+    out = os.path.join(tempfile.gettempdir(), "quickstart_expert.npz")
+    stats = ex.save(out)
+    back = api.load(out)
+    pt, bpt = ex.packed["layer0/wq"], back.packed["layer0/wq"]
+    assert (np.asarray(pt.pos) == np.asarray(bpt.pos)).all()
+    assert (np.asarray(pt.neg) == np.asarray(bpt.neg)).all()
+    print(f"  saved {out}: {stats['compressed_bytes']:,} bytes "
+          f"({stats['ratio']:.1f}x vs bf16); save/load round-trip exact")
 
     print("\n== Bitwise expert algebra (AND/XOR + POPCNT) ==")
-    packed = pack_tree(comp)
-    a = packed["layer0/wq"]
-    print(f"  packed bytes       : {tree_packed_bytes(packed):,}")
+    a = ex.packed["layer0/wq"]
+    print(f"  packed bytes       : {ex.nbytes(PACKED):,}")
     print(f"  self cosine        : {float(cosine_similarity(a, a)):.3f}")
     print(f"  self scaled dot    : {float(scaled_dot(a, a)):.3e}")
 
-    print("\n== Decompress -> dense delta ==")
-    dense = decompress(comp)
-    vals = np.unique(np.asarray(dense['layer0/wq']))
+    print("\n== Reconstruct -> dense delta ==")
+    dense = ex.to_dense_tau()
+    vals = np.unique(np.asarray(dense["layer0/wq"]))
     print(f"  unique values in reconstructed leaf: {vals}")
     print("\nOK")
 

@@ -1,8 +1,10 @@
-"""End-to-end multi-expert serving driver — the paper's headline scenario.
+"""End-to-end multi-expert serving driver — the paper's headline scenario,
+through the ``repro.api`` facade.
 
-Builds a base model + several ComPEFT-compressed experts, then serves a
-mixed batch of requests through the LRU expert cache, reporting swap bytes
-vs the uncompressed baseline (paper Table 5 quantities).
+Builds a base model + several ComPEFT-compressed experts in an
+``ExpertRegistry``, then serves a mixed batch of requests through the
+zero-merge engine, reporting swap bytes vs the uncompressed baseline
+(paper Table 5 quantities).
 
     PYTHONPATH=src python examples/serve_experts.py [--experts 4] [--requests 12]
 """
@@ -14,12 +16,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api as capi
 from repro.configs import get_smoke_config
+from repro.expert import GOLOMB, PACKED
 from repro.models import Runtime, build
-from repro.peft import compress_expert, task_vector
-from repro.peft.lora import _path_str
-from repro.serve import (EngineConfig, ExpertStore, Request, ServeEngine,
-                         uncompressed_baseline_bytes)
+from repro.serve import Request, uncompressed_baseline_bytes
 
 RT = Runtime(attn_chunk_q=16, attn_chunk_k=16, remat_policy="none")
 
@@ -36,7 +37,7 @@ def main():
     base = api.init(jax.random.PRNGKey(0))
 
     # expert library: base + per-task deltas, ComPEFT-compressed
-    store = ExpertStore()
+    registry = capi.registry()
     for i in range(args.experts):
         leaves, tdef = jax.tree_util.tree_flatten(base)
         keys = jax.random.split(jax.random.PRNGKey(100 + i), len(leaves))
@@ -44,20 +45,16 @@ def main():
             (l.astype(jnp.float32)
              + 0.01 * jax.random.normal(k, l.shape)).astype(l.dtype)
             for l, k in zip(leaves, keys)])
-        tau = task_vector(base, ft)
-        flat, _ = jax.tree_util.tree_flatten_with_path(tau)
-        art = compress_expert(f"expert{i}", "full",
-                              {_path_str(p): l for p, l in flat},
-                              density=args.density, alpha=1.0)
-        store.put(art)
+        ex = registry.add(capi.compress(base, ft, name=f"expert{i}",
+                                        density=args.density, alpha=1.0))
         if i == 0:
-            dense = uncompressed_baseline_bytes(art)
-            print(f"expert artifact: {art.nbytes:,} B compressed vs "
-                  f"{dense:,} B dense bf16 ({dense/art.nbytes:.1f}x)")
+            dense = uncompressed_baseline_bytes(ex)
+            print(f"expert artifact: {ex.nbytes(PACKED):,} B packed "
+                  f"({ex.nbytes(GOLOMB):,} B on the wire) vs "
+                  f"{dense:,} B dense bf16 ({dense/ex.nbytes(PACKED):.1f}x)")
 
-    engine = ServeEngine(api, RT, base, store,
-                         EngineConfig(max_batch=4, cache_len=64,
-                                      device_cache_bytes=1 << 26))
+    engine = capi.serve(api, RT, base, registry, max_batch=4, cache_len=64,
+                        device_cache_bytes=1 << 26)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i, expert=f"expert{i % args.experts}",
                     prompt=jnp.asarray(rng.integers(1, cfg.vocab, 16),
@@ -78,7 +75,7 @@ def main():
                                    'store_to_host_bytes',
                                    'host_to_device_bytes', 'n_swaps',
                                    'n_waves', 'admitted', 'stack_builds')})
-    dense_equiv = uncompressed_baseline_bytes(store.get("expert0")) * 2
+    dense_equiv = uncompressed_baseline_bytes(registry.get("expert0")) * 2
     print(f"wire bytes per miss: {dense_equiv:,} dense f32 baseline vs "
           f"{s['store_to_host_bytes'] // max(s['misses'],1):,} compressed "
           f"(experts stay packed on device: "

@@ -1,6 +1,6 @@
-"""Train a LoRA expert, compress it with ComPEFT, export the Golomb
+"""Train a LoRA expert, compress it with ComPEFT, save the Golomb
 artifact, and verify the reconstructed expert — the full expert production
-pipeline (paper §2 + §3.1 at CPU scale).
+pipeline (paper §2 + §3.1 at CPU scale) on the ``repro.api`` facade.
 
     PYTHONPATH=src python examples/train_expert.py [--steps 60] [--task 1]
 """
@@ -12,11 +12,11 @@ import tempfile
 import jax
 import jax.numpy as jnp
 
+from repro import api as capi
 from repro.configs import get_smoke_config
 from repro.data.pipeline import eval_loss, make_batch_for
 from repro.models import Runtime, build
-from repro.peft import LoraConfig, apply_lora, init_lora, task_vector
-from repro.checkpoint.manager import export_expert, import_expert
+from repro.peft import LoraConfig, apply_lora, init_lora
 from repro.train import LoopConfig, TrainConfig, make_train_step, train_loop
 
 RT = Runtime(attn_chunk_q=16, attn_chunk_k=16, remat_policy="none")
@@ -59,18 +59,21 @@ def main():
             print(f"  lora step {s}: loss "
                   f"{float(loss_fn(lora, b)):.4f}")
 
-    # 3) compress + export the expert artifact
+    # 3) compress + save the expert artifact (Golomb wire format)
     out = os.path.join(tempfile.gettempdir(), "expert_task%d.npz" % args.task)
-    stats = export_expert(lora0, lora, out, density=args.density, alpha=1.0)
-    print(f"exported {out}: {stats['compressed_bytes']:,} bytes "
+    expert = capi.compress(lora0, lora, name=f"task{args.task}", kind="lora",
+                           density=args.density, alpha=1.0)
+    stats = expert.save(out)
+    print(f"saved {out}: {stats['compressed_bytes']:,} bytes "
           f"({stats['ratio']:.1f}x smaller than bf16 dense)")
 
-    # 4) re-import and verify quality
-    taus, _ = import_expert(out)
+    # 4) re-load and verify quality
+    taus = capi.load(out).as_path_dict("dense")
     from repro.peft.lora import _path_str
     flat, tdef = jax.tree_util.tree_flatten_with_path(lora0)
     lora_hat = jax.tree_util.tree_unflatten(tdef, [
-        (l.astype(jnp.float32) + taus[_path_str(p)].reshape(l.shape)
+        (l.astype(jnp.float32)
+         + jnp.asarray(taus[_path_str(p)], jnp.float32).reshape(l.shape)
          ).astype(l.dtype) for p, l in flat])
 
     for name, lp in (("base (no expert)", lora0), ("fine-tuned", lora),

@@ -1,0 +1,124 @@
+"""repro.api — the front door for the ComPEFT expert lifecycle.
+
+One import gives the whole paper workflow (compress → store → merge →
+serve) over the first-class :class:`repro.expert.Expert` artifact:
+
+    from repro import api
+    from repro.expert import DENSE, TERNARY, PACKED, GOLOMB
+
+    ex = api.compress(tau, name="math", density=0.05, alpha=1.0)
+    ex.nbytes(PACKED)              # 2 bits/param bitplanes
+    ex.save("math.npz")            # Golomb wire format
+
+    reg = api.registry()           # ExpertStore + DeviceCache tiers
+    reg.add(ex)
+
+    merged_tau = api.merge([ex_a, ex_b], method="ties", lam=0.7)
+
+    engine = api.serve(model, rt, base_params, reg,
+                       max_batch=8, cache_len=128)
+    engine.run(requests)
+
+Everything here is a thin dispatch layer: compression is Algorithm 1
+(``repro.core``), merging is §3.6/3.7 (``repro.core.merging``), serving is
+the zero-merge mixed-expert engine (``repro.serve``).  The legacy entry
+points (``compress_expert``, ``checkpoint.export_expert`` /
+``import_expert``, ``ServeEngine(…, ExpertStore, …)``) keep working for
+one release with deprecation warnings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+from repro.expert import (DENSE, GOLOMB, PACKED, REPRESENTATIONS, TERNARY,
+                          Expert)
+
+PyTree = Any
+
+__all__ = ["Expert", "DENSE", "TERNARY", "PACKED", "GOLOMB",
+           "REPRESENTATIONS", "compress", "merge", "registry", "serve",
+           "load", "save"]
+
+
+def compress(tau_or_init: PyTree, theta_ft: Optional[PyTree] = None, *,
+             name: str = "expert", kind: str = "full", density: float = 0.05,
+             alpha: float = 1.0, per_tensor: bool = True,
+             method: str = "streaming", meta: Optional[dict] = None
+             ) -> Expert:
+    """Algorithm 1 as an artifact: compress a task vector into an Expert.
+
+    Call with a task vector (``compress(tau)``) or a fine-tune pair
+    (``compress(theta_init, theta_ft)``); the latter forms ``tau =
+    theta_ft - theta_init`` first.  ``method='streaming'`` (default) is the
+    single-pass histogram-quantile + batched-pack pipeline;
+    ``method='exact'`` the sort-based per-leaf numerics oracle.
+    Compression itself is lazy — it runs on the first ``as_`` /
+    ``.packed`` / ``save`` access.
+    """
+    kw = dict(name=name, kind=kind, density=density, alpha=alpha,
+              per_tensor=per_tensor, method=method, meta=meta)
+    if theta_ft is not None:
+        return Expert.from_finetune(tau_or_init, theta_ft, **kw)
+    return Expert.from_task_vector(tau_or_init, **kw)
+
+
+def merge(experts: Sequence[Any], method: str = "auto", lam: float = 1.0,
+          density: float = 0.2, *, name: Optional[str] = None,
+          as_expert: bool = False, **compress_kw) -> PyTree:
+    """Merge experts (Task Arithmetic / TIES / packed-bitplane TA).
+
+    Dispatches by representation — see
+    :func:`repro.core.merging.merge_experts`.  Returns the merged dense
+    task-vector tree, or (``as_expert=True``) a freshly-compressed
+    :class:`Expert` named ``name``.
+    """
+    from repro.core.merging import merge_experts
+    tau = merge_experts(experts, method=method, lam=lam, density=density)
+    if not as_expert:
+        return tau
+    compress_kw.setdefault("density", density)
+    return compress(tau, name=name or "merged", **compress_kw)
+
+
+def registry(store=None, *, cold_golomb: bool = False,
+             device_cache_bytes: Optional[int] = None,
+             experts: Sequence[Any] = ()) -> "ExpertRegistry":
+    """A fresh :class:`~repro.serve.expert_cache.ExpertRegistry` (cold
+    store + lazy HBM tier), optionally pre-populated with ``experts``."""
+    from repro.serve.expert_cache import DEFAULT_DEVICE_BYTES, ExpertRegistry
+    reg = ExpertRegistry(
+        store, cold_golomb=cold_golomb,
+        device_cache_bytes=device_cache_bytes or DEFAULT_DEVICE_BYTES)
+    for e in experts:
+        reg.add(e)
+    return reg
+
+
+def serve(model, rt, base_params: PyTree, reg, cfg=None,
+          **engine_kw) -> "ServeEngine":
+    """A :class:`~repro.serve.engine.ServeEngine` over a registry.
+
+    ``model`` is the :class:`~repro.models.model.ModelApi` from
+    ``repro.models.build``; ``cfg`` an
+    :class:`~repro.serve.engine.EngineConfig` (or pass its fields as
+    keyword arguments, e.g. ``max_batch=8, cache_len=128``).
+    """
+    from repro.serve.engine import EngineConfig, ServeEngine
+    if cfg is None:
+        cfg = EngineConfig(**engine_kw)
+    elif engine_kw:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **engine_kw)
+    return ServeEngine(model, rt, base_params, reg, cfg)
+
+
+def load(path: str, name: Optional[str] = None) -> Expert:
+    """Read an expert artifact npz (new format or legacy
+    ``checkpoint.export_expert`` files)."""
+    return Expert.load(path, name=name)
+
+
+def save(expert: Expert, path: str) -> dict:
+    """Write ``expert`` as the Golomb wire artifact; returns size stats."""
+    return expert.save(path)

@@ -121,49 +121,38 @@ def _gc(ckpt_dir: str, keep: int) -> None:
 
 def export_expert(theta_init: PyTree, theta_ft: PyTree, out_path: str,
                   density: float = 0.05, alpha: float = 1.0) -> dict:
-    """Compress theta_ft - theta_init with Algorithm 1 and write a Golomb
-    stream per leaf.  Returns size accounting.  This IS the paper: the
-    artifact shipped between store/CPU/accelerator tiers.
+    """DEPRECATED: use ``repro.api.compress(init, ft).save(path)``.
 
-    Compression runs through ``compress_packed`` — the single-pass
-    streaming pipeline (histogram-quantile thresholds + one batched pack
-    launch over every leaf) — so dense int8 signs exist only transiently on
-    the host, per leaf, on the way into the vectorized Golomb encoder.
+    Thin shim over :meth:`repro.expert.Expert.save`: same Golomb npz
+    artifact (the streaming ``compress_packed`` pipeline feeding the
+    vectorized encoder), same size-accounting return value.
     """
-    from repro.core.packing import signs_np
-    from repro.peft.task_vector import task_vector
-    tau = task_vector(theta_init, theta_ft)
-    packed = compress_packed(tau, CompressionConfig(density=density,
-                                                    alpha=alpha))
-    flat, _ = jax.tree_util.tree_flatten_with_path(
-        packed, is_leaf=lambda x: hasattr(x, "pos"))
-    blobs = {}
-    manifest = {"density": density, "alpha": alpha, "leaves": []}
-    dense_bytes = 0
-    for i, (p, pt) in enumerate(flat):
-        ps = _path_str(p)
-        blob = golomb.encode(signs_np(pt), float(pt.scale))
-        key = f"e{i}_{_san(ps)[:80]}"
-        blobs[key] = np.frombuffer(blob, np.uint8)
-        manifest["leaves"].append({"path": ps, "key": key,
-                                   "shape": list(pt.shape),
-                                   "dtype": str(jnp.dtype(pt.orig_dtype))})
-        dense_bytes += pt.n_elements * 2  # bf16 baseline
-    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
-    np.savez(out_path, manifest=json.dumps(manifest), **blobs)
-    comp_bytes = sum(b.nbytes for b in blobs.values())
-    return {"dense_bytes": dense_bytes, "compressed_bytes": comp_bytes,
-            "ratio": dense_bytes / max(comp_bytes, 1)}
+    import warnings
+
+    from repro.expert import Expert
+    warnings.warn("checkpoint.export_expert is deprecated; use "
+                  "repro.api.compress(theta_init, theta_ft).save(path)",
+                  DeprecationWarning, stacklevel=2)
+    ex = Expert.from_finetune(theta_init, theta_ft,
+                              name=os.path.splitext(
+                                  os.path.basename(out_path))[0],
+                              density=density, alpha=alpha)
+    return ex.save(out_path)
 
 
 def import_expert(path: str) -> tuple[dict, dict]:
-    """-> ({param_path: dense tau leaf}, manifest)."""
-    data = np.load(path)
-    manifest = json.loads(str(data["manifest"]))
-    out = {}
-    for leaf in manifest["leaves"]:
-        blob = data[leaf["key"]].tobytes()
-        signs, scale = golomb.decode(blob)
-        out[leaf["path"]] = (signs.reshape(leaf["shape"]).astype(np.float32)
-                             * scale)
-    return out, manifest
+    """DEPRECATED: use ``repro.api.load(path)`` (an Expert).
+
+    -> ({param_path: dense tau leaf}, manifest) — the legacy contract,
+    served through :meth:`repro.expert.Expert.load`.
+    """
+    import warnings
+
+    from repro.expert import DENSE, Expert
+    warnings.warn("checkpoint.import_expert is deprecated; use "
+                  "repro.api.load(path)", DeprecationWarning, stacklevel=2)
+    ex = Expert.load(path)
+    out = {p: np.asarray(l, np.float32).reshape(
+               ex._leaf_meta[p]["shape"])
+           for p, l in ex.as_(DENSE).items()}
+    return out, ex._manifest

@@ -60,6 +60,60 @@ def ties_merge(taus: Sequence[PyTree], density: float = 0.2,
     return jax.tree_util.tree_map(merge_leaf, *taus)
 
 
+def merge_experts(experts: Sequence[Any], method: str = "auto",
+                  lam: float = 1.0, density: float = 0.2) -> PyTree:
+    """Representation-aware merging over :class:`repro.expert.Expert`
+    artifacts (or raw task-vector / packed trees).
+
+    Dispatch:
+
+    * ``"task_arithmetic"`` — dense Task Arithmetic (Ilharco et al. 2023);
+      Experts contribute their ternary reconstruction ``tau_tilde`` (the
+      artifact is what merges — paper §3.6).
+    * ``"ties"`` — TIES-Merging (trim -> elect sign -> disjoint mean) on
+      dense trees; ``density`` is the TIES trim fraction.
+    * ``"packed"`` — Task Arithmetic straight on the ternary bitplanes
+      (:func:`merge_packed`, the paper's "faster merging" claim), no full
+      decompression.
+    * ``"auto"`` — ``"packed"`` when every input is already packed-resident
+      (an Expert holding only compressed forms, or a PackedTernary tree),
+      else dense ``"task_arithmetic"``.
+
+    Returns a dense task-vector pytree (what every consumer — apply /
+    re-compress / eval — takes).
+    """
+    from repro.expert import DENSE, PACKED, Expert, as_expert
+
+    # normalize legacy ExpertArtifact inputs (anything carrying .packed)
+    experts = [as_expert(e) if (not isinstance(e, Expert)
+                                and hasattr(e, "packed")) else e
+               for e in experts]
+
+    def is_packed_resident(e):
+        if isinstance(e, Expert):
+            return PACKED in e.available() and DENSE not in e.available()
+        leaves = jax.tree_util.tree_leaves(
+            e, is_leaf=lambda x: isinstance(x, PackedTernary))
+        return bool(leaves) and all(isinstance(l, PackedTernary)
+                                    for l in leaves)
+
+    if method == "auto":
+        method = ("packed" if all(is_packed_resident(e) for e in experts)
+                  else "task_arithmetic")
+    if method == "packed":
+        packed = [e.as_(PACKED) if isinstance(e, Expert) else e
+                  for e in experts]
+        return merge_packed(packed, lam=lam)
+    dense = [e.to_dense_tau() if isinstance(e, Expert) else e
+             for e in experts]
+    if method in ("task_arithmetic", "ta"):
+        return task_arithmetic(dense, lam=lam)
+    if method == "ties":
+        return ties_merge(dense, density=density, lam=lam)
+    raise ValueError(f"unknown merge method {method!r}; choose "
+                     "task_arithmetic | ties | packed | auto")
+
+
 def merge_packed(packed_taus: Sequence[PyTree], lam: float = 1.0) -> PyTree:
     """Task Arithmetic over *packed* ternary trees without full decompression.
 

@@ -46,7 +46,8 @@ def make_sp_decode_attn(mesh: Mesh, global_batch: Optional[int] = None
     """
     from repro.distributed.sharding import batch_axes, decode_layout
 
-    def sp_attn(q, k_new, v_new, cache_k, cache_v, pos, cur, attn_cfg):
+    def sp_attn(q, k_new, v_new, cache_k, cache_v, pos, cur, attn_cfg,
+                start=None):
         B = q.shape[0]
         gb = global_batch if global_batch is not None else B
         baxes, seq_axes = decode_layout(mesh, gb)
@@ -81,7 +82,7 @@ def make_sp_decode_attn(mesh: Mesh, global_batch: Optional[int] = None
             pos_loc = jnp.where(in_range, pos_upd, pos_loc)
 
             o, m, l = decode_attention_partial(q, ck, cv, pos_loc, cur,
-                                               attn_cfg)
+                                               attn_cfg, start=start)
             out = flash_combine((o, m, l), seq_axes)
             return out[:, None].astype(q.dtype), ck, cv, pos_loc
 

@@ -1,0 +1,384 @@
+"""First-class ComPEFT expert artifact: one expert, many representations.
+
+ComPEFT's value proposition (paper §3, Algorithm 1) is that a single expert
+exists in several forms and moves between them cheaply:
+
+    DENSE ──compress──> TERNARY ──pack──> PACKED ──encode──> GOLOMB
+      ^                    |                 |                  |
+      └────decompress──────┴─────unpack──────┴──────decode──────┘
+
+* ``DENSE``   — pytree of f32 task-vector leaves (``tau = theta_ft -
+  theta_init``), or its reconstruction ``tau_tilde = signs * scale`` when
+  the expert was built from a compressed form.
+* ``TERNARY`` — pytree of :class:`~repro.core.compeft.CompressedTensor`
+  (int8 signs + one scalar; the device-compute-friendly oracle form).
+* ``PACKED``  — pytree of :class:`~repro.core.packing.PackedTernary`
+  (2 bits/param bitplanes; what the serving cache keeps resident and the
+  Pallas kernels consume).
+* ``GOLOMB``  — ``{path: bytes}`` Golomb-Rice streams (the storage/wire
+  format; host-side codec).
+
+:class:`Expert` carries name/kind/config metadata and realises each
+representation lazily via :meth:`Expert.as_`.  Every transition is a thin
+wrapper over the pre-existing paths (``compress`` / ``compress_packed`` /
+``pack_tree`` / the vectorized Golomb codec), so results are bit-identical
+to calling those functions by hand.  :meth:`Expert.save` /
+:meth:`Expert.load` unify the ``checkpoint.export_expert`` npz format and
+the ``ExpertStore`` cold-Golomb tier — one on-disk artifact, readable by
+both old and new entry points.
+
+The facade in :mod:`repro.api` builds on this class; the serving stack's
+:class:`~repro.serve.expert_cache.ExpertRegistry` stores and promotes
+Experts across its tiers.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+# Representation lattice, cheapest-to-reconstruct first.
+DENSE = "dense"
+TERNARY = "ternary"
+PACKED = "packed"
+GOLOMB = "golomb"
+REPRESENTATIONS = (DENSE, TERNARY, PACKED, GOLOMB)
+
+_FORMAT = "compeft-expert-v1"
+
+
+def _path_str(path) -> str:
+    from repro.peft.lora import _path_str as f
+    return f(path)
+
+
+def _flatten(tree: PyTree, is_leaf=None) -> dict[str, Any]:
+    """Canonical {path: leaf} view of any pytree (dicts keep their keys)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+    return {_path_str(p): l for p, l in flat}
+
+
+def _is_ct(x) -> bool:
+    from repro.core.compeft import CompressedTensor
+    return isinstance(x, CompressedTensor)
+
+
+def _is_pt(x) -> bool:
+    from repro.core.packing import PackedTernary
+    return isinstance(x, PackedTernary)
+
+
+def planes_from_signs(signs: np.ndarray, scale: float, shape: tuple,
+                      orig_dtype) -> Any:
+    """Host int8 {-1,0,1} signs -> PackedTernary (np packbits, LE words)."""
+    from repro.core.packing import LANE, PackedTernary
+    signs = np.asarray(signs).reshape(-1)
+    pad = (-signs.size) % LANE
+    if pad:
+        signs = np.concatenate([signs, np.zeros((pad,), np.int8)])
+    pos = np.packbits(signs == 1, bitorder="little").view(np.uint32)
+    neg = np.packbits(signs == -1, bitorder="little").view(np.uint32)
+    return PackedTernary(pos=jnp.asarray(pos), neg=jnp.asarray(neg),
+                        scale=jnp.asarray(scale, jnp.float32),
+                        shape=tuple(shape), orig_dtype=orig_dtype)
+
+
+def _np_dtype(name: str):
+    return jnp.bfloat16 if name == "bfloat16" else np.dtype(name)
+
+
+class Expert:
+    """A named ComPEFT expert with lazily-realised representations.
+
+    Construct with :meth:`from_task_vector` / :meth:`from_finetune` (dense
+    input), :meth:`from_packed` (serving artifacts) or :meth:`load` (disk).
+    ``as_(rep)`` returns the expert in the requested representation,
+    converting (and caching) along the lattice as needed.
+    """
+
+    def __init__(self, name: str, kind: str = "full", *,
+                 density: float = 0.0, alpha: float = 1.0,
+                 per_tensor: bool = True, method: str = "streaming",
+                 meta: Optional[dict] = None):
+        self.name = name
+        self.kind = kind                   # "lora" | "ia3" | "full"
+        self.density = density
+        self.alpha = alpha
+        self.per_tensor = per_tensor
+        self.method = method               # "streaming" | "exact"
+        self.meta = dict(meta or {})
+        self._reps: dict[str, Any] = {}
+        # per-leaf geometry, required to rebuild planes from Golomb streams
+        self._leaf_meta: dict[str, dict] = {}
+        self._manifest: Optional[dict] = None   # raw on-disk manifest (load)
+
+    # ---------------- constructors ----------------
+
+    @classmethod
+    def from_task_vector(cls, tau: PyTree, *, name: str = "expert",
+                         kind: str = "full", density: float = 0.05,
+                         alpha: float = 1.0, per_tensor: bool = True,
+                         method: str = "streaming",
+                         meta: Optional[dict] = None) -> "Expert":
+        """Wrap a dense task vector; compression happens on first ``as_``."""
+        if method not in ("streaming", "exact"):
+            raise ValueError(f"unknown compression method {method!r}")
+        ex = cls(name, kind, density=density, alpha=alpha,
+                 per_tensor=per_tensor, method=method, meta=meta)
+        ex._reps[DENSE] = tau
+        return ex
+
+    @classmethod
+    def from_finetune(cls, theta_init: PyTree, theta_ft: PyTree,
+                      **kw) -> "Expert":
+        """tau = theta_ft - theta_init (paper §2), then as from_task_vector."""
+        from repro.peft.task_vector import task_vector
+        return cls.from_task_vector(task_vector(theta_init, theta_ft), **kw)
+
+    @classmethod
+    def from_packed(cls, name: str, kind: str, packed: PyTree, *,
+                    density: float = 0.0, alpha: float = 1.0,
+                    meta: Optional[dict] = None) -> "Expert":
+        """Adopt an existing tree of PackedTernary (legacy artifacts)."""
+        ex = cls(name, kind, density=density, alpha=alpha, meta=meta)
+        ex._reps[PACKED] = packed
+        return ex
+
+    # ---------------- representation lattice ----------------
+
+    def available(self) -> tuple[str, ...]:
+        """Representations already realised (no conversion cost)."""
+        return tuple(r for r in REPRESENTATIONS if r in self._reps)
+
+    def as_(self, rep: str) -> PyTree:
+        """The expert in representation ``rep`` (converted and cached).
+
+        DENSE/TERNARY/PACKED come back as pytrees mirroring the source
+        structure; GOLOMB is a flat ``{path: bytes}`` dict.  All transitions
+        are bit-identical to the legacy ``compress`` / ``compress_packed``
+        / ``pack_tree`` / Golomb-codec paths they wrap.
+        """
+        if rep not in REPRESENTATIONS:
+            raise ValueError(f"unknown representation {rep!r}; "
+                             f"choose from {REPRESENTATIONS}")
+        if rep not in self._reps:
+            self._reps[rep] = self._realize(rep)
+        return self._reps[rep]
+
+    def _realize(self, rep: str) -> PyTree:
+        from repro.core import (CompressionConfig, compress, compress_packed,
+                                decompress, pack_tree, unpack_tree)
+        have = self._reps
+        if rep == PACKED:
+            if TERNARY in have:
+                return pack_tree(have[TERNARY])
+            if DENSE in have:
+                cfg = self._ccfg()
+                if self.method == "exact":
+                    return pack_tree(self.as_(TERNARY))
+                return compress_packed(have[DENSE], cfg)
+            if GOLOMB in have:
+                return self._decode_golomb()
+            raise ValueError(f"expert {self.name!r} holds no representation")
+        if rep == TERNARY:
+            if PACKED in have:
+                return unpack_tree(have[PACKED])
+            if DENSE in have:
+                if self.method == "streaming":
+                    return unpack_tree(self.as_(PACKED))
+                return compress(have[DENSE], self._ccfg())
+            return unpack_tree(self.as_(PACKED))
+        if rep == DENSE:
+            # lossy inverse: reconstruction tau_tilde = signs * scale
+            return decompress(self.as_(TERNARY))
+        if rep == GOLOMB:
+            return self._encode_golomb()
+        raise AssertionError(rep)
+
+    def _ccfg(self):
+        from repro.core import CompressionConfig
+        if not (0.0 < self.density <= 1.0):
+            raise ValueError(
+                f"expert {self.name!r} was not given a compression density; "
+                "pass density= at construction to compress a dense tau")
+        return CompressionConfig(density=self.density, alpha=self.alpha,
+                                 per_tensor=self.per_tensor)
+
+    def _encode_golomb(self) -> dict[str, bytes]:
+        from repro.core import golomb
+        from repro.core.packing import signs_np
+        blobs = {}
+        for path, pt in self.packed.items():
+            blobs[path] = golomb.encode(signs_np(pt), float(pt.scale))
+            self._leaf_meta.setdefault(path, {
+                "shape": tuple(pt.shape),
+                "orig_dtype": pt.orig_dtype,
+            })
+        return blobs
+
+    def _decode_golomb(self) -> dict[str, Any]:
+        """One batched host decode over every leaf (vectorized codec)."""
+        from repro.core import golomb
+        decoded = golomb.decode_tree(self._reps[GOLOMB])
+        out = {}
+        for path, (signs, scale) in decoded.items():
+            m = self._leaf_meta[path]
+            out[path] = planes_from_signs(signs, scale, m["shape"],
+                                          m["orig_dtype"])
+        return out
+
+    # ---------------- serving views ----------------
+
+    def as_path_dict(self, rep: str = PACKED) -> dict[str, Any]:
+        """Flat ``{path: leaf}`` view of ``as_(rep)`` (paths match the base
+        parameter tree's ``_path_str`` flattening)."""
+        tree = self.as_(rep)
+        if rep == GOLOMB:
+            return dict(tree)
+        is_leaf = (_is_pt if rep == PACKED
+                   else _is_ct if rep == TERNARY else None)
+        return _flatten(tree, is_leaf=is_leaf)
+
+    @property
+    def packed(self) -> dict[str, Any]:
+        """Flat ``{path: PackedTernary}`` — the form the serving tiers and
+        merge kernels consume (canonical view of ``as_(PACKED)``)."""
+        return self.as_path_dict(PACKED)
+
+    def to_dense_tau(self) -> PyTree:
+        """Reconstructed dense task vector ``tau_tilde = signs * scale``
+        (the ``ExpertArtifact`` contract — always the reconstruction, even
+        when the original dense tau is cached)."""
+        from repro.core import decompress
+        return decompress(self.as_(TERNARY))
+
+    # ---------------- accounting ----------------
+
+    def nbytes(self, rep: str = PACKED) -> int:
+        """Byte size of one representation (default: the packed artifact —
+        the ``ExpertArtifact.nbytes`` contract)."""
+        from repro.core import tree_packed_bytes
+        tree = self.as_(rep)
+        if rep == DENSE:
+            return sum(l.size * jnp.dtype(l.dtype).itemsize
+                       for l in jax.tree_util.tree_leaves(tree))
+        if rep == TERNARY:
+            return sum(c.signs.size + 4 for c in
+                       jax.tree_util.tree_leaves(tree, is_leaf=_is_ct))
+        if rep == PACKED:
+            return tree_packed_bytes(tree)
+        return sum(len(b) for b in tree.values())          # GOLOMB
+
+    def summary(self) -> dict:
+        """Diagnostics (subsumes ``compression_summary``): density, bit
+        accounting per representation, reconstruction error when the
+        original dense tau is on hand."""
+        from repro.core import compression_summary
+        from repro.core.packing import golomb_total_bits
+        tern = self.as_(TERNARY)
+        if DENSE in self._reps:
+            s = compression_summary(self._reps[DENSE], tern)
+        else:
+            comps = jax.tree_util.tree_leaves(tern, is_leaf=_is_ct)
+            n = sum(int(np.prod(c.shape)) for c in comps)
+            nnz = sum(int(jnp.sum(jnp.abs(c.signs).astype(jnp.int32)))
+                      for c in comps)
+            s = {"n_params": n, "nnz": nnz, "density": nnz / max(n, 1),
+                 "dense_bits": 16 * n, "rel_recon_err": None}
+        s["name"] = self.name
+        s["kind"] = self.kind
+        s["bytes"] = {r: self.nbytes(r) for r in self.available()}
+        s["bytes"][PACKED] = self.nbytes(PACKED)
+        s.setdefault("golomb_bits",
+                     golomb_total_bits(s["n_params"],
+                                       max(s["density"], 1e-12)))
+        return s
+
+    def __repr__(self) -> str:
+        return (f"Expert(name={self.name!r}, kind={self.kind!r}, "
+                f"density={self.density}, alpha={self.alpha}, "
+                f"reps={list(self.available())})")
+
+    # ---------------- persistence ----------------
+
+    def save(self, path: str) -> dict:
+        """Write the storage-optimal (Golomb) artifact as one npz.
+
+        The format is a superset of the legacy ``checkpoint.export_expert``
+        layout — files written here load through the old ``import_expert``
+        and vice versa.  Returns size accounting ``{dense_bytes,
+        compressed_bytes, ratio}`` (same contract as ``export_expert``).
+        """
+        blobs = self.as_(GOLOMB)
+        packed = self.packed
+        manifest = {"format": _FORMAT, "name": self.name, "kind": self.kind,
+                    "density": self.density, "alpha": self.alpha,
+                    "meta": self.meta, "leaves": []}
+        arrays, dense_bytes = {}, 0
+        san = _sanitize
+        for i, (p, blob) in enumerate(blobs.items()):
+            key = f"e{i}_{san(p)[:80]}"
+            arrays[key] = np.frombuffer(blob, np.uint8)
+            pt = packed[p]
+            manifest["leaves"].append({
+                "path": p, "key": key, "shape": list(pt.shape),
+                "dtype": str(jnp.dtype(pt.orig_dtype))})
+            dense_bytes += pt.n_elements * 2       # bf16 wire baseline
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        np.savez(path, manifest=json.dumps(manifest), **arrays)
+        comp_bytes = sum(a.nbytes for a in arrays.values())
+        return {"dense_bytes": dense_bytes, "compressed_bytes": comp_bytes,
+                "ratio": dense_bytes / max(comp_bytes, 1)}
+
+    @classmethod
+    def load(cls, path: str, name: Optional[str] = None) -> "Expert":
+        """Read an expert npz — new-format or legacy ``export_expert``
+        files alike.  Decoding to planes is deferred to the first ``as_``.
+        """
+        data = np.load(path)
+        manifest = json.loads(str(data["manifest"]))
+        legacy = manifest.get("format") != _FORMAT
+        ex = cls(
+            name or manifest.get("name")
+            or os.path.splitext(os.path.basename(path))[0],
+            manifest.get("kind", "full"),
+            density=manifest.get("density", 0.0),
+            alpha=manifest.get("alpha", 1.0),
+            meta=manifest.get("meta", {"legacy_format": True} if legacy
+                              else {}),
+        )
+        blobs = {}
+        for leaf in manifest["leaves"]:
+            blobs[leaf["path"]] = data[leaf["key"]].tobytes()
+            ex._leaf_meta[leaf["path"]] = {
+                "shape": tuple(leaf["shape"]),
+                "orig_dtype": _np_dtype(leaf["dtype"]),
+            }
+        ex._reps[GOLOMB] = blobs
+        ex._manifest = manifest    # raw on-disk manifest (legacy shims)
+        return ex
+
+
+def _sanitize(path: str) -> str:
+    import re
+    return re.sub(r"[^A-Za-z0-9_]", "__", path)
+
+
+def as_expert(obj: Any, name: str = "expert") -> Expert:
+    """Normalize legacy artifacts (anything with ``.packed``) to Expert."""
+    if isinstance(obj, Expert):
+        return obj
+    if hasattr(obj, "packed"):          # peft.task_vector.ExpertArtifact
+        return Expert.from_packed(
+            getattr(obj, "name", name), getattr(obj, "kind", "full"),
+            obj.packed, density=getattr(obj, "density", 0.0),
+            alpha=getattr(obj, "alpha", 1.0),
+            meta=dict(getattr(obj, "meta", {}) or {}))
+    raise TypeError(f"cannot interpret {type(obj).__name__} as an Expert")

@@ -56,11 +56,18 @@ def flash_attention(
     causal: bool = True,
     q_offset: int = 0,
     kv_valid_len: Optional[int] = None,
+    kv_start: Optional[jax.Array] = None,
     chunk_q: int = 512,
     chunk_k: int = 512,
     shard_fn=None,
 ) -> jax.Array:
     """Chunked flash attention.  Returns [B, T, Hq, D] in q.dtype.
+
+    ``kv_start`` (optional, [B] int32) is the absolute position of each
+    row's first *real* token: keys at positions below it are masked out,
+    so left-padded rows (ragged prompts in one batch, engine slot refills)
+    ignore their pad tokens.  Queries inside the pad region attend to
+    nothing and produce zeros — callers discard them.
 
     ``shard_fn(x, logical_axes)`` (optional) pins the scan-carry shardings;
     without it GSPMD may pick a carry sharding that mismatches the body and
@@ -132,11 +139,18 @@ def flash_attention(
         if cfg.window is not None and causal:
             mask &= (q_pos[:, None] - k_pos[None, :]) < cfg.window
         mask &= (k_pos < kv_len)[None, :]
+        if kv_start is not None:     # per-row left-pad mask -> [B, cq, ck]
+            mask = (mask[None]
+                    & (k_pos[None, None, :]
+                       >= kv_start.astype(jnp.int32)[:, None, None]))
         # additive mask: jnp.where(mask, s, NEG_INF) would give the NEG_INF
         # constant a cotangent that is batch-reduced ACROSS PODS in the
         # backward (measured: 1 MB x 9216 cross-pod all-reduces on qwen3
         # train, §Perf E3); the additive form keeps the constant out of AD
-        neg = jnp.where(mask, 0.0, NEG_INF)[None, :, None, None, :]
+        if kv_start is not None:
+            neg = jnp.where(mask, 0.0, NEG_INF)[:, :, None, None, :]
+        else:
+            neg = jnp.where(mask, 0.0, NEG_INF)[None, :, None, None, :]
         s = s + lax.stop_gradient(neg)
 
         mi = lax.dynamic_index_in_dim(m, i, axis=1, keepdims=False)
@@ -147,8 +161,9 @@ def flash_attention(
         # guard fully-masked rows
         m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
         p = jnp.exp(s - m_safe[..., None])
-        p = p * lax.stop_gradient(
-            mask[None, :, None, None, :].astype(jnp.float32))
+        maskf = (mask[:, :, None, None, :] if kv_start is not None
+                 else mask[None, :, None, None, :])
+        p = p * lax.stop_gradient(maskf.astype(jnp.float32))
         alpha = jnp.where(mi <= NEG_INF / 2, 0.0, jnp.exp(mi - m_safe))
         l_new = alpha * li + jnp.sum(p, axis=-1)
         pv = jnp.einsum("bqhgk,bkhd->bqhgd", p, vj.astype(jnp.float32),
@@ -224,8 +239,13 @@ def decode_attention_partial(
     pos: jax.Array,      # [S_loc] absolute positions, -1 empty
     cur: jax.Array,      # scalar current absolute position
     cfg: AttnCfg,
+    start: Optional[jax.Array] = None,   # [B] first real position per row
 ):
     """One-token attention over a (possibly sequence-sharded) cache slice.
+
+    ``start`` (optional, [B] int32) masks cache slots holding positions
+    below each row's first real token — rows admitted into a running wave
+    via left-padded prefill ignore their pad KV entries.
 
     Returns flash partials (o, m, l):
       o: [B, Hq, D] f32 unnormalised;  m, l: [B, Hq] f32.
@@ -243,12 +263,18 @@ def decode_attention_partial(
     valid = (pos >= 0) & (pos <= cur)
     if cfg.window is not None:
         valid &= pos > (cur - cfg.window)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    if start is not None:               # [B, S_loc] per-row validity
+        valid = valid[None, :] & (pos[None, :]
+                                  >= start.astype(jnp.int32)[:, None])
+        vmask = valid[:, None, None, :]
+    else:
+        vmask = valid[None, None, None, :]
+    s = jnp.where(vmask, s, NEG_INF)
 
     m = jnp.max(s, axis=-1)
     m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
     p = jnp.exp(s - m_safe[..., None])
-    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    p = jnp.where(vmask, p, 0.0)
     l = jnp.sum(p, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32),
                    optimize=True)

@@ -58,8 +58,10 @@ class Runtime:
     remat_policy: str = "unit"   # unit | none
 
 
-def _local_decode_attn(q, k_cache, v_cache, pos, cur, cfg: AttnCfg):
-    o, m, l = decode_attention_partial(q, k_cache, v_cache, pos, cur, cfg)
+def _local_decode_attn(q, k_cache, v_cache, pos, cur, cfg: AttnCfg,
+                       start=None):
+    o, m, l = decode_attention_partial(q, k_cache, v_cache, pos, cur, cfg,
+                                       start=start)
     return finalize_partial(o, m, l)[:, None].astype(q.dtype)  # [B,1,Hq,D]
 
 
@@ -250,7 +252,7 @@ def init_params(key: jax.Array, cfg: ModelConfig) -> PyTree:
 
 def _apply_attn_block(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime,
                       positions, enc_out=None, collect_cache=False,
-                      dp=None, eid=None):
+                      dp=None, eid=None, kv_start=None):
     dp = dp or {}
     h = rms_norm(x, eff_param(bp["pre_norm"], dp.get("pre_norm"), eid),
                  cfg.rms_eps, _gemma(cfg))
@@ -264,6 +266,7 @@ def _apply_attn_block(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime,
     # carry layout and the pin would fight it (§Perf E2)
     pin = None if heads_ok(b.attn.n_q) else rt.shard
     o = flash_attention(q, k, v, b.attn, causal=b.attn.causal,
+                        kv_start=kv_start,
                         chunk_q=rt.attn_chunk_q, chunk_k=rt.attn_chunk_k,
                         shard_fn=pin)
     o = out_project(o, bp["attn"], dp=dp.get("attn"), eid=eid)
@@ -308,14 +311,15 @@ def _apply_ffn(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime,
 
 def _apply_block_train(x, bp, b: BlockCfg = None, cfg: ModelConfig = None,
                        rt: Runtime = None, positions=None, state=None,
-                       enc_out=None, collect_cache=False, dp=None, eid=None):
+                       enc_out=None, collect_cache=False, dp=None, eid=None,
+                       kv_start=None):
     """Returns (x, aux, cache_entry, new_state)."""
     aux = jnp.zeros((), jnp.float32)
     cache_entry, new_state = None, None
     if b.kind == "attn":
         x, cache_entry = _apply_attn_block(x, bp, b, cfg, rt, positions,
                                            enc_out, collect_cache,
-                                           dp=dp, eid=eid)
+                                           dp=dp, eid=eid, kv_start=kv_start)
         x, aux = _apply_ffn(x, bp, b, cfg, rt, dp=dp, eid=eid)
     elif b.kind == "mamba":
         h = rms_norm(x, bp["pre_norm"], cfg.rms_eps)
@@ -341,7 +345,7 @@ def _apply_block_train(x, bp, b: BlockCfg = None, cfg: ModelConfig = None,
 
 def _unit_scan(x, stacked_blocks, cfg: ModelConfig, rt: Runtime, positions,
                pattern, enc_out=None, collect_cache=False, states=None,
-               delta_blocks=None, eid=None):
+               delta_blocks=None, eid=None, kv_start=None):
     """Scan over units.  Returns (x, aux_sum, caches, new_states)."""
 
     def body(carry, xs):
@@ -354,7 +358,8 @@ def _unit_scan(x, stacked_blocks, cfg: ModelConfig, rt: Runtime, positions,
                   if unit_delta is not None else None)
             block_fn = partial(_apply_block_train, b=b, cfg=cfg, rt=rt,
                                positions=positions, enc_out=enc_out,
-                               collect_cache=collect_cache, dp=dp, eid=eid)
+                               collect_cache=collect_cache, dp=dp, eid=eid,
+                               kv_start=kv_start)
             if rt.remat_policy == "block" and len(pattern) > 1:
                 block_fn = jax.checkpoint(
                     block_fn, policy=jax.checkpoint_policies.nothing_saveable,
@@ -427,13 +432,14 @@ def forward_train(params, tokens, cfg: ModelConfig, rt: Runtime,
 
 
 def default_decode_cache_attn(q, k_new, v_new, cache_k, cache_v, pos, cur,
-                              attn_cfg: AttnCfg):
+                              attn_cfg: AttnCfg, start=None):
     """Local (unsharded-cache) write + attend.  The sequence-parallel variant
-    is repro.distributed.collectives.sp_decode_cache_attn."""
+    is repro.distributed.collectives.sp_decode_cache_attn.  ``start``
+    ([B] int32, optional) masks each row's left-pad KV positions."""
     cache_k, cache_v, pos = cache_write(cache_k, cache_v, pos, k_new, v_new,
                                         cur)
     o, m, l = decode_attention_partial(q, cache_k, cache_v, pos, cur,
-                                       attn_cfg)
+                                       attn_cfg, start=start)
     out = finalize_partial(o, m, l)[:, None].astype(q.dtype)
     return out, cache_k, cache_v, pos
 
@@ -483,7 +489,7 @@ def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
 
 
 def _decode_block(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime, st,
-                  cur, cross_kv=None, dp=None, eid=None):
+                  cur, cross_kv=None, dp=None, eid=None, start=None):
     """One-token step through one block.  Returns (x, new_state)."""
     decode_attn = rt.decode_attn or default_decode_cache_attn
     dp = dp or {}
@@ -493,8 +499,12 @@ def _decode_block(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime, st,
         positions = cur[None, None].astype(jnp.int32)  # [1,1] broadcasts to [B,T=1]
         q, k, v = qkv_project(h, bp["attn"], b.attn, positions, cfg.rms_eps,
                               dp=dp.get("attn"), eid=eid)
-        o, ck, cv, pos = decode_attn(q, k, v, st["k"], st["v"], st["pos"],
-                                     cur, b.attn)
+        if start is None:
+            o, ck, cv, pos = decode_attn(q, k, v, st["k"], st["v"],
+                                         st["pos"], cur, b.attn)
+        else:
+            o, ck, cv, pos = decode_attn(q, k, v, st["k"], st["v"],
+                                         st["pos"], cur, b.attn, start=start)
         o = out_project(o, bp["attn"], dp=dp.get("attn"), eid=eid)
         if b.sandwich_norm:
             o = rms_norm(o, eff_param(bp["post_attn_norm"],
@@ -548,6 +558,7 @@ def decode_step(params, token, cache, cfg: ModelConfig, rt: Runtime,
     x = rt.shard(x, ("batch", "seq", "embed_act"))
     cur = cache["cur"]
     cross = cache.get("cross")
+    start = cache.get("start")      # [B] first real position per row
     delta_blocks = delta.get("blocks") if delta is not None else None
 
     def body(carry, xs):
@@ -561,7 +572,7 @@ def decode_step(params, token, cache, cfg: ModelConfig, rt: Runtime,
                   if unit_delta is not None else None)
             h, ns = _decode_block(h, unit_params[f"block{i}"], b, cfg, rt,
                                   unit_cache[f"block{i}"], cur, cross_kv=ck,
-                                  dp=dp, eid=eid)
+                                  dp=dp, eid=eid, start=start)
             new_states[f"block{i}"] = ns
         return h, new_states
 
@@ -593,8 +604,15 @@ def _ring_fill(full: jax.Array, pos_abs: int, S: int):
 
 
 def prefill(params, tokens, cfg: ModelConfig, rt: Runtime, cache_len: int,
-            mm_embeds=None, enc_out=None, delta=None, eid=None):
-    """Run the full prompt, returning (last-token logits, filled cache)."""
+            mm_embeds=None, enc_out=None, delta=None, eid=None, start=None):
+    """Run the full prompt, returning (last-token logits, filled cache).
+
+    ``start`` (optional, [B] int32) marks each row's first real token:
+    left-pad positions before it are masked out of attention, and the mask
+    is carried in the cache (``cache["start"]``) so decode steps keep
+    ignoring them.  Only meaningful for pure-attention stacks — recurrent
+    blocks consume pad tokens through their state.
+    """
     x = embed_tokens(params, tokens, cfg, rt, mm_embeds, delta=delta,
                      eid=eid)
     T = x.shape[1]
@@ -605,7 +623,7 @@ def prefill(params, tokens, cfg: ModelConfig, rt: Runtime, cache_len: int,
         x, params["blocks"], cfg, rt, positions, cfg.pattern,
         collect_cache=True, states=states0, enc_out=enc_out,
         delta_blocks=delta.get("blocks") if delta is not None else None,
-        eid=eid)
+        eid=eid, kv_start=start)
 
     cache = init_decode_cache(cfg, B, cache_len, dtype=dtype_of(cfg))
     for i, b in enumerate(cfg.pattern):
@@ -622,6 +640,8 @@ def prefill(params, tokens, cfg: ModelConfig, rt: Runtime, cache_len: int,
             S, tm, cm = new_states[i]
             cache["layers"][f"block{i}"] = {"S": S, "tm": tm, "cm": cm}
     cache["cur"] = jnp.asarray(T, jnp.int32)
+    if start is not None:
+        cache["start"] = jnp.asarray(start, jnp.int32)
     if enc_out is not None:
         cache["cross"] = cross_cache_from_encoder(params, enc_out, cfg)
     logits = logits_of(params, x[:, -1:], cfg, rt, delta=delta, eid=eid)

@@ -1,10 +1,16 @@
 """Task vectors over PEFT or full parameter trees: tau = theta_ft - theta_init
-(§2 of the paper), plus the expert-artifact container the serving stack and
-checkpoint manager exchange."""
+(§2 of the paper), plus the legacy expert-artifact container.
+
+The expert container role has moved to :class:`repro.expert.Expert` (one
+artifact, explicit DENSE/TERNARY/PACKED/GOLOMB representations) behind the
+:mod:`repro.api` facade.  ``ExpertArtifact`` / ``compress_expert`` /
+``reconstruct_expert`` remain as thin deprecated shims for one release.
+"""
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -12,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core import (CompressionConfig, compress, compress_packed,
                         decompress, pack_tree, tree_packed_bytes, unpack_tree)
+from repro.expert import Expert
 
 PyTree = Any
 
@@ -33,10 +40,11 @@ def apply_task_vector(theta_init: PyTree, tau: PyTree,
 
 @dataclasses.dataclass
 class ExpertArtifact:
-    """A ComPEFT-compressed expert: what gets stored / transmitted / cached.
+    """DEPRECATED packed-expert container (use :class:`repro.expert.Expert`).
 
-    ``packed`` is the bitplane tree (device/compute format).  Golomb bytes
-    are produced lazily by the checkpoint manager for cold storage.
+    ``packed`` is the bitplane tree (device/compute format).  Still accepted
+    by the serving tiers (normalized to an Expert on the way in); will be
+    removed after one release.
     """
 
     name: str
@@ -57,28 +65,31 @@ class ExpertArtifact:
 def compress_expert(name: str, kind: str, tau: PyTree, density: float,
                     alpha: float, per_tensor: bool = True,
                     method: str = "streaming") -> ExpertArtifact:
-    """Compress a task vector into the packed serving artifact.
+    """DEPRECATED: use ``repro.api.compress`` (returns an Expert).
 
+    Compress a task vector into the packed serving artifact.
     ``method='streaming'`` (default) runs the single-pass histogram-quantile
     + batched-pack pipeline and never materialises dense int8 signs;
     ``method='exact'`` is the seed sort-based per-leaf path, kept as the
     numerics oracle.
     """
-    cfg = CompressionConfig(density=density, alpha=alpha,
-                            per_tensor=per_tensor)
-    if method == "streaming":
-        packed = compress_packed(tau, cfg)
-    elif method == "exact":
-        packed = pack_tree(compress(tau, cfg))
-    else:
-        raise ValueError(f"unknown compression method {method!r}")
-    return ExpertArtifact(name=name, kind=kind, packed=packed,
+    warnings.warn("compress_expert is deprecated; use repro.api.compress "
+                  "(returns repro.expert.Expert)", DeprecationWarning,
+                  stacklevel=2)
+    ex = Expert.from_task_vector(tau, name=name, kind=kind, density=density,
+                                 alpha=alpha, per_tensor=per_tensor,
+                                 method=method, meta={"method": method})
+    return ExpertArtifact(name=name, kind=kind, packed=ex.as_("packed"),
                           density=density, alpha=alpha,
                           meta={"method": method})
 
 
-def reconstruct_expert(theta_init: PyTree, artifact: ExpertArtifact,
+def reconstruct_expert(theta_init: PyTree, artifact,
                        treedef_like: Optional[PyTree] = None) -> PyTree:
-    """theta_init + decompressed tau (tree structures must match)."""
+    """theta_init + decompressed tau (tree structures must match).
+
+    Accepts both the legacy :class:`ExpertArtifact` and
+    :class:`repro.expert.Expert`.
+    """
     tau = artifact.to_dense_tau()
     return apply_task_vector(theta_init, tau)

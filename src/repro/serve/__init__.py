@@ -1,6 +1,8 @@
 from repro.serve.engine import EngineConfig, Request, ServeEngine
-from repro.serve.expert_cache import (DeviceCache, ExpertStore, SwapStats,
+from repro.serve.expert_cache import (DeviceCache, ExpertRegistry,
+                                      ExpertStore, SwapStats,
                                       uncompressed_baseline_bytes)
 
 __all__ = ["EngineConfig", "Request", "ServeEngine", "DeviceCache",
-           "ExpertStore", "SwapStats", "uncompressed_baseline_bytes"]
+           "ExpertRegistry", "ExpertStore", "SwapStats",
+           "uncompressed_baseline_bytes"]

@@ -37,7 +37,8 @@ import numpy as np
 from repro.models.delta import build_overlay, plan_overlay
 from repro.models.model import ModelApi
 from repro.models.transformer import Runtime
-from repro.serve.expert_cache import BASE, DeviceCache, ExpertStore
+from repro.serve.expert_cache import (BASE, DeviceCache, ExpertRegistry,
+                                      ExpertStore, as_registry)
 
 PyTree = Any
 
@@ -55,7 +56,9 @@ class Request:
 class EngineConfig:
     max_batch: int = 8
     cache_len: int = 128
-    device_cache_bytes: int = 1 << 28
+    # None -> use the registry's configured HBM budget; an explicit value
+    # sets/overrides it (ExpertRegistry.device semantics)
+    device_cache_bytes: Optional[int] = None
     scheduling: str = "mixed"     # "mixed" (zero-merge) | "grouped" (merge)
     max_stack: int = 8            # max distinct experts stacked per wave
     continuous: bool = True       # refill finished slots mid-wave
@@ -65,14 +68,15 @@ class ServeEngine:
     """Single-host engine; the model functions are the pjit'd serve path."""
 
     def __init__(self, api: ModelApi, rt: Runtime, base_params: PyTree,
-                 store: ExpertStore, ecfg: EngineConfig,
+                 registry: ExpertRegistry, ecfg: EngineConfig,
                  peft_state: Optional[dict] = None):
         self.api = api
         self.rt = rt
         self.base = base_params
-        self.store = store
+        self.registry = as_registry(registry)
+        self.store = self.registry.store
         self.cfg = ecfg
-        self.cache = DeviceCache(store, ecfg.device_cache_bytes)
+        self.cache = self.registry.device(ecfg.device_cache_bytes)
         self._merged_name: Optional[str] = None
         self._merged_params: Optional[PyTree] = None
         self._plan = plan_overlay(base_params, api.cfg)
@@ -87,63 +91,31 @@ class ServeEngine:
     # ---------------- expert management ----------------
 
     def _params_for(self, expert: str) -> PyTree:
-        """Merge-on-swap fallback: full merged params for one expert."""
+        """Merge-on-swap fallback: full merged params for one expert.
+
+        The fused plane merge itself lives in
+        :meth:`ExpertRegistry.merged_params`; the engine only memoises the
+        last merged expert and keeps the swap log.
+        """
         if expert == BASE:
             return self.base
         if self._merged_name == expert:
             return self._merged_params
         t0 = time.perf_counter()
-        packed = self.cache.fetch(expert)    # {path: PackedTernary} tree
-        params = self._apply_packed(packed)
+        params = self.registry.merged_params(self.base, [expert])
         self._merged_name = expert
         self._merged_params = params
         self.swap_log.append({"expert": expert,
                               "seconds": time.perf_counter() - t0})
         return params
 
-    def _apply_packed(self, packed_pathdict) -> PyTree:
-        """Merge a {path: PackedTernary} dict into a copy of base params.
-
-        One fused unpack_add pass per leaf, straight from the 2-bit planes
-        the DeviceCache keeps resident — the dense delta is never
-        materialised (the seed's {path: dense} round-trip is gone).
-        """
-        from repro.kernels.ops import apply_ternary_delta_flat
-        from repro.peft.lora import _path_str
-        flat, treedef = jax.tree_util.tree_flatten_with_path(self.base)
-        out = []
-        for path, leaf in flat:
-            pt = packed_pathdict.get(_path_str(path))
-            out.append(leaf if pt is None
-                       else apply_ternary_delta_flat(leaf, pt))
-        return jax.tree_util.tree_unflatten(treedef, out)
-
     def merged_ensemble_params(self, experts: list[str],
                                weights: Optional[list[float]] = None
                                ) -> PyTree:
-        """Merged-ensemble mode: W_base + sum_e α_e Δ_e in ONE sweep.
-
-        The fused ``unpack_add_many`` kernel applies every expert's planes
-        during a single pass over the base weights instead of E
-        read-modify-write round trips over HBM; bit-identical to applying
-        the (α-scaled) experts one at a time.
-        """
-        from repro.kernels.ops import apply_ternary_delta_many_flat
-        from repro.peft.lora import _path_str
-        packs = [self.cache.fetch(e) for e in experts]
-        w = weights if weights is not None else [1.0] * len(experts)
-        flat, treedef = jax.tree_util.tree_flatten_with_path(self.base)
-        out = []
-        for path, leaf in flat:
-            ps = _path_str(path)
-            pts, ws = [], []
-            for pk, wi in zip(packs, w):
-                if ps in pk:
-                    pts.append(pk[ps])
-                    ws.append(wi)
-            out.append(leaf if not pts
-                       else apply_ternary_delta_many_flat(leaf, pts, ws))
-        return jax.tree_util.tree_unflatten(treedef, out)
+        """Merged-ensemble mode: W_base + sum_e α_e Δ_e in ONE sweep
+        (``unpack_add_many`` via the registry — bit-identical to applying
+        the α-scaled experts one at a time)."""
+        return self.registry.merged_params(self.base, experts, weights)
 
     def _overlay_for(self, experts: tuple) -> Optional[dict]:
         """Zero-merge overlay for an ordered expert set (None → fallback)."""
@@ -208,11 +180,25 @@ class ServeEngine:
             self._serve_wave(wave, experts, overlay, queue)
         return requests
 
-    def _pad_prompts(self, reqs: list[Request]) -> jax.Array:
+    def _pad_prompts(self, reqs: list[Request]) -> tuple:
+        """Left-pad prompts to one width.  Returns (tokens [B, T],
+        start [B] — each row's first real position, for the pad mask)."""
         T = max(int(r.prompt.shape[0]) for r in reqs)
-        return jnp.stack([jnp.pad(r.prompt, (T - r.prompt.shape[0], 0),
+        toks = jnp.stack([jnp.pad(r.prompt, (T - r.prompt.shape[0], 0),
                                   constant_values=1) for r in reqs]
                          ).astype(jnp.int32)
+        start = jnp.asarray([T - int(r.prompt.shape[0]) for r in reqs],
+                            jnp.int32)
+        return toks, start
+
+    def _row_mask_ok(self) -> bool:
+        # per-row left-pad masking needs every position to live in
+        # attention KV state (recurrent blocks consume pads through their
+        # state; frontends prepend non-text positions)
+        c = self.api.cfg
+        return (all(b.kind == "attn" for b in c.pattern)
+                and c.frontend is None and not c.cross_attn
+                and not c.enc_n_units)
 
     def _can_admit(self) -> bool:
         # slot refill splices per-row KV state; only the pure-attention
@@ -225,10 +211,10 @@ class ServeEngine:
         t0 = time.perf_counter()
         slot = {e: i for i, e in enumerate(experts)}
         eid = jnp.asarray([slot[r.expert] for r in wave], jnp.int32)
-        batch = {"tokens": self._pad_prompts(wave)}
-        logits, cache = self._prefill(self.base, batch, self.rt,
+        toks, start = self._pad_prompts(wave)
+        logits, cache = self._prefill(self.base, {"tokens": toks}, self.rt,
                                       self.cfg.cache_len, delta=overlay,
-                                      eid=eid)
+                                      eid=eid, start=start)
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         rows: list[Optional[Request]] = list(wave)
         admitted = 0
@@ -287,13 +273,18 @@ class ServeEngine:
     def _admit_row(self, r: Request, j: int, cur: int, cache, tok,
                    overlay, eid):
         """Prefill one newcomer left-padded to the wave position and splice
-        its KV state into row j of the running batch."""
-        prompt = jnp.pad(r.prompt, (cur - int(r.prompt.shape[0]), 0),
+        its KV state into row j of the running batch.  The row's ``start``
+        (= cur - prompt length) rides along, so the spliced row's decode
+        attention ignores the left-pad positions — an admitted request
+        matches the same prompt served solo."""
+        row_start = cur - int(r.prompt.shape[0])
+        prompt = jnp.pad(r.prompt, (row_start, 0),
                          constant_values=1)[None].astype(jnp.int32)
         row_eid = eid[j][None]
         row_logits, row_cache = self._prefill(
             self.base, {"tokens": prompt}, self.rt, self.cfg.cache_len,
-            delta=overlay, eid=row_eid)
+            delta=overlay, eid=row_eid,
+            start=jnp.asarray([row_start], jnp.int32))
 
         def splice(c, rc):
             if c.ndim >= 2 and rc.ndim == c.ndim and rc.shape[1] == 1:
@@ -302,13 +293,14 @@ class ServeEngine:
         new_cache = dict(cache)
         new_cache["layers"] = jax.tree_util.tree_map(splice, cache["layers"],
                                                      row_cache["layers"])
+        new_cache["start"] = cache["start"].at[j].set(row_start)
         tok = tok.at[j].set(
             jnp.argmax(row_logits[:, -1], axis=-1).astype(jnp.int32))
         return tok, new_cache
 
     def _serve_batch(self, params, reqs: list[Request]) -> None:
         """Merge-path batch (single expert): prefill then decode."""
-        toks = self._pad_prompts(reqs)
+        toks, start = self._pad_prompts(reqs)
         batch = {"tokens": toks}
         if self.api.cfg.frontend is not None:
             n = self.api.cfg.frontend.n_tokens
@@ -318,7 +310,9 @@ class ServeEngine:
                    else "mm_embeds")
             batch[key] = stub
         logits, cache = self._prefill(params, batch, self.rt,
-                                      self.cfg.cache_len)
+                                      self.cfg.cache_len,
+                                      start=(start if self._row_mask_ok()
+                                             else None))
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         steps = max(r.max_new_tokens for r in reqs)
         for _ in range(steps):

@@ -1,21 +1,24 @@
 """Multi-expert memory hierarchy — the paper's headline serving scenario.
 
-Three tiers mirror §1 of the paper:
+:class:`ExpertRegistry` is the front door: one named library of
+:class:`~repro.expert.Expert` artifacts whose storage tiers mirror §1 of
+the paper:
 
   ExpertStore   (disk/network tier)  — packed artifacts, or Golomb-coded
                                        blobs (``cold_golomb=True``) decoded
                                        on promotion in one vectorized pass
-  HostCache     (CPU RAM tier)       — packed bitplane trees (2 bits/param)
   DeviceCache   (HBM tier, LRU)      — *packed* bitplane trees, bounded by a
                                        byte budget; evicts LRU
 
 The device tier is packed-resident: experts stay in the 2-bit bitplane form
-end-to-end.  Since PR 2 the cache also exposes **stacked plane buffers**
+end-to-end.  The cache also exposes **stacked plane buffers**
 (:meth:`DeviceCache.stacked`): for a set of resident experts, one
 ``[E, words]`` buffer per leaf path that the batched serving kernels
 (``ternary_matmul_grouped`` / ``unpack_add_many``) consume directly — the
 zero-merge mixed-expert decode path never materialises merged parameters.
-Stacks are invalidated when a member is evicted.
+Stacks are invalidated when a member is evicted, and stack bytes count
+against the same HBM budget as the packed trees: an over-capacity stack
+build evicts (other stacks first, then LRU non-member trees).
 
 Swap cost accounting is explicit: every promotion records bytes moved, so
 benchmarks can report transmission bytes and load latency, and the engine
@@ -26,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import OrderedDict
 from typing import Any, Optional
 
@@ -34,11 +38,16 @@ import numpy as np
 
 from repro.core import tree_packed_bytes
 from repro.core.packing import stack_packed, stacked_bytes
-from repro.peft.task_vector import ExpertArtifact
+from repro.expert import GOLOMB, PACKED, Expert, as_expert
+
+# canonical sign->planes bridge lives with the Expert artifact now
+from repro.expert import planes_from_signs as _planes_from_signs  # noqa: F401
 
 PyTree = Any
 
 BASE = "__base__"   # pseudo-expert: serve the unmodified base weights
+
+DEFAULT_DEVICE_BYTES = 1 << 28
 
 
 @dataclasses.dataclass
@@ -53,6 +62,7 @@ class SwapStats:
     stack_builds: int = 0
     stack_hits: int = 0
     stack_bytes: int = 0
+    stack_evictions: int = 0
     golomb_decode_seconds: float = 0.0
 
     def as_dict(self):
@@ -60,50 +70,49 @@ class SwapStats:
 
 
 class ExpertStore:
-    """Cold tier: name -> ExpertArtifact.
+    """Cold tier: name -> :class:`~repro.expert.Expert`.
 
-    ``cold_golomb=True`` stores Golomb-Rice streams (the paper's
+    ``cold_golomb=True`` keeps only Golomb-Rice streams (the paper's
     storage-optimal wire format) instead of bitplanes; promotion then pays
     one *batched* host-side decode over all leaves of the expert
     (:func:`repro.core.golomb.decode_tree` — the vectorized codec, no
     per-bit Python loops) before packing to device planes.
+
+    Accepts both Experts and legacy ``ExpertArtifact`` objects on
+    :meth:`put`; :meth:`get` always returns an Expert.
     """
 
     def __init__(self, cold_golomb: bool = False):
         self.cold_golomb = cold_golomb
-        self._store: dict[str, ExpertArtifact] = {}
+        self._store: dict[str, Expert] = {}
         self._blobs: dict[str, dict] = {}
         self._meta: dict[str, dict] = {}
 
-    def put(self, art: ExpertArtifact) -> None:
+    def put(self, art) -> Expert:
+        ex = as_expert(art)
         if not self.cold_golomb:
-            self._store[art.name] = art
-            return
-        from repro.core import golomb
-        from repro.core.packing import signs_np
-        blobs, meta = {}, {}
-        flat = art.packed if isinstance(art.packed, dict) else None
-        assert flat is not None, "cold_golomb store expects {path: planes}"
-        for path, pt in flat.items():
-            blobs[path] = golomb.encode(signs_np(pt), float(pt.scale))
-            meta[path] = {"shape": tuple(pt.shape),
-                          "orig_dtype": pt.orig_dtype}
-        self._blobs[art.name] = blobs
-        self._meta[art.name] = {"leaf": meta, "kind": art.kind,
-                                "density": art.density, "alpha": art.alpha}
+            self._store[ex.name] = ex
+            return ex
+        blobs = dict(ex.as_(GOLOMB))
+        self._blobs[ex.name] = blobs
+        self._meta[ex.name] = {
+            "leaf": {p: dict(m) for p, m in ex._leaf_meta.items()},
+            "kind": ex.kind, "density": ex.density, "alpha": ex.alpha,
+        }
+        return ex
 
-    def get(self, name: str) -> ExpertArtifact:
+    def get(self, name: str) -> Expert:
         if not self.cold_golomb:
             return self._store[name]
-        from repro.core import golomb
         m = self._meta[name]
-        decoded = golomb.decode_tree(self._blobs[name])   # one batched pass
-        packed = {path: _planes_from_signs(signs, scale,
-                                           m["leaf"][path]["shape"],
-                                           m["leaf"][path]["orig_dtype"])
-                  for path, (signs, scale) in decoded.items()}
-        return ExpertArtifact(name=name, kind=m["kind"], packed=packed,
-                              density=m["density"], alpha=m["alpha"])
+        ex = Expert(name, m["kind"], density=m["density"], alpha=m["alpha"])
+        ex._leaf_meta = {p: dict(v) for p, v in m["leaf"].items()}
+        ex._reps[GOLOMB] = self._blobs[name]
+        ex.as_(PACKED)   # one batched decode now, so promotion timing is
+        return ex        # attributed to the store tier (golomb_decode stat)
+
+    def __contains__(self, name: str) -> bool:
+        return name in (self._blobs if self.cold_golomb else self._store)
 
     def names(self):
         return list(self._blobs if self.cold_golomb else self._store)
@@ -111,30 +120,14 @@ class ExpertStore:
     def nbytes(self, name: str) -> int:
         if self.cold_golomb:
             return sum(len(b) for b in self._blobs[name].values())
-        return self._store[name].nbytes
-
-
-def _planes_from_signs(signs: np.ndarray, scale: float,
-                       shape: tuple, orig_dtype) -> Any:
-    """Host int8 signs -> PackedTernary (np packbits, little-endian words)."""
-    import jax.numpy as jnp
-
-    from repro.core.packing import LANE, PackedTernary
-    n = signs.size
-    pad = (-n) % LANE
-    if pad:
-        signs = np.concatenate([signs, np.zeros((pad,), np.int8)])
-    pos = np.packbits(signs == 1, bitorder="little").view(np.uint32)
-    neg = np.packbits(signs == -1, bitorder="little").view(np.uint32)
-    return PackedTernary(pos=jnp.asarray(pos), neg=jnp.asarray(neg),
-                         scale=jnp.asarray(scale, jnp.float32),
-                         shape=tuple(shape), orig_dtype=orig_dtype)
+        return self._store[name].nbytes(PACKED)
 
 
 class DeviceCache:
     """LRU cache of *packed bitplane trees* under a byte budget (HBM
     residency of ComPEFT experts; 2 bits/param instead of dense deltas),
-    plus stacked per-path plane buffers for mixed-expert batches."""
+    plus stacked per-path plane buffers for mixed-expert batches.  Stack
+    bytes share the budget: over-capacity builds trigger eviction."""
 
     MAX_STACKS = 4   # LRU bound on distinct expert-set stacks kept resident
 
@@ -150,12 +143,37 @@ class DeviceCache:
         """Packed trees + stacked buffers — everything under the budget."""
         return sum(self._sizes.values()) + self.stats.stack_bytes
 
+    def _drop_stack(self, key: tuple) -> None:
+        self.stats.stack_bytes -= stacked_bytes(self._stacks.pop(key))
+        self.stats.stack_evictions += 1
+
     def _evict_one(self) -> None:
         old, _ = self._cache.popitem(last=False)
         self._sizes.pop(old)
         self.stats.evictions += 1
         for key in [k for k in self._stacks if old in k]:
-            self.stats.stack_bytes -= stacked_bytes(self._stacks.pop(key))
+            self._drop_stack(key)
+
+    def _enforce_budget(self, protect: tuple = ()) -> None:
+        """Evict until within budget: LRU stacks first (cheap rebuilds),
+        then LRU packed trees — never touching ``protect`` members or
+        their stack (the expert set being served right now)."""
+        protect_key = tuple(protect)
+        members = set(protect)
+        while self.resident_bytes() > self.capacity:
+            other_stacks = [k for k in self._stacks if k != protect_key]
+            if other_stacks:
+                self._drop_stack(other_stacks[0])
+                continue
+            victims = [n for n in self._cache if n not in members]
+            if not victims:
+                break        # only the active set remains: allow overshoot
+            old = victims[0]
+            self._cache.pop(old)
+            self._sizes.pop(old)
+            self.stats.evictions += 1
+            for key in [k for k in self._stacks if old in k]:
+                self._drop_stack(key)
 
     def fetch(self, name: str) -> PyTree:
         """-> tree of PackedTernary, promoted to device-resident if needed."""
@@ -188,7 +206,9 @@ class DeviceCache:
         Returns {path: (pos [E, W], neg [E, W], scales [E], shape)}.  Built
         from the resident packed trees (promoting as needed) and cached per
         expert-set; eviction of any member invalidates the stack.  Unknown
-        names (e.g. ``__base__``) contribute all-zero slots.
+        names (e.g. ``__base__``) contribute all-zero slots.  The stack's
+        bytes count against the HBM budget — an over-capacity build evicts
+        other stacks, then LRU non-member trees.
         """
         key = tuple(names)
         hit = self._stacks.get(key)
@@ -201,11 +221,11 @@ class DeviceCache:
         trees = [{} if n == BASE else self.fetch(n) for n in key]
         stacks = stack_packed(trees)
         while len(self._stacks) >= self.MAX_STACKS:
-            _, old = self._stacks.popitem(last=False)
-            self.stats.stack_bytes -= stacked_bytes(old)
+            self._drop_stack(next(iter(self._stacks)))
         self._stacks[key] = stacks
         self.stats.stack_builds += 1
         self.stats.stack_bytes += stacked_bytes(stacks)
+        self._enforce_budget(protect=key)
         return stacks
 
     def has_stack(self, names: tuple) -> bool:
@@ -217,8 +237,117 @@ class DeviceCache:
         return list(self._cache)
 
 
-def uncompressed_baseline_bytes(art: ExpertArtifact) -> int:
+class ExpertRegistry:
+    """One coherent expert library over the storage tiers.
+
+    Replaces the ad-hoc ``dict[str, ExpertArtifact]`` plumbing: experts go
+    in as :class:`~repro.expert.Expert` (or legacy artifacts, normalized),
+    the cold tier is an :class:`ExpertStore`, and the HBM tier — created
+    lazily by :meth:`device` — is a :class:`DeviceCache` the serving engine
+    shares.  Merge-on-demand lives here too (:meth:`merged_params`), so the
+    engine no longer hand-rolls plane merges.
+    """
+
+    def __init__(self, store: Optional[ExpertStore] = None, *,
+                 cold_golomb: bool = False,
+                 device_cache_bytes: int = DEFAULT_DEVICE_BYTES):
+        self.store = store or ExpertStore(cold_golomb=cold_golomb)
+        self.device_cache_bytes = device_cache_bytes
+        self._device: Optional[DeviceCache] = None
+
+    # ---- library management -------------------------------------------
+    def add(self, expert, *experts) -> Expert:
+        """Register one or more experts; returns the (first) normalized
+        Expert."""
+        first = self.store.put(expert)
+        for e in experts:
+            self.store.put(e)
+        return first
+
+    put = add   # ExpertStore-compatible spelling
+
+    def get(self, name: str) -> Expert:
+        return self.store.get(name)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.store
+
+    def __len__(self) -> int:
+        return len(self.store.names())
+
+    def names(self) -> list[str]:
+        return self.store.names()
+
+    def nbytes(self, name: str) -> int:
+        return self.store.nbytes(name)
+
+    # ---- device tier ---------------------------------------------------
+    def device(self, capacity_bytes: Optional[int] = None) -> DeviceCache:
+        """The HBM tier (created on first call).  ``capacity_bytes=None``
+        keeps the registry's configured budget; an explicit value sets (or
+        retargets) the budget — the most recent explicit request wins."""
+        if self._device is None:
+            self._device = DeviceCache(
+                self.store, capacity_bytes or self.device_cache_bytes)
+        elif (capacity_bytes is not None
+              and capacity_bytes != self._device.capacity):
+            self._device.capacity = capacity_bytes
+            self._device._enforce_budget()
+        return self._device
+
+    def fetch_packed(self, name: str) -> dict:
+        """Device-resident ``{path: PackedTernary}`` for one expert."""
+        return {} if name == BASE else self.device().fetch(name)
+
+    def stacked(self, names: tuple) -> dict:
+        return self.device().stacked(tuple(names))
+
+    # ---- merge-on-demand ----------------------------------------------
+    def merged_params(self, base: PyTree, names, weights=None) -> PyTree:
+        """``W_base + sum_e w_e * Delta_e`` in ONE fused sweep per leaf.
+
+        The ``unpack_add_many`` kernel applies every named expert's planes
+        during a single pass over the base weights instead of E
+        read-modify-write round trips over HBM; bit-identical to applying
+        the (w-scaled) experts one at a time.  With a single name this is
+        the classic merge-on-swap promotion.
+        """
+        from repro.kernels.ops import apply_ternary_delta_many_flat
+        from repro.peft.lora import _path_str
+        names = [names] if isinstance(names, str) else list(names)
+        packs = [self.fetch_packed(n) for n in names]
+        w = list(weights) if weights is not None else [1.0] * len(names)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(base)
+        out = []
+        for path, leaf in flat:
+            ps = _path_str(path)
+            pts, ws = [], []
+            for pk, wi in zip(packs, w):
+                if ps in pk:
+                    pts.append(pk[ps])
+                    ws.append(wi)
+            out.append(leaf if not pts
+                       else apply_ternary_delta_many_flat(leaf, pts, ws))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def as_registry(obj) -> ExpertRegistry:
+    """Normalize an ExpertStore (legacy engine wiring) to a registry."""
+    if isinstance(obj, ExpertRegistry):
+        return obj
+    if isinstance(obj, ExpertStore):
+        warnings.warn(
+            "passing an ExpertStore to ServeEngine is deprecated; wrap it "
+            "in repro.api.registry() / ExpertRegistry(store)",
+            DeprecationWarning, stacklevel=3)
+        return ExpertRegistry(store=obj)
+    raise TypeError(f"expected ExpertRegistry or ExpertStore, "
+                    f"got {type(obj).__name__}")
+
+
+def uncompressed_baseline_bytes(art) -> int:
     """What the same swap would cost without ComPEFT (bf16 dense)."""
-    packed = jax.tree_util.tree_leaves(
-        art.packed, is_leaf=lambda x: hasattr(x, "pos"))
-    return sum(int(np.prod(p.shape)) * 2 for p in packed)
+    packed = art.packed if not isinstance(art, dict) else art
+    leaves = jax.tree_util.tree_leaves(
+        packed, is_leaf=lambda x: hasattr(x, "pos"))
+    return sum(int(np.prod(p.shape)) * 2 for p in leaves)

@@ -1,0 +1,286 @@
+"""The Expert artifact + repro.api facade: representation round-trips
+(bit-identical to the legacy compress/pack/Golomb paths), save/load across
+both on-disk formats, representation-aware merging, and engine-via-registry
+output parity with the legacy store-wired engine."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api as rapi
+from repro.core import (CompressionConfig, compress, compress_packed,
+                        decompress, pack_tree, tree_packed_bytes,
+                        unpack_tree)
+from repro.expert import DENSE, GOLOMB, PACKED, TERNARY, Expert
+
+
+def _tau(seed=0, shapes=((64, 64), (32, 96), (48,))):
+    rng = np.random.default_rng(seed)
+    return {f"layer{i}/w": jnp.asarray(rng.normal(0, 7e-4, s), jnp.float32)
+            for i, s in enumerate(shapes)}
+
+
+def _assert_planes_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.pos), np.asarray(b.pos))
+    np.testing.assert_array_equal(np.asarray(a.neg), np.asarray(b.neg))
+    np.testing.assert_allclose(float(a.scale), float(b.scale), rtol=0)
+    assert tuple(a.shape) == tuple(b.shape)
+
+
+def test_packed_bit_identical_to_streaming_path():
+    """as_(PACKED) on a dense expert == compress_packed (the PR-1 streaming
+    pipeline), word for word."""
+    tau = _tau()
+    ex = rapi.compress(tau, density=0.1, alpha=2.0)
+    ref = compress_packed(tau, CompressionConfig(density=0.1, alpha=2.0))
+    got = ex.as_(PACKED)
+    for k in tau:
+        _assert_planes_equal(got[k], ref[k])
+
+
+def test_exact_method_bit_identical_to_legacy_pack():
+    """method='exact': DENSE -> TERNARY -> PACKED reproduces the seed
+    pack_tree(compress(tau)) path exactly."""
+    tau = _tau(1)
+    ex = rapi.compress(tau, density=0.2, method="exact")
+    cfg = CompressionConfig(density=0.2, alpha=1.0)
+    tern_ref = compress(tau, cfg)
+    packed_ref = pack_tree(tern_ref)
+    tern = ex.as_(TERNARY)
+    for k in tau:
+        np.testing.assert_array_equal(np.asarray(tern[k].signs),
+                                      np.asarray(tern_ref[k].signs))
+    got = ex.as_(PACKED)
+    for k in tau:
+        _assert_planes_equal(got[k], packed_ref[k])
+
+
+def test_full_lattice_roundtrip():
+    """DENSE -> PACKED -> GOLOMB -> PACKED -> TERNARY -> DENSE: the ternary
+    content survives every hop exactly."""
+    tau = _tau(2)
+    ex = rapi.compress(tau, name="rt", density=0.1)
+    packed = {k: v for k, v in ex.packed.items()}
+    blobs = ex.as_(GOLOMB)
+    assert set(blobs) == set(packed)
+
+    back = Expert("rt2", density=0.1)
+    back._reps[GOLOMB] = blobs
+    back._leaf_meta = {p: dict(m) for p, m in ex._leaf_meta.items()}
+    for k, pt in back.packed.items():
+        _assert_planes_equal(pt, packed[k])
+
+    # ternary reconstruction equals the legacy decompress path
+    dense_back = back.to_dense_tau()
+    ref = decompress(unpack_tree(ex.as_(PACKED)))
+    ref_flat, _ = jax.tree_util.tree_flatten_with_path(ref)
+    from repro.peft.lora import _path_str
+    ref_d = {_path_str(p): l for p, l in ref_flat}
+    for k in ref_d:
+        np.testing.assert_array_equal(np.asarray(dense_back[k]),
+                                      np.asarray(ref_d[k]))
+
+
+def test_nbytes_per_representation():
+    tau = _tau(3)
+    ex = rapi.compress(tau, density=0.05)
+    n = sum(int(np.prod(l.shape)) for l in tau.values())
+    assert ex.nbytes(DENSE) == 4 * n
+    assert ex.nbytes(PACKED) == tree_packed_bytes(ex.as_(PACKED))
+    assert ex.nbytes(GOLOMB) < ex.nbytes(PACKED) < ex.nbytes(DENSE)
+    assert ex.nbytes(TERNARY) > ex.nbytes(PACKED)
+
+
+def test_summary_subsumes_compression_summary():
+    """Expert.summary() == compression_summary over the same ternary tree
+    (plus per-representation byte accounting)."""
+    from repro.core import compression_summary
+    tau = _tau(4)
+    ex = rapi.compress(tau, density=0.2)
+    s = ex.summary()
+    ref = compression_summary(tau, ex.as_(TERNARY))
+    for key in ("n_params", "nnz", "density", "dense_bits", "entropy_bits",
+                "bitplane_bits", "rel_recon_err"):
+        assert s[key] == ref[key], key
+    assert s["bytes"][PACKED] == ex.nbytes(PACKED)
+    assert s["name"] == "expert"
+
+
+def test_save_load_roundtrip_new_format(tmp_path):
+    tau = _tau(5)
+    ex = rapi.compress(tau, name="math-expert", kind="lora", density=0.1,
+                       alpha=3.0)
+    stats = ex.save(str(tmp_path / "e.npz"))
+    assert stats["ratio"] > 1.0
+    back = rapi.load(str(tmp_path / "e.npz"))
+    assert back.name == "math-expert"
+    assert back.kind == "lora"
+    assert back.density == 0.1
+    assert back.alpha == 3.0
+    ref = ex.packed
+    for k, pt in back.packed.items():
+        _assert_planes_equal(pt, ref[k])
+
+
+def test_load_legacy_export_expert_file(tmp_path):
+    """Expert.load reads files written by the legacy checkpoint shim, and
+    the legacy import reads files written by Expert.save — one format."""
+    from repro.checkpoint.manager import export_expert, import_expert
+    rng = np.random.default_rng(6)
+    init = {"w": jnp.asarray(rng.normal(0, 1, (64, 64)), jnp.float32)}
+    ft = {"w": init["w"] + jnp.asarray(rng.normal(0, 1e-3, (64, 64)),
+                                       jnp.float32)}
+    with pytest.deprecated_call():
+        export_expert(init, ft, str(tmp_path / "legacy.npz"), density=0.1)
+    ex = rapi.load(str(tmp_path / "legacy.npz"))
+    assert ex.density == 0.1
+    assert "w" in ex.packed
+
+    # reverse direction: new save -> legacy import
+    ex2 = rapi.compress(init, ft, name="n", density=0.1)
+    ex2.save(str(tmp_path / "new.npz"))
+    with pytest.deprecated_call():
+        taus, manifest = import_expert(str(tmp_path / "new.npz"))
+    assert manifest["density"] == 0.1
+    np.testing.assert_array_equal(
+        taus["w"], np.asarray(ex2.to_dense_tau()["w"], np.float32))
+
+
+def test_merge_dispatch_by_representation():
+    """api.merge: dense TA == packed TA on f32 leaves; ties runs; auto
+    picks the bitplane path for packed-resident experts."""
+    from repro.core.merging import merge_packed, task_arithmetic
+    taus = [_tau(seed) for seed in (10, 11)]
+    exps = [rapi.compress(t, name=f"e{i}", density=0.2)
+            for i, t in enumerate(taus)]
+
+    m_dense = rapi.merge(exps, method="task_arithmetic", lam=0.7)
+    ref = task_arithmetic([e.to_dense_tau() for e in exps], lam=0.7)
+    for k in taus[0]:
+        np.testing.assert_array_equal(np.asarray(m_dense[k]),
+                                      np.asarray(ref[k]))
+
+    m_packed = rapi.merge(exps, method="packed", lam=0.7)
+    ref_p = merge_packed([e.as_(PACKED) for e in exps], lam=0.7)
+    for k in taus[0]:
+        np.testing.assert_array_equal(np.asarray(m_packed[k]),
+                                      np.asarray(ref_p[k]))
+
+    m_ties = rapi.merge(exps, method="ties", lam=0.7, density=0.3)
+    assert set(m_ties) == set(taus[0])
+
+    # packed-resident experts (no dense rep) dispatch to the bitplane path
+    lean = [Expert.from_packed(f"p{i}", "full", e.as_(PACKED))
+            for i, e in enumerate(exps)]
+    m_auto = rapi.merge(lean, method="auto", lam=0.7)
+    for k in taus[0]:
+        np.testing.assert_array_equal(np.asarray(m_auto[k]),
+                                      np.asarray(ref_p[k]))
+
+    merged_ex = rapi.merge(exps, method="task_arithmetic", lam=0.7,
+                           as_expert=True, name="blend", density=0.2)
+    assert isinstance(merged_ex, Expert)
+    assert merged_ex.name == "blend"
+
+    # legacy ExpertArtifact inputs are normalized, not crashed on
+    from repro.peft.task_vector import ExpertArtifact
+    arts = [ExpertArtifact(name=f"a{i}", kind="full",
+                           packed=e.as_(PACKED), density=0.2, alpha=1.0)
+            for i, e in enumerate(exps)]
+    m_legacy = rapi.merge(arts, method="packed", lam=0.7)
+    for k in taus[0]:
+        np.testing.assert_array_equal(np.asarray(m_legacy[k]),
+                                      np.asarray(ref_p[k]))
+
+
+def test_registry_engine_parity_with_legacy_store():
+    """ServeEngine-via-registry must produce exactly the tokens the legacy
+    store-wired engine does on a mixed-expert wave."""
+    from repro.configs import get_smoke_config
+    from repro.models import Runtime, build
+    from repro.peft import compress_expert
+    from repro.peft.lora import _path_str
+    from repro.peft.task_vector import task_vector
+    from repro.serve import (EngineConfig, ExpertStore, Request, ServeEngine)
+
+    RT = Runtime(attn_chunk_q=16, attn_chunk_k=16, remat_policy="none")
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+
+    store = ExpertStore()
+    reg = rapi.registry()
+    for i in range(2):
+        leaves, tdef = jax.tree_util.tree_flatten(base)
+        keys = jax.random.split(jax.random.PRNGKey(100 + i), len(leaves))
+        ft = jax.tree_util.tree_unflatten(tdef, [
+            (l.astype(jnp.float32)
+             + 0.03 * jax.random.normal(k, l.shape)).astype(l.dtype)
+            for l, k in zip(leaves, keys)])
+        tau = task_vector(base, ft)
+        flat, _ = jax.tree_util.tree_flatten_with_path(tau)
+        with pytest.deprecated_call():
+            store.put(compress_expert(f"expert{i}", "full",
+                                      {_path_str(p): l for p, l in flat},
+                                      density=0.2, alpha=1.0))
+        reg.add(rapi.compress(tau, name=f"expert{i}", density=0.2))
+
+    rng = np.random.default_rng(3)
+    prompts = [jnp.asarray(rng.integers(1, cfg.vocab, 10), jnp.int32)
+               for _ in range(4)]
+
+    def mk():
+        return [Request(uid=i, expert=f"expert{i % 2}", prompt=prompts[i],
+                        max_new_tokens=3) for i in range(4)]
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng_legacy = ServeEngine(api, RT, base, store,
+                                 EngineConfig(max_batch=4, cache_len=48))
+    legacy_reqs = mk()
+    eng_legacy.run(legacy_reqs)
+
+    eng_new = rapi.serve(api, RT, base, reg, max_batch=4, cache_len=48)
+    new_reqs = mk()
+    eng_new.run(new_reqs)
+
+    assert ({r.uid: r.out_tokens for r in legacy_reqs}
+            == {r.uid: r.out_tokens for r in new_reqs})
+    assert eng_new.swap_summary()["n_swaps"] == 0
+
+
+def test_registry_merged_params_single_equals_ensemble_of_one():
+    """registry.merged_params([e]) is the merge-on-swap promotion — one
+    fused sweep, identical to the ensemble path with weight 1."""
+    tau = _tau(12, shapes=((64, 64),))
+    reg = rapi.registry(experts=[rapi.compress(tau, name="e", density=0.2)])
+    base = {"layer0/w": jnp.asarray(
+        np.random.default_rng(0).normal(0, 1, (64, 64)), jnp.float32)}
+    a = reg.merged_params(base, ["e"])
+    b = reg.merged_params(base, ["e"], weights=[1.0])
+    np.testing.assert_array_equal(np.asarray(a["layer0/w"]),
+                                  np.asarray(b["layer0/w"]))
+
+
+def test_expert_lazy_compression():
+    """compress() is lazy: no packed rep exists until first access."""
+    tau = _tau(13)
+    ex = rapi.compress(tau, density=0.1)
+    assert ex.available() == (DENSE,)
+    ex.packed
+    assert PACKED in ex.available()
+
+
+def test_unknown_representation_raises():
+    ex = rapi.compress(_tau(14), density=0.1)
+    with pytest.raises(ValueError):
+        ex.as_("int4")
+
+
+def test_dense_expert_without_density_raises():
+    ex = Expert.from_task_vector(_tau(15), density=0.0)
+    with pytest.raises(ValueError):
+        ex.as_(PACKED)

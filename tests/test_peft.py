@@ -6,10 +6,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api as rapi
 from repro.configs import get_smoke_config
 from repro.models import Runtime, build
 from repro.peft import (IA3Config, LoraConfig, apply_ia3, apply_lora,
-                        compress_expert, init_ia3, init_lora, task_vector)
+                        init_ia3, init_lora, task_vector)
 
 RT = Runtime(attn_chunk_q=16, attn_chunk_k=16, remat_policy="none")
 B, T = 2, 16
@@ -85,9 +86,9 @@ def test_compressed_lora_expert_roundtrip():
         lora = jax.tree_util.tree_map(lambda p, g: p - 0.3 * g, lora,
                                       jax.grad(loss_fn)(lora))
     tau = task_vector(lora0, lora)
-    art = compress_expert("exp0", "lora", tau, density=0.3, alpha=1.0)
-    assert art.nbytes < sum(x.size * 2 for x in
-                            jax.tree_util.tree_leaves(tau)) / 4
+    art = rapi.compress(tau, name="exp0", kind="lora", density=0.3)
+    assert art.nbytes() < sum(x.size * 2 for x in
+                              jax.tree_util.tree_leaves(tau)) / 4
     tau_hat = art.to_dense_tau()
     lora_hat = jax.tree_util.tree_map(
         lambda a, d: (a.astype(jnp.float32) + d).astype(a.dtype), lora0,

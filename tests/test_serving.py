@@ -1,24 +1,27 @@
-"""Serving tier: expert store/cache hierarchy, LRU eviction, swap
+"""Serving tier: expert registry/store/cache hierarchy, LRU eviction, swap
 accounting, end-to-end multi-expert engine, and the compressed-expert
-export/import round trip."""
+export/import round trip — all through the ``repro.api`` facade."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api as rapi
 from repro.configs import get_smoke_config
+from repro.expert import GOLOMB, PACKED
 from repro.models import Runtime, build
-from repro.peft import compress_expert, task_vector
-from repro.serve import (EngineConfig, ExpertStore, Request, ServeEngine,
-                         uncompressed_baseline_bytes)
+from repro.serve import (EngineConfig, ExpertRegistry, ExpertStore, Request,
+                         ServeEngine, uncompressed_baseline_bytes)
 
 RT = Runtime(attn_chunk_q=16, attn_chunk_k=16, remat_policy="none")
 
 
-def make_experts(api, base, n=3, scale=0.01):
-    """Fake fine-tunes: base + random deltas, ComPEFT-compressed."""
-    store = ExpertStore()
+def make_experts(api, base, n=3, scale=0.01, density=0.2,
+                 **registry_kw) -> ExpertRegistry:
+    """Fake fine-tunes: base + random deltas, ComPEFT-compressed into a
+    registry (the facade path — no hand-flattening, no ExpertArtifact)."""
+    reg = rapi.registry(**registry_kw)
     for i in range(n):
         key = jax.random.PRNGKey(100 + i)
         leaves, tdef = jax.tree_util.tree_flatten(base)
@@ -27,26 +30,18 @@ def make_experts(api, base, n=3, scale=0.01):
             (l.astype(jnp.float32)
              + scale * jax.random.normal(k, l.shape)).astype(l.dtype)
             for l, k in zip(leaves, keys)])
-        tau = task_vector(base, ft)
-        # flatten to path-dict so the engine can merge by path
-        from repro.peft.lora import _path_str
-        flat, _ = jax.tree_util.tree_flatten_with_path(tau)
-        tau_dict = {_path_str(p): l for p, l in flat}
-        art = compress_expert(f"expert{i}", "full", tau_dict, density=0.2,
-                              alpha=1.0)
-        store.put(art)
-    return store
+        reg.add(rapi.compress(base, ft, name=f"expert{i}", density=density))
+    return reg
 
 
 def test_store_and_cache_lru():
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
-    store = make_experts(api, base, n=3)
-    from repro.serve import DeviceCache
-    one = store.get("expert0")
-    packed_bytes = one.nbytes
-    cache = DeviceCache(store, capacity_bytes=int(packed_bytes * 1.5))
+    reg = make_experts(api, base, n=3)
+    one = reg.get("expert0")
+    packed_bytes = one.nbytes(PACKED)
+    cache = reg.device(int(packed_bytes * 1.5))
 
     cache.fetch("expert0")
     cache.fetch("expert1")           # evicts expert0 (capacity 1.5 experts)
@@ -66,12 +61,10 @@ def test_packed_residency_capacity_multiplier():
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
-    store = make_experts(api, base, n=10)
-    from repro.serve import DeviceCache
-    one = store.get("expert0")
-    dense_bytes = uncompressed_baseline_bytes(one) * 2  # f32 dense deltas
+    reg = make_experts(api, base, n=10)
+    dense_bytes = uncompressed_baseline_bytes(reg.get("expert0")) * 2
     budget = int(dense_bytes * 1.5)   # seed layout: fits 1 dense expert
-    cache = DeviceCache(store, capacity_bytes=budget)
+    cache = reg.device(budget)
     for i in range(10):
         cache.fetch(f"expert{i}")
     assert cache.stats.evictions == 0
@@ -79,14 +72,52 @@ def test_packed_residency_capacity_multiplier():
     assert cache.resident_bytes() <= budget
 
 
+def test_stack_bytes_count_against_budget():
+    """Stack-aware HBM accounting: an over-capacity stack build must
+    trigger eviction (other stacks first, then LRU non-member trees), and
+    resident_bytes() includes the stack buffers."""
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    reg = make_experts(api, base, n=3)
+    one = reg.get("expert0").nbytes(PACKED)
+    # room for all three packed trees, but NOT for trees + two stacks
+    cache = reg.device(int(one * 4.5))
+    cache.stacked(("expert0", "expert1"))
+    assert cache.stats.stack_bytes > 0
+    assert cache.resident_bytes() <= cache.capacity
+    # second stack overflows the budget -> the first stack must be evicted
+    cache.stacked(("expert1", "expert2"))
+    assert cache.stats.stack_evictions >= 1
+    assert not cache.has_stack(("expert0", "expert1"))
+    assert cache.has_stack(("expert1", "expert2"))
+    assert cache.resident_bytes() <= cache.capacity
+
+
+def test_tiny_budget_stack_evicts_trees():
+    """With a budget that can't hold trees + stack, LRU non-member packed
+    trees are evicted to make room for the active stack."""
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    reg = make_experts(api, base, n=3)
+    one = reg.get("expert0").nbytes(PACKED)
+    cache = reg.device(int(one * 3.5))
+    cache.fetch("expert2")          # non-member: the eviction victim
+    cache.stacked(("expert0", "expert1"))   # 2 trees + stack > budget
+    assert "expert2" not in cache.resident()
+    assert cache.stats.evictions >= 1
+    # the active set itself is protected even when over budget
+    assert cache.has_stack(("expert0", "expert1"))
+
+
 def test_engine_end_to_end_multi_expert():
     """Default (mixed) scheduling: heterogeneous waves, ZERO merges."""
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
-    store = make_experts(api, base, n=2)
-    eng = ServeEngine(api, RT, base, store,
-                      EngineConfig(max_batch=4, cache_len=48))
+    reg = make_experts(api, base, n=2)
+    eng = rapi.serve(api, RT, base, reg, max_batch=4, cache_len=48)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     expert=f"expert{i % 2}",
@@ -110,10 +141,9 @@ def test_engine_grouped_mode_still_merges():
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
-    store = make_experts(api, base, n=2)
-    eng = ServeEngine(api, RT, base, store,
-                      EngineConfig(max_batch=4, cache_len=48,
-                                   scheduling="grouped"))
+    reg = make_experts(api, base, n=2)
+    eng = rapi.serve(api, RT, base, reg, max_batch=4, cache_len=48,
+                     scheduling="grouped")
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i, expert=f"expert{i % 2}",
                     prompt=jnp.asarray(rng.integers(1, cfg.vocab, 12),
@@ -134,7 +164,7 @@ def test_mixed_wave_bit_identical_to_sequential():
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
-    store = make_experts(api, base, n=3, scale=0.03)
+    reg = make_experts(api, base, n=3, scale=0.03)
     rng = np.random.default_rng(1)
     prompts = [jnp.asarray(rng.integers(1, cfg.vocab, 10), jnp.int32)
                for _ in range(6)]
@@ -143,13 +173,13 @@ def test_mixed_wave_bit_identical_to_sequential():
         return [Request(uid=i, expert=f"expert{i % 3}", prompt=prompts[i],
                         max_new_tokens=4) for i in range(6)]
 
-    eng = ServeEngine(api, RT, base, store,
-                      EngineConfig(max_batch=6, cache_len=48))
+    eng = rapi.serve(api, RT, base, reg, max_batch=6, cache_len=48)
     mixed = mk()
     eng.run(mixed)
 
-    eng2 = ServeEngine(api, RT, base, store,
-                       EngineConfig(max_batch=6, cache_len=48))
+    eng2 = rapi.serve(api, RT, base, make_experts(api, base, n=3,
+                                                  scale=0.03),
+                      max_batch=6, cache_len=48)
     seq = mk()
     for e in range(3):
         eng2.run([r for r in seq if r.expert == f"expert{e}"])
@@ -162,19 +192,19 @@ def test_mixed_wave_base_rows():
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
-    store = make_experts(api, base, n=1, scale=0.05)
+    reg = make_experts(api, base, n=1, scale=0.05)
     rng = np.random.default_rng(2)
     prompt = jnp.asarray(rng.integers(1, cfg.vocab, 10), jnp.int32)
     reqs = [Request(uid=0, expert="__base__", prompt=prompt,
                     max_new_tokens=4),
             Request(uid=1, expert="expert0", prompt=prompt,
                     max_new_tokens=4)]
-    eng = ServeEngine(api, RT, base, store,
-                      EngineConfig(max_batch=2, cache_len=48))
+    eng = rapi.serve(api, RT, base, reg, max_batch=2, cache_len=48)
     eng.run(reqs)
     solo = Request(uid=2, expert="__base__", prompt=prompt, max_new_tokens=4)
-    eng2 = ServeEngine(api, RT, base, store,
-                       EngineConfig(max_batch=2, cache_len=48))
+    eng2 = rapi.serve(api, RT, base, make_experts(api, base, n=1,
+                                                  scale=0.05),
+                      max_batch=2, cache_len=48)
     eng2.run([solo])
     assert reqs[0].out_tokens == solo.out_tokens
     assert eng.swap_summary()["n_swaps"] == 0
@@ -186,15 +216,14 @@ def test_continuous_admission_refills_slots():
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
-    store = make_experts(api, base, n=2)
+    reg = make_experts(api, base, n=2)
     rng = np.random.default_rng(3)
     reqs = [Request(uid=i, expert=f"expert{i % 2}",
                     prompt=jnp.asarray(rng.integers(1, cfg.vocab, 8),
                                        jnp.int32),
                     max_new_tokens=2 + (i % 3))
             for i in range(7)]
-    eng = ServeEngine(api, RT, base, store,
-                      EngineConfig(max_batch=3, cache_len=64))
+    eng = rapi.serve(api, RT, base, reg, max_batch=3, cache_len=64)
     eng.run(reqs)
     for r in reqs:
         assert len(r.out_tokens) == r.max_new_tokens
@@ -204,15 +233,65 @@ def test_continuous_admission_refills_slots():
     assert s["n_swaps"] == 0
 
 
+def test_admitted_row_matches_solo_serve():
+    """Per-row pad-mask regression: a request spliced into a running wave
+    (left-padded single-row prefill + KV splice) must produce the same
+    tokens as the same prompt served solo — the pad tokens are masked out
+    of its attention."""
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    reg = make_experts(api, base, n=2, scale=0.03)
+    rng = np.random.default_rng(7)
+    pa = jnp.asarray(rng.integers(1, cfg.vocab, 9), jnp.int32)
+    pb = jnp.asarray(rng.integers(1, cfg.vocab, 5), jnp.int32)   # shorter!
+    a = Request(uid=0, expert="expert0", prompt=pa, max_new_tokens=3)
+    b = Request(uid=1, expert="expert1", prompt=pb, max_new_tokens=4)
+    eng = rapi.serve(api, RT, base, reg, max_batch=1, cache_len=64)
+    eng.run([a, b])
+    assert eng.swap_summary()["admitted"] == 1   # b spliced into a's slot
+
+    solo = Request(uid=2, expert="expert1", prompt=pb, max_new_tokens=4)
+    eng2 = rapi.serve(api, RT, base, make_experts(api, base, n=2,
+                                                  scale=0.03),
+                      max_batch=1, cache_len=64)
+    eng2.run([solo])
+    assert b.out_tokens == solo.out_tokens
+
+
+def test_ragged_wave_rows_match_solo_serve():
+    """Rows left-padded at wave start (ragged prompt lengths in one batch)
+    also ignore their pads: every row matches its solo serve."""
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    reg = make_experts(api, base, n=2, scale=0.03)
+    rng = np.random.default_rng(8)
+    lens = (6, 10, 8)
+    prompts = [jnp.asarray(rng.integers(1, cfg.vocab, L), jnp.int32)
+               for L in lens]
+    reqs = [Request(uid=i, expert=f"expert{i % 2}", prompt=prompts[i],
+                    max_new_tokens=3) for i in range(3)]
+    eng = rapi.serve(api, RT, base, reg, max_batch=3, cache_len=48)
+    eng.run(reqs)
+    for i in range(3):
+        solo = Request(uid=10 + i, expert=f"expert{i % 2}",
+                       prompt=prompts[i], max_new_tokens=3)
+        engs = rapi.serve(api, RT, base, make_experts(api, base, n=2,
+                                                      scale=0.03),
+                          max_batch=1, cache_len=48)
+        engs.run([solo])
+        assert reqs[i].out_tokens == solo.out_tokens, f"row {i} diverged"
+
+
 def test_unsupported_family_falls_back_to_merge():
     """A family the overlay cannot express (MoE) serves via merge-on-swap
     even under mixed scheduling."""
     cfg = get_smoke_config("mixtral_8x7b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
-    store = make_experts(api, base, n=2, scale=0.02)
-    eng = ServeEngine(api, RT, base, store,
-                      EngineConfig(max_batch=4, cache_len=48))
+    reg = make_experts(api, base, n=2, scale=0.02)
+    eng = rapi.serve(api, RT, base, reg, max_batch=4, cache_len=48)
     assert eng._plan is None
     rng = np.random.default_rng(4)
     reqs = [Request(uid=i, expert=f"expert{i % 2}",
@@ -228,13 +307,13 @@ def test_unsupported_family_falls_back_to_merge():
 def test_merged_ensemble_single_sweep():
     """unpack_add_many consumer: W + sum_e a_e D_e in one sweep equals
     applying the scaled experts one at a time."""
-    from repro.kernels.ops import apply_ternary_delta_flat
     from repro.core.packing import PackedTernary
+    from repro.kernels.ops import apply_ternary_delta_flat
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
-    store = make_experts(api, base, n=3, scale=0.03)
-    eng = ServeEngine(api, RT, base, store, EngineConfig(cache_len=32))
+    reg = make_experts(api, base, n=3, scale=0.03)
+    eng = rapi.serve(api, RT, base, reg, cache_len=32)
     weights = [0.5, 1.0, 0.25]
     got = eng.merged_ensemble_params([f"expert{i}" for i in range(3)],
                                      weights)
@@ -242,7 +321,7 @@ def test_merged_ensemble_single_sweep():
     from repro.peft.lora import _path_str
     flat, treedef = jax.tree_util.tree_flatten_with_path(base)
     want = []
-    packs = [store.get(f"expert{i}").packed for i in range(3)]
+    packs = [reg.get(f"expert{i}").packed for i in range(3)]
     for path, leaf in flat:
         ps = _path_str(path)
         acc = leaf
@@ -262,17 +341,16 @@ def test_merged_ensemble_single_sweep():
 
 
 def test_golomb_cold_store_roundtrip():
-    """cold_golomb store tier: promotion decodes all leaves in one batched
-    pass and reproduces the exact packed planes."""
+    """cold_golomb registry tier: promotion decodes all leaves in one
+    batched pass and reproduces the exact packed planes."""
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
     warm = make_experts(api, base, n=1)
     art = warm.get("expert0")
-    from repro.serve import ExpertStore
-    cold = ExpertStore(cold_golomb=True)
-    cold.put(art)
-    assert cold.nbytes("expert0") < art.nbytes     # golomb < bitplanes
+    cold = rapi.registry(cold_golomb=True)
+    cold.add(art)
+    assert cold.nbytes("expert0") < art.nbytes(PACKED)  # golomb < bitplanes
     back = cold.get("expert0")
     for path, pt in art.packed.items():
         bpt = back.packed[path]
@@ -286,29 +364,30 @@ def test_golomb_cold_store_roundtrip():
 
 def test_admitted_row_keeps_first_token():
     """Regression: a slot-refilled request's first generated token is the
-    argmax of its (left-padded) prefill — it must not be dropped."""
+    argmax of its (left-padded, pad-masked) prefill — it must not be
+    dropped."""
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
-    store = make_experts(api, base, n=2, scale=0.03)
+    reg = make_experts(api, base, n=2, scale=0.03)
     rng = np.random.default_rng(5)
     pa = jnp.asarray(rng.integers(1, cfg.vocab, 8), jnp.int32)
     pb = jnp.asarray(rng.integers(1, cfg.vocab, 6), jnp.int32)
     a = Request(uid=0, expert="expert0", prompt=pa, max_new_tokens=1)
     b = Request(uid=1, expert="expert1", prompt=pb, max_new_tokens=2)
-    eng = ServeEngine(api, RT, base, store,
-                      EngineConfig(max_batch=1, cache_len=32))
+    eng = rapi.serve(api, RT, base, reg, max_batch=1, cache_len=32)
     eng.run([a, b])
     assert eng.swap_summary()["admitted"] == 1
 
     # expected: B prefilled left-padded to cur=8 (A's prompt len, A decoded
-    # 0 steps past prefill), then one decode step — through the same
-    # zero-merge overlay
+    # 0 steps past prefill) with its pads masked (start=2), then one decode
+    # step — through the same zero-merge overlay
     overlay = eng._overlay_for(("expert0", "expert1"))
     eid = jnp.asarray([1], jnp.int32)
+    start = jnp.asarray([8 - pb.shape[0]], jnp.int32)
     padded = jnp.pad(pb, (8 - pb.shape[0], 0), constant_values=1)[None]
     logits, cache = api.prefill(base, {"tokens": padded}, RT, 32,
-                                delta=overlay, eid=eid)
+                                delta=overlay, eid=eid, start=start)
     t1 = int(jnp.argmax(logits[0, -1]))
     logits2, _ = api.decode_step(base, jnp.asarray([[t1]], jnp.int32),
                                  cache, RT, delta=overlay, eid=eid)
@@ -322,9 +401,8 @@ def test_mixed_unknown_expert_raises():
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
-    store = make_experts(api, base, n=1)
-    eng = ServeEngine(api, RT, base, store,
-                      EngineConfig(max_batch=2, cache_len=32))
+    reg = make_experts(api, base, n=1)
+    eng = rapi.serve(api, RT, base, reg, max_batch=2, cache_len=32)
     bad = Request(uid=0, expert="expert_9",
                   prompt=jnp.ones((6,), jnp.int32), max_new_tokens=2)
     with pytest.raises(KeyError):
@@ -335,10 +413,9 @@ def test_stacked_buffers_invalidated_on_eviction():
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
-    store = make_experts(api, base, n=3)
-    from repro.serve import DeviceCache
-    one = store.get("expert0").nbytes
-    cache = DeviceCache(store, capacity_bytes=int(one * 2.5))
+    reg = make_experts(api, base, n=3)
+    one = reg.get("expert0").nbytes(PACKED)
+    cache = reg.device(int(one * 4.5))
     cache.stacked(("expert0", "expert1"))
     assert cache.stats.stack_builds == 1
     cache.stacked(("expert0", "expert1"))
@@ -357,11 +434,13 @@ def test_packed_swap_bitwise_matches_dense_path():
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
-    store = make_experts(api, base, n=1, scale=0.03)
-    eng = ServeEngine(api, RT, base, store, EngineConfig(cache_len=32))
+    reg = make_experts(api, base, n=1, scale=0.03)
+    eng = rapi.serve(api, RT, base, reg, cache_len=32)
     got = eng._params_for("expert0")
 
-    tau_dense = store.get("expert0").to_dense_tau()   # {path: f32 delta}
+    recon = reg.get("expert0").to_dense_tau()   # {nested}: tau_tilde
+    flat_r, _ = jax.tree_util.tree_flatten_with_path(recon)
+    tau_dense = {_path_str(p): np.asarray(l) for p, l in flat_r}
     flat, treedef = jax.tree_util.tree_flatten_with_path(base)
     want = []
     for path, leaf in flat:
@@ -383,8 +462,8 @@ def test_experts_change_behaviour():
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
     base = api.init(jax.random.PRNGKey(0))
-    store = make_experts(api, base, n=1, scale=0.05)
-    eng = ServeEngine(api, RT, base, store, EngineConfig(cache_len=32))
+    reg = make_experts(api, base, n=1, scale=0.05)
+    eng = rapi.serve(api, RT, base, reg, cache_len=32)
     p_exp = eng._params_for("expert0")
     toks = jnp.ones((1, 8), jnp.int32)
     l_base, _ = api.forward(base, {"tokens": toks}, RT)
@@ -392,7 +471,40 @@ def test_experts_change_behaviour():
     assert float(jnp.max(jnp.abs(l_base - l_exp))) > 1e-3
 
 
+def test_legacy_store_and_artifact_still_work():
+    """Deprecated entry points: compress_expert + ExpertStore wired
+    straight into ServeEngine keep serving (with warnings)."""
+    from repro.peft import compress_expert
+    from repro.peft.lora import _path_str
+    from repro.peft.task_vector import task_vector
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    store = ExpertStore()
+    leaves, tdef = jax.tree_util.tree_flatten(base)
+    keys = jax.random.split(jax.random.PRNGKey(100), len(leaves))
+    ft = jax.tree_util.tree_unflatten(tdef, [
+        (l.astype(jnp.float32)
+         + 0.02 * jax.random.normal(k, l.shape)).astype(l.dtype)
+        for l, k in zip(leaves, keys)])
+    tau = task_vector(base, ft)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tau)
+    with pytest.deprecated_call():
+        art = compress_expert("expert0", "full",
+                              {_path_str(p): l for p, l in flat},
+                              density=0.2, alpha=1.0)
+    store.put(art)
+    with pytest.deprecated_call():
+        eng = ServeEngine(api, RT, base, store,
+                          EngineConfig(max_batch=2, cache_len=32))
+    req = Request(uid=0, expert="expert0",
+                  prompt=jnp.ones((6,), jnp.int32), max_new_tokens=2)
+    eng.run([req])
+    assert len(req.out_tokens) == 2
+
+
 def test_export_import_expert_roundtrip(tmp_path):
+    """Legacy checkpoint shims still work (now over Expert.save/load)."""
     from repro.checkpoint.manager import export_expert, import_expert
     cfg = get_smoke_config("qwen2_5_3b", n_units=1)
     api = build(cfg)
@@ -403,9 +515,11 @@ def test_export_import_expert_roundtrip(tmp_path):
         (l.astype(jnp.float32) + 0.01 * jax.random.normal(k, l.shape)
          ).astype(l.dtype) for l, k in zip(leaves, keys)])
 
-    stats = export_expert(base, ft, str(tmp_path / "e.npz"), density=0.1)
+    with pytest.deprecated_call():
+        stats = export_expert(base, ft, str(tmp_path / "e.npz"), density=0.1)
     assert stats["ratio"] > 8.0   # paper: >= 8x
-    taus, manifest = import_expert(str(tmp_path / "e.npz"))
+    with pytest.deprecated_call():
+        taus, manifest = import_expert(str(tmp_path / "e.npz"))
     assert manifest["density"] == 0.1
     # decompressed values are ternary * scale
     anyleaf = next(iter(taus.values()))
