@@ -13,6 +13,13 @@ serve) over the first-class :class:`repro.expert.Expert` artifact:
     reg = api.registry()           # ExpertStore + DeviceCache tiers
     reg.add(ex)
 
+    # multi-host: publish over a transport, fetch from another registry
+    from repro.transport import LocalTransport
+    tr = LocalTransport("/srv/experts")
+    api.publish(ex, tr)                       # wire-format blob + checksum
+    remote = api.registry(transport=tr)       # REMOTE -> cold -> HBM tiers
+    remote.prefetch(["math"])                 # overlap fetch with serving
+
     merged_tau = api.merge([ex_a, ex_b], method="ties", lam=0.7)
 
     engine = api.serve(model, rt, base_params, reg,
@@ -21,7 +28,9 @@ serve) over the first-class :class:`repro.expert.Expert` artifact:
 
 Everything here is a thin dispatch layer: compression is Algorithm 1
 (``repro.core``), merging is §3.6/3.7 (``repro.core.merging``), serving is
-the zero-merge mixed-expert engine (``repro.serve``).  The legacy entry
+the zero-merge mixed-expert engine (``repro.serve``), and cross-host
+movement is the checksummed wire format + backends in
+``repro.transport``.  The legacy entry
 points (``compress_expert``, ``checkpoint.export_expert`` /
 ``import_expert``, ``ServeEngine(…, ExpertStore, …)``) keep working for
 one release with deprecation warnings.
@@ -38,7 +47,7 @@ PyTree = Any
 
 __all__ = ["Expert", "DENSE", "TERNARY", "PACKED", "GOLOMB",
            "REPRESENTATIONS", "compress", "merge", "registry", "serve",
-           "load", "save"]
+           "load", "save", "publish", "fetch"]
 
 
 def compress(tau_or_init: PyTree, theta_ft: Optional[PyTree] = None, *,
@@ -83,12 +92,20 @@ def merge(experts: Sequence[Any], method: str = "auto", lam: float = 1.0,
 
 def registry(store=None, *, cold_golomb: bool = False,
              device_cache_bytes: Optional[int] = None,
+             transport=None,
              experts: Sequence[Any] = ()) -> "ExpertRegistry":
     """A fresh :class:`~repro.serve.expert_cache.ExpertRegistry` (cold
-    store + lazy HBM tier), optionally pre-populated with ``experts``."""
+    store + lazy HBM tier), optionally pre-populated with ``experts``.
+
+    ``transport=`` (an :class:`~repro.transport.ExpertTransport`) builds
+    the registry over a **remote** store instead: experts publish and
+    fetch as checksummed wire-format blobs, and ``reg.prefetch(names)``
+    overlaps transfers with serving.  ``store`` and ``transport`` are
+    mutually exclusive.
+    """
     from repro.serve.expert_cache import DEFAULT_DEVICE_BYTES, ExpertRegistry
     reg = ExpertRegistry(
-        store, cold_golomb=cold_golomb,
+        store, cold_golomb=cold_golomb, transport=transport,
         device_cache_bytes=device_cache_bytes or DEFAULT_DEVICE_BYTES)
     for e in experts:
         reg.add(e)
@@ -122,3 +139,24 @@ def load(path: str, name: Optional[str] = None) -> Expert:
 def save(expert: Expert, path: str) -> dict:
     """Write ``expert`` as the Golomb wire artifact; returns size stats."""
     return expert.save(path)
+
+
+def publish(expert: Expert, transport, rep: str = GOLOMB) -> dict:
+    """Upload ``expert`` through a transport backend as one wire-format
+    blob (manifest + checksum; see :mod:`repro.transport.wire`).
+
+    ``rep`` picks the payload encoding: :data:`GOLOMB` (default,
+    storage-optimal), :data:`PACKED` (2 bits/param, zero decode cost on
+    arrival) or :data:`DENSE` (bf16 baseline — what shipping the
+    uncompressed delta would cost).  Returns ``{name, rep, nbytes}``.
+    """
+    return transport.publish(expert, rep=rep)
+
+
+def fetch(transport, name: str) -> Expert:
+    """Fetch + decode one published expert from a transport backend.
+
+    The blob's CRC and format version are verified before any plane is
+    built; the result is bit-identical to the Expert that was published.
+    """
+    return transport.fetch(name)

@@ -8,7 +8,13 @@ onto whatever shardings the new topology prescribes.  bf16 leaves are
 stored as uint16 views (npz has no bfloat16).
 
 Expert deltas are Golomb-coded ComPEFT artifacts: base + delta round-trips
-through the same reconstruct path the serving tier uses.
+through the same reconstruct path the serving tier uses.  Since the
+transport subsystem landed, both shims speak both containers: an
+``out_path`` ending in ``.cpft`` writes the checksummed wire blob
+(:mod:`repro.transport.wire`) instead of the npz, and ``import_expert``
+sniffs the container — so a checkpointing job can export straight into a
+transport root (e.g. a :class:`~repro.transport.LocalTransport`
+directory) for other hosts to fetch.
 """
 
 from __future__ import annotations
@@ -125,7 +131,8 @@ def export_expert(theta_init: PyTree, theta_ft: PyTree, out_path: str,
 
     Thin shim over :meth:`repro.expert.Expert.save`: same Golomb npz
     artifact (the streaming ``compress_packed`` pipeline feeding the
-    vectorized encoder), same size-accounting return value.
+    vectorized encoder), same size-accounting return value.  A ``.cpft``
+    ``out_path`` writes the transport wire blob instead.
     """
     import warnings
 

@@ -25,11 +25,13 @@ wrapper over the pre-existing paths (``compress`` / ``compress_packed`` /
 to calling those functions by hand.  :meth:`Expert.save` /
 :meth:`Expert.load` unify the ``checkpoint.export_expert`` npz format and
 the ``ExpertStore`` cold-Golomb tier — one on-disk artifact, readable by
-both old and new entry points.
+both old and new entry points (and, for ``.cpft`` paths, the transport
+wire container of :mod:`repro.transport.wire`).
 
 The facade in :mod:`repro.api` builds on this class; the serving stack's
 :class:`~repro.serve.expert_cache.ExpertRegistry` stores and promotes
-Experts across its tiers.
+Experts across its tiers, and :mod:`repro.transport` moves them between
+hosts.
 """
 
 from __future__ import annotations
@@ -309,13 +311,27 @@ class Expert:
     # ---------------- persistence ----------------
 
     def save(self, path: str) -> dict:
-        """Write the storage-optimal (Golomb) artifact as one npz.
+        """Write the storage-optimal (Golomb) artifact to disk.
 
-        The format is a superset of the legacy ``checkpoint.export_expert``
-        layout — files written here load through the old ``import_expert``
-        and vice versa.  Returns size accounting ``{dense_bytes,
-        compressed_bytes, ratio}`` (same contract as ``export_expert``).
+        Two containers, one artifact: a ``.cpft`` path writes the
+        transport wire format (:mod:`repro.transport.wire` — the blob a
+        network backend would move, checksummed); any other path writes
+        the npz layout, a superset of the legacy
+        ``checkpoint.export_expert`` format — files written here load
+        through the old ``import_expert`` and vice versa.  Returns size
+        accounting ``{dense_bytes, compressed_bytes, ratio}`` (same
+        contract as ``export_expert``).
         """
+        from repro.transport.wire import WIRE_SUFFIX
+        if path.endswith(WIRE_SUFFIX):
+            from repro.transport.wire import encode_expert
+            blob = encode_expert(self, rep=GOLOMB)
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            with open(path, "wb") as f:
+                f.write(blob)
+            dense = sum(pt.n_elements * 2 for pt in self.packed.values())
+            return {"dense_bytes": dense, "compressed_bytes": len(blob),
+                    "ratio": dense / max(len(blob), 1)}
         blobs = self.as_(GOLOMB)
         packed = self.packed
         manifest = {"format": _FORMAT, "name": self.name, "kind": self.kind,
@@ -339,9 +355,18 @@ class Expert:
 
     @classmethod
     def load(cls, path: str, name: Optional[str] = None) -> "Expert":
-        """Read an expert npz — new-format or legacy ``export_expert``
-        files alike.  Decoding to planes is deferred to the first ``as_``.
+        """Read an expert artifact: new-format npz, legacy
+        ``export_expert`` npz, or ``.cpft`` wire blobs alike (the
+        container is sniffed, not judged by extension).  Decoding to
+        planes is deferred to the first ``as_``.
         """
+        with open(path, "rb") as f:
+            head = f.read(4)
+        from repro.transport.wire import MAGIC
+        if head == MAGIC:
+            from repro.transport.wire import decode_expert
+            with open(path, "rb") as f:
+                return decode_expert(f.read(), name=name)
         data = np.load(path)
         manifest = json.loads(str(data["manifest"]))
         legacy = manifest.get("format") != _FORMAT

@@ -1,8 +1,8 @@
 from repro.serve.engine import EngineConfig, Request, ServeEngine
 from repro.serve.expert_cache import (DeviceCache, ExpertRegistry,
-                                      ExpertStore, SwapStats,
-                                      uncompressed_baseline_bytes)
+                                      ExpertStore, RemoteExpertStore,
+                                      SwapStats, uncompressed_baseline_bytes)
 
 __all__ = ["EngineConfig", "Request", "ServeEngine", "DeviceCache",
-           "ExpertRegistry", "ExpertStore", "SwapStats",
+           "ExpertRegistry", "ExpertStore", "RemoteExpertStore", "SwapStats",
            "uncompressed_baseline_bytes"]

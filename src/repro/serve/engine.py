@@ -26,6 +26,7 @@ mixed_serve``."""
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from collections import defaultdict, deque
 from typing import Any, Optional
@@ -144,13 +145,35 @@ class ServeEngine:
             return self._run_grouped(requests)
         return self._run_mixed(requests)
 
+    def _prefetch_upcoming(self, queue, extra=()) -> None:
+        """Admission-time prefetch: stage promotions for every distinct
+        expert named by queued-but-nonresident requests (bounded
+        lookahead), plus ``extra`` (the wave about to be served, so its E
+        cold fetches run concurrently instead of serially inside the
+        stack build).  A wave then never stalls on a cold fetch that
+        could have overlapped the previous wave's decode steps."""
+        names = list(dict.fromkeys(extra))
+        seen = set(names)
+        for r in itertools.islice(queue, 0, 4 * self.cfg.max_batch):
+            if r.expert not in seen:
+                seen.add(r.expert)
+                names.append(r.expert)
+        if names:
+            self.registry.prefetch(names)
+
     def _run_grouped(self, requests: list[Request]) -> list[Request]:
         """PR-1 baseline: greedy same-expert batching, merge per expert."""
         groups: dict[str, list[Request]] = defaultdict(list)
         for r in requests:
             groups[r.expert].append(r)
-        for expert, reqs in groups.items():
+        order = list(groups)
+        for gi, expert in enumerate(order):
+            if gi + 1 < len(order):
+                # overlap the next group's cold fetch with this group's
+                # merge + decode steps
+                self.registry.prefetch([order[gi + 1]])
             params = self._params_for(expert)
+            reqs = groups[expert]
             for i in range(0, len(reqs), self.cfg.max_batch):
                 self._serve_batch(params, reqs[i:i + self.cfg.max_batch])
         return requests
@@ -172,6 +195,7 @@ class ServeEngine:
                 if r.expert not in experts:
                     experts.append(r.expert)
                 wave.append(queue.popleft())
+            self._prefetch_upcoming(queue, extra=experts)
             overlay = self._overlay_for(tuple(experts))
             if overlay is None:
                 # family/leaf not coverable -> merge-on-swap fallback

@@ -4,11 +4,21 @@
 :class:`~repro.expert.Expert` artifacts whose storage tiers mirror §1 of
 the paper:
 
-  ExpertStore   (disk/network tier)  — packed artifacts, or Golomb-coded
+  RemoteExpertStore (REMOTE tier)    — wire-format blobs behind an
+                                       :class:`~repro.transport.ExpertTransport`
+                                       (filesystem / simulated link / HTTP);
+                                       fetched + checksum-verified on first
+                                       use, then cached cold-locally
+  ExpertStore   (cold-local tier)    — packed artifacts, or Golomb-coded
                                        blobs (``cold_golomb=True``) decoded
                                        on promotion in one vectorized pass
   DeviceCache   (HBM tier, LRU)      — *packed* bitplane trees, bounded by a
                                        byte budget; evicts LRU
+
+Promotion up the lattice can be **pipelined**: :meth:`DeviceCache.prefetch`
+stages fetch → Golomb-decode → plane build on worker threads, so a remote
+transfer for expert B overlaps the decode (or the decode steps the engine
+is running) for expert A.  ``fetch`` then only pays the device_put.
 
 The device tier is packed-resident: experts stay in the 2-bit bitplane form
 end-to-end.  The cache also exposes **stacked plane buffers**
@@ -28,9 +38,11 @@ can amortise swaps across batches.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 import warnings
 from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Optional
 
 import jax
@@ -64,6 +76,12 @@ class SwapStats:
     stack_bytes: int = 0
     stack_evictions: int = 0
     golomb_decode_seconds: float = 0.0
+    prefetch_issued: int = 0
+    prefetch_hits: int = 0          # fetch() served from a staged future
+    prefetch_seconds: float = 0.0   # off-thread fetch+decode time (overlapped)
+    remote_fetches: int = 0
+    remote_bytes: int = 0
+    remote_seconds: float = 0.0
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -123,13 +141,87 @@ class ExpertStore:
         return self._store[name].nbytes(PACKED)
 
 
+class RemoteExpertStore(ExpertStore):
+    """REMOTE tier: wire-format experts behind an
+    :class:`~repro.transport.ExpertTransport`.
+
+    ``get`` fetches the blob over the transport on first use
+    (checksum-verified :func:`~repro.transport.wire.decode_expert`), then
+    caches the Expert in the inherited cold-local tier so repeated
+    promotions never refetch.  Experts :meth:`put` directly act as a local
+    overlay (they shadow same-named remote artifacts); use
+    :meth:`publish` to also upload through the transport.
+
+    Thread-safe for concurrent ``get`` of distinct names — the
+    :class:`DeviceCache` prefetch pipeline calls it from worker threads.
+    """
+
+    def __init__(self, transport, cold_golomb: bool = False):
+        super().__init__(cold_golomb=cold_golomb)
+        self.transport = transport
+        self._lock = threading.Lock()
+        self._wire_bytes: dict[str, int] = {}
+        self._fetches = 0
+        self._fetch_bytes = 0
+        self._fetch_seconds = 0.0
+
+    def _local(self, name: str) -> bool:
+        return ExpertStore.__contains__(self, name)
+
+    def get(self, name: str) -> Expert:
+        with self._lock:
+            have = self._local(name)
+        if not have:
+            from repro.transport.wire import decode_expert
+            t0 = time.perf_counter()
+            blob = self.transport.fetch_bytes(name)
+            ex = decode_expert(blob, name=name)
+            dt = time.perf_counter() - t0
+            with self._lock:
+                if not self._local(name):   # lost a race: keep first copy
+                    super().put(ex)
+                    self._wire_bytes[name] = len(blob)
+                    self._fetches += 1
+                    self._fetch_bytes += len(blob)
+                    self._fetch_seconds += dt
+        return super().get(name)
+
+    def publish(self, expert, rep: Optional[str] = None) -> dict:
+        """Upload through the transport AND keep a cold-local copy."""
+        out = self.transport.publish(expert, rep=rep)
+        self.put(expert)
+        return out
+
+    def remote_totals(self) -> dict:
+        with self._lock:
+            return {"fetches": self._fetches, "bytes": self._fetch_bytes,
+                    "seconds": self._fetch_seconds}
+
+    def __contains__(self, name: str) -> bool:
+        return self._local(name) or name in self.transport
+
+    def names(self):
+        local = set(super().names())
+        try:
+            remote = set(self.transport.names())
+        except Exception:       # e.g. HTTP backends cannot enumerate
+            remote = set()
+        return sorted(local | remote)
+
+    def nbytes(self, name: str) -> int:
+        """Store→host transfer cost: bytes-on-wire for fetched experts."""
+        wire = self._wire_bytes.get(name)
+        return wire if wire is not None else super().nbytes(name)
+
+
 class DeviceCache:
     """LRU cache of *packed bitplane trees* under a byte budget (HBM
     residency of ComPEFT experts; 2 bits/param instead of dense deltas),
     plus stacked per-path plane buffers for mixed-expert batches.  Stack
     bytes share the budget: over-capacity builds trigger eviction."""
 
-    MAX_STACKS = 4   # LRU bound on distinct expert-set stacks kept resident
+    MAX_STACKS = 4       # LRU bound on distinct expert-set stacks kept resident
+    PREFETCH_WORKERS = 4  # concurrent fetch→decode stages (pipeline depth)
 
     def __init__(self, store: ExpertStore, capacity_bytes: int):
         self.store = store
@@ -137,6 +229,8 @@ class DeviceCache:
         self._cache: OrderedDict[str, PyTree] = OrderedDict()
         self._sizes: dict[str, int] = {}
         self._stacks: OrderedDict[tuple, dict] = OrderedDict()
+        self._pending: dict[str, Future] = {}
+        self._pool: Optional[ThreadPoolExecutor] = None
         self.stats = SwapStats()
 
     def resident_bytes(self) -> int:
@@ -175,6 +269,55 @@ class DeviceCache:
             for key in [k for k in self._stacks if old in k]:
                 self._drop_stack(key)
 
+    def prefetch(self, names) -> int:
+        """Stage fetch → decode → plane-build for ``names`` on worker
+        threads.  Strictly advisory: nothing here blocks on the store or
+        the network (membership probes and fetch errors live on the
+        worker thread), and a failed stage falls back to the synchronous
+        path on the eventual :meth:`fetch` — where unknown names still
+        fail loudly.
+
+        The pipeline overlaps the slow, host-side promotion work — remote
+        transfer and Golomb decode — across experts and with whatever the
+        caller does next (e.g. the engine's decode steps); a later
+        :meth:`fetch` of a staged name only pays the device_put.  Returns
+        the number of stages issued.
+        """
+        issued = 0
+        for name in names:
+            if name == BASE or name in self._cache or name in self._pending:
+                continue
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.PREFETCH_WORKERS,
+                    thread_name_prefix="expert-prefetch")
+            self._pending[name] = self._pool.submit(self._stage, name)
+            self.stats.prefetch_issued += 1
+            issued += 1
+        return issued
+
+    def _stage(self, name: str):
+        """Worker-thread half of a promotion: everything up to (but not
+        including) the device transfer."""
+        t0 = time.perf_counter()
+        art = self.store.get(name)      # remote fetch / cold Golomb decode
+        packed_host = art.packed        # plane build (host)
+        return packed_host, time.perf_counter() - t0
+
+    def invalidate_pending(self, name: str) -> None:
+        """Drop a staged promotion whose cold-tier source changed (e.g. a
+        local overlay now shadows the remote artifact) — the next fetch
+        re-promotes from the store instead of consuming stale planes."""
+        self._pending.pop(name, None)
+
+    def close(self) -> None:
+        """Drop staged-but-unconsumed promotions and stop the prefetch
+        workers.  Safe to call on caches that never prefetched."""
+        self._pending.clear()
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None
+
     def fetch(self, name: str) -> PyTree:
         """-> tree of PackedTernary, promoted to device-resident if needed."""
         if name in self._cache:
@@ -183,12 +326,24 @@ class DeviceCache:
             return self._cache[name]
         self.stats.misses += 1
         t0 = time.perf_counter()
-        art = self.store.get(name)
-        if self.store.cold_golomb:
-            self.stats.golomb_decode_seconds += time.perf_counter() - t0
+        host_packed = None
+        fut = self._pending.pop(name, None)
+        if fut is not None:
+            try:
+                host_packed, stage_s = fut.result()
+                self.stats.prefetch_hits += 1
+                self.stats.prefetch_seconds += stage_s
+            except Exception:
+                pass        # advisory stage failed: retry synchronously
+        if host_packed is None:
+            art = self.store.get(name)
+            if self.store.cold_golomb:
+                self.stats.golomb_decode_seconds += time.perf_counter() - t0
+            host_packed = art.packed
+        self._sync_remote_stats()
         self.stats.store_to_host_bytes += self.store.nbytes(name)
         packed = jax.tree_util.tree_map(
-            jax.device_put, art.packed,
+            jax.device_put, host_packed,
             is_leaf=lambda x: hasattr(x, "pos"))
         size = tree_packed_bytes(packed)
         while self._cache and (self.resident_bytes() + size > self.capacity):
@@ -199,6 +354,16 @@ class DeviceCache:
         self.stats.promotions += 1
         self.stats.seconds += time.perf_counter() - t0
         return packed
+
+    def _sync_remote_stats(self) -> None:
+        """Mirror the remote store's transfer ledger into SwapStats (totals,
+        not deltas — safe against concurrent staging threads)."""
+        totals = getattr(self.store, "remote_totals", None)
+        if totals is not None:
+            t = totals()
+            self.stats.remote_fetches = t["fetches"]
+            self.stats.remote_bytes = t["bytes"]
+            self.stats.remote_seconds = t["seconds"]
 
     def stacked(self, names: tuple) -> dict:
         """Stacked plane buffers for an ordered expert set (slot e = names[e]).
@@ -246,23 +411,40 @@ class ExpertRegistry:
     lazily by :meth:`device` — is a :class:`DeviceCache` the serving engine
     shares.  Merge-on-demand lives here too (:meth:`merged_params`), so the
     engine no longer hand-rolls plane merges.
+
+    Pass ``transport=`` (an :class:`~repro.transport.ExpertTransport`) to
+    construct the registry over a **remote** store: the cold tier becomes
+    a :class:`RemoteExpertStore` and experts are fetched over the wire on
+    first use; :meth:`prefetch` overlaps those transfers with ongoing
+    serving work.
     """
 
     def __init__(self, store: Optional[ExpertStore] = None, *,
                  cold_golomb: bool = False,
-                 device_cache_bytes: int = DEFAULT_DEVICE_BYTES):
-        self.store = store or ExpertStore(cold_golomb=cold_golomb)
+                 device_cache_bytes: int = DEFAULT_DEVICE_BYTES,
+                 transport=None):
+        if store is not None and transport is not None:
+            raise ValueError("pass either store= or transport=, not both")
+        if store is None:
+            store = (RemoteExpertStore(transport, cold_golomb=cold_golomb)
+                     if transport is not None
+                     else ExpertStore(cold_golomb=cold_golomb))
+        self.store = store
         self.device_cache_bytes = device_cache_bytes
         self._device: Optional[DeviceCache] = None
 
     # ---- library management -------------------------------------------
     def add(self, expert, *experts) -> Expert:
         """Register one or more experts; returns the (first) normalized
-        Expert."""
-        first = self.store.put(expert)
-        for e in experts:
-            self.store.put(e)
-        return first
+        Expert.  A staged prefetch for the same name is invalidated so a
+        local overlay cannot be shadowed by an in-flight remote fetch."""
+        out = []
+        for e in (expert,) + experts:
+            ex = self.store.put(e)
+            if self._device is not None:
+                self._device.invalidate_pending(ex.name)
+            out.append(ex)
+        return out[0]
 
     put = add   # ExpertStore-compatible spelling
 
@@ -298,6 +480,34 @@ class ExpertRegistry:
     def fetch_packed(self, name: str) -> dict:
         """Device-resident ``{path: PackedTernary}`` for one expert."""
         return {} if name == BASE else self.device().fetch(name)
+
+    def prefetch(self, names) -> int:
+        """Stage promotions for ``names`` in the background (see
+        :meth:`DeviceCache.prefetch`).  Advisory — never blocks on the
+        store; the BASE sentinel is skipped and a name that turns out to
+        be unknown still fails loudly on its synchronous fetch.  Returns
+        the number of stages issued."""
+        if isinstance(names, str):
+            names = [names]
+        names = [n for n in names if n != BASE]
+        if not names:
+            return 0
+        return self.device().prefetch(names)
+
+    def close(self) -> None:
+        """Release the HBM tier's prefetch workers and staged promotions
+        (the registry stays usable; a later fetch re-promotes)."""
+        if self._device is not None:
+            self._device.close()
+
+    def publish(self, expert, rep: Optional[str] = None) -> dict:
+        """Upload an expert through the registry's transport (remote
+        registries only) and keep a cold-local copy."""
+        if not isinstance(self.store, RemoteExpertStore):
+            raise TypeError("publish() needs a transport-backed registry; "
+                            "construct with ExpertRegistry(transport=...) "
+                            "or repro.api.registry(transport=...)")
+        return self.store.publish(expert, rep=rep)
 
     def stacked(self, names: tuple) -> dict:
         return self.device().stacked(tuple(names))

@@ -1,0 +1,25 @@
+"""repro.transport — move ComPEFT experts between hosts.
+
+The wire format (:mod:`repro.transport.wire`) serializes one
+:class:`~repro.expert.Expert` into a self-describing, checksummed blob;
+the backends (:mod:`repro.transport.backends`) move blobs over a
+filesystem, a simulated network link, or HTTP(S).  The serving stack's
+REMOTE storage tier (:class:`repro.serve.expert_cache.RemoteExpertStore`)
+is built on this module — see ``docs/ARCHITECTURE.md``.
+"""
+
+from repro.transport.backends import (ExpertTransport, HTTPTransport,
+                                      InMemoryTransport, LocalTransport,
+                                      SimulatedNetworkTransport,
+                                      TransportStats, serve_local_http)
+from repro.transport.wire import (MAGIC, VERSION, WIRE_SUFFIX, ChecksumError,
+                                  TransportError, WireFormatError,
+                                  decode_expert, encode_expert, is_wire_blob,
+                                  peek_manifest, wire_nbytes)
+
+__all__ = ["ExpertTransport", "HTTPTransport", "InMemoryTransport",
+           "LocalTransport", "SimulatedNetworkTransport", "TransportStats",
+           "serve_local_http", "MAGIC", "VERSION", "WIRE_SUFFIX",
+           "ChecksumError", "TransportError", "WireFormatError",
+           "decode_expert", "encode_expert", "is_wire_blob",
+           "peek_manifest", "wire_nbytes"]

@@ -1,0 +1,300 @@
+"""Transport backends: how a wire-format expert blob actually moves.
+
+:class:`ExpertTransport` is the abstraction the serving stack's REMOTE
+tier (:class:`~repro.serve.expert_cache.RemoteExpertStore`) sits on: a
+named blob store with ``publish`` (encode + upload) and ``fetch``
+(download + decode) and per-transport byte/latency accounting.  Three
+backends ship:
+
+* :class:`LocalTransport`      — a directory of ``<name>.cpft`` files
+  (shared filesystem / object-store mount).
+* :class:`SimulatedNetworkTransport` — in-process store behind a
+  configurable bandwidth / latency / loss model.  Deterministic (seeded),
+  so benchmarks of the paper's communication-cost claim are reproducible
+  without real network flakiness (``perf_lab --exp remote_fetch``).
+* :class:`HTTPTransport`       — fetch over HTTP(S) with stdlib urllib
+  (no extra dependencies); any static file server works, e.g.
+  :func:`serve_local_http` over a :class:`LocalTransport` root.
+
+Backends are thread-safe for concurrent ``fetch`` of distinct names —
+the prefetch pipeline in :class:`~repro.serve.expert_cache.DeviceCache`
+issues them from worker threads so transfer overlaps decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.expert import GOLOMB, Expert
+from repro.transport.wire import (WIRE_SUFFIX, TransportError, decode_expert,
+                                  encode_expert)
+
+
+@dataclasses.dataclass
+class TransportStats:
+    publishes: int = 0
+    fetches: int = 0
+    bytes_out: int = 0
+    bytes_in: int = 0
+    fetch_seconds: float = 0.0
+    retries: int = 0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+class ExpertTransport:
+    """Named blob store for wire-format experts.
+
+    Subclasses implement ``_put(name, blob)``, ``_get(name) -> bytes``
+    and ``_names() -> list[str]``; this base class owns encode/decode and
+    the :class:`TransportStats` ledger.
+    """
+
+    default_rep = GOLOMB
+
+    def __init__(self):
+        self.stats = TransportStats()
+        self._stats_lock = threading.Lock()
+
+    # ---- public API ----------------------------------------------------
+    def publish(self, expert: Any, rep: Optional[str] = None) -> dict:
+        """Encode ``expert`` (Expert or legacy artifact) and upload it.
+
+        Returns ``{name, rep, nbytes}`` — ``nbytes`` is bytes-on-wire.
+        """
+        rep = rep or self.default_rep
+        blob = encode_expert(expert, rep=rep)
+        name = getattr(expert, "name", None) or "expert"
+        self._put(name, blob)
+        with self._stats_lock:
+            self.stats.publishes += 1
+            self.stats.bytes_out += len(blob)
+        return {"name": name, "rep": rep, "nbytes": len(blob)}
+
+    def fetch_bytes(self, name: str) -> bytes:
+        """Download the raw wire blob for ``name`` (no decode)."""
+        t0 = time.perf_counter()
+        blob = self._get(name)
+        dt = time.perf_counter() - t0
+        with self._stats_lock:
+            self.stats.fetches += 1
+            self.stats.bytes_in += len(blob)
+            self.stats.fetch_seconds += dt
+        return blob
+
+    def fetch(self, name: str) -> Expert:
+        """Download + decode ``name`` into an :class:`Expert` (checksum
+        verified; GOLOMB payloads stay lazily encoded on the Expert)."""
+        return decode_expert(self.fetch_bytes(name), name=name)
+
+    def names(self) -> list[str]:
+        return self._names()
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._names()
+
+    # ---- backend hooks -------------------------------------------------
+    def _put(self, name: str, blob: bytes) -> None:
+        raise NotImplementedError
+
+    def _get(self, name: str) -> bytes:
+        raise NotImplementedError
+
+    def _names(self) -> list[str]:
+        raise NotImplementedError
+
+
+class InMemoryTransport(ExpertTransport):
+    """Dict-backed store — unit tests and the simulated-network inner
+    store."""
+
+    def __init__(self):
+        super().__init__()
+        self._blobs: dict[str, bytes] = {}
+
+    def _put(self, name: str, blob: bytes) -> None:
+        self._blobs[name] = blob
+
+    def _get(self, name: str) -> bytes:
+        try:
+            return self._blobs[name]
+        except KeyError:
+            raise TransportError(f"no published expert named {name!r}") \
+                from None
+
+    def _names(self) -> list[str]:
+        return list(self._blobs)
+
+
+class LocalTransport(ExpertTransport):
+    """Filesystem backend: one ``<name>.cpft`` file per expert under
+    ``root``.  Expert names must be filesystem-safe (they are used as
+    file names verbatim)."""
+
+    def __init__(self, root: str):
+        super().__init__()
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, name: str) -> str:
+        return os.path.join(self.root, name + WIRE_SUFFIX)
+
+    def _put(self, name: str, blob: bytes) -> None:
+        tmp = self._path(name) + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, self._path(name))      # atomic: no torn reads
+
+    def _get(self, name: str) -> bytes:
+        try:
+            with open(self._path(name), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            raise TransportError(
+                f"no published expert named {name!r} under {self.root}") \
+                from None
+
+    def _names(self) -> list[str]:
+        return sorted(f[:-len(WIRE_SUFFIX)] for f in os.listdir(self.root)
+                      if f.endswith(WIRE_SUFFIX))
+
+
+class SimulatedNetworkTransport(ExpertTransport):
+    """A link model in front of another transport.
+
+    ``fetch_bytes`` charges ``latency_s + nbytes / bandwidth_bps`` of real
+    wall time per attempt, and with probability ``loss`` an attempt is
+    dropped (the full delay is still paid, then the fetch retries, up to
+    ``max_retries``).  Seeded, so a benchmark run is reproducible.
+    Publishing is free: the publisher's upload is not what the paper's
+    per-query retrieval claim is about.
+    """
+
+    def __init__(self, bandwidth_bps: float = 1e9, latency_s: float = 0.0,
+                 loss: float = 0.0, seed: int = 0,
+                 inner: Optional[ExpertTransport] = None,
+                 max_retries: int = 5):
+        super().__init__()
+        if not (0.0 <= loss < 1.0):
+            raise ValueError(f"loss must be in [0, 1), got {loss}")
+        self.bandwidth_bps = float(bandwidth_bps)
+        self.latency_s = float(latency_s)
+        self.loss = float(loss)
+        self.max_retries = max_retries
+        self.inner = inner or InMemoryTransport()
+        self._rng = np.random.default_rng(seed)
+        self._rng_lock = threading.Lock()
+
+    def _delay(self, nbytes: int) -> float:
+        return self.latency_s + nbytes / max(self.bandwidth_bps, 1.0)
+
+    def _dropped(self) -> bool:
+        if not self.loss:
+            return False
+        with self._rng_lock:
+            return bool(self._rng.random() < self.loss)
+
+    def _put(self, name: str, blob: bytes) -> None:
+        self.inner._put(name, blob)
+
+    def _get(self, name: str) -> bytes:
+        blob = self.inner._get(name)
+        delay = self._delay(len(blob))
+        for _ in range(self.max_retries):
+            time.sleep(delay)
+            if not self._dropped():
+                return blob
+            with self._stats_lock:
+                self.stats.retries += 1
+        raise TransportError(
+            f"fetch of {name!r} dropped {self.max_retries} times "
+            f"(loss={self.loss})")
+
+    def _names(self) -> list[str]:
+        return self.inner._names()
+
+
+class HTTPTransport(ExpertTransport):
+    """Fetch experts from ``<base_url>/<name>.cpft`` over HTTP(S).
+
+    Read-mostly by design: any static file server fronting a
+    :class:`LocalTransport` root works (see :func:`serve_local_http`).
+    ``publish`` issues an HTTP PUT, which plain static servers reject —
+    publish through the filesystem/object store behind the server instead.
+    """
+
+    def __init__(self, base_url: str, timeout_s: float = 30.0):
+        super().__init__()
+        self.base_url = base_url.rstrip("/")
+        self.timeout_s = timeout_s
+
+    def _url(self, name: str) -> str:
+        from urllib.parse import quote
+        return f"{self.base_url}/{quote(name)}{WIRE_SUFFIX}"
+
+    def _request(self, name: str, method: str):
+        import urllib.error
+        import urllib.request
+        req = urllib.request.Request(self._url(name), method=method)
+        try:
+            return urllib.request.urlopen(req, timeout=self.timeout_s)
+        except urllib.error.HTTPError as e:
+            if method == "HEAD" and e.code == 404:
+                return None
+            raise TransportError(
+                f"HTTP {e.code} for expert {name!r} at {self._url(name)}") \
+                from e
+        except urllib.error.URLError as e:
+            raise TransportError(
+                f"cannot reach {self._url(name)}: {e.reason}") from e
+
+    def _get(self, name: str) -> bytes:
+        with self._request(name, "GET") as resp:
+            return resp.read()
+
+    def _put(self, name: str, blob: bytes) -> None:
+        import urllib.error
+        import urllib.request
+        req = urllib.request.Request(self._url(name), data=blob,
+                                     method="PUT")
+        try:
+            urllib.request.urlopen(req, timeout=self.timeout_s).close()
+        except (urllib.error.URLError, OSError) as e:
+            raise TransportError(
+                f"HTTP publish to {self._url(name)} failed ({e}); static "
+                "servers are read-only — publish via the store behind "
+                "the server (e.g. LocalTransport on its root)") from e
+
+    def __contains__(self, name: str) -> bool:
+        resp = self._request(name, "HEAD")
+        if resp is None:
+            return False
+        resp.close()
+        return True
+
+    def _names(self) -> list[str]:
+        raise TransportError(
+            "HTTPTransport cannot enumerate experts; fetch by name")
+
+
+def serve_local_http(root: str, host: str = "127.0.0.1", port: int = 0):
+    """Serve a :class:`LocalTransport` root over HTTP in a daemon thread.
+
+    Returns ``(server, base_url)``; call ``server.shutdown()`` when done.
+    Pairs a filesystem publisher with :class:`HTTPTransport` consumers —
+    the integration tests and ``examples/remote_experts.py`` use it.
+    """
+    import functools
+    from http.server import SimpleHTTPRequestHandler, ThreadingHTTPServer
+    handler = functools.partial(SimpleHTTPRequestHandler, directory=root)
+    server = ThreadingHTTPServer((host, port), handler)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    return server, f"http://{server.server_address[0]}:{server.server_address[1]}"

@@ -1,0 +1,211 @@
+"""Versioned, self-describing wire format for :class:`~repro.expert.Expert`.
+
+This is the artifact that actually crosses a network — the paper's whole
+point is that a ComPEFT expert is small enough to fetch per query.  One
+blob carries an entire expert:
+
+    +------+---------+--------------+-----------------------+----------+
+    | CPFT | version | manifest len | manifest (JSON, utf-8) | payload  |
+    | 4 B  |  u8     |   u32 LE     |                       | N bytes  |
+    +------+---------+--------------+-----------------------+----------+
+
+The manifest is self-describing: representation (``dense`` / ``packed`` /
+``golomb``), per-leaf path/shape/dtype/scale and payload offsets, plus a
+CRC-32 of the payload so a torn or corrupted transfer is rejected instead
+of silently decoded.  The payload is the concatenation of the per-leaf
+encodings for the chosen representation:
+
+* ``GOLOMB`` — each leaf is a self-contained Golomb-Rice stream
+  (:func:`repro.core.golomb.encode`); the storage-optimal form and the
+  default for every transport backend.
+* ``PACKED`` — each leaf is the raw ``pos`` then ``neg`` bitplane words
+  (little-endian uint32; 2 bits/param) — no decode cost on arrival.
+* ``DENSE``  — each leaf is the bf16 reconstruction ``signs * scale``
+  (2 bytes/param).  This is the "ship the dense checkpoint" baseline the
+  paper argues against; it exists so ``perf_lab --exp remote_fetch`` can
+  measure the communication-cost curve against it.
+
+All three decode back to **bit-identical** packed bitplanes (dense sends
+``±scale`` values whose signs recover the ternary mask exactly), so a
+fetched expert serves the same tokens as a locally loaded one.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+import zlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.expert import (DENSE, GOLOMB, PACKED, Expert, as_expert,
+                          planes_from_signs)
+
+MAGIC = b"CPFT"
+VERSION = 1
+WIRE_SUFFIX = ".cpft"
+WIRE_FORMAT = "compeft-wire"
+
+_HEADER = struct.Struct("<4sBI")        # magic | version | manifest nbytes
+_WIRE_REPS = (DENSE, PACKED, GOLOMB)    # TERNARY has no wire advantage
+
+_BF16 = np.dtype(jnp.bfloat16)
+
+
+class TransportError(Exception):
+    """Base error for the transport subsystem (backends + wire format)."""
+
+
+class WireFormatError(TransportError):
+    """Blob is not a (supported) ComPEFT wire artifact."""
+
+
+class ChecksumError(WireFormatError):
+    """Payload failed CRC verification — corrupt or truncated transfer."""
+
+
+def _leaf_payload(pt, rep: str) -> bytes:
+    """Encode one PackedTernary leaf for the chosen wire representation."""
+    from repro.core import golomb
+    from repro.core.packing import signs_np
+    if rep == GOLOMB:
+        return golomb.encode(signs_np(pt), float(pt.scale))
+    if rep == PACKED:
+        pos = np.asarray(jax.device_get(pt.pos)).astype("<u4")
+        neg = np.asarray(jax.device_get(pt.neg)).astype("<u4")
+        return pos.tobytes() + neg.tobytes()
+    if rep == DENSE:
+        vals = signs_np(pt).astype(np.float32) * float(pt.scale)
+        return vals.astype(_BF16).tobytes()
+    raise WireFormatError(f"representation {rep!r} has no wire encoding; "
+                          f"choose from {_WIRE_REPS}")
+
+
+def encode_expert(expert: Any, rep: str = GOLOMB) -> bytes:
+    """Serialize an expert (or legacy artifact) into one wire blob.
+
+    ``rep`` picks the payload encoding (see module docstring); the
+    manifest records it so :func:`decode_expert` needs no out-of-band
+    information.  Bytes-on-wire is ``len(result)``.
+    """
+    if rep not in _WIRE_REPS:
+        raise WireFormatError(f"representation {rep!r} has no wire "
+                              f"encoding; choose from {_WIRE_REPS}")
+    ex = as_expert(expert)
+    packed = ex.packed
+    parts: list[bytes] = []
+    leaves: list[dict] = []
+    offset = 0
+    for path, pt in packed.items():
+        blob = _leaf_payload(pt, rep)
+        leaves.append({"path": path, "shape": list(pt.shape),
+                       "dtype": str(jnp.dtype(pt.orig_dtype)),
+                       "scale": float(pt.scale),
+                       "offset": offset, "nbytes": len(blob)})
+        parts.append(blob)
+        offset += len(blob)
+    payload = b"".join(parts)
+    manifest = {"format": WIRE_FORMAT, "version": VERSION,
+                "name": ex.name, "kind": ex.kind, "rep": rep,
+                "density": ex.density, "alpha": ex.alpha, "meta": ex.meta,
+                "leaves": leaves, "payload_nbytes": len(payload),
+                "crc32": zlib.crc32(payload)}
+    mj = json.dumps(manifest).encode("utf-8")
+    return _HEADER.pack(MAGIC, VERSION, len(mj)) + mj + payload
+
+
+def is_wire_blob(data: bytes) -> bool:
+    """Cheap sniff: does this look like a ComPEFT wire artifact?"""
+    return len(data) >= _HEADER.size and data[:4] == MAGIC
+
+
+def peek_manifest(data: bytes) -> dict:
+    """Parse and validate the header + manifest WITHOUT touching the
+    payload (no checksum pass) — for listings and size accounting."""
+    if len(data) < _HEADER.size:
+        raise WireFormatError("blob shorter than the wire header")
+    magic, version, mlen = _HEADER.unpack_from(data)
+    if magic != MAGIC:
+        raise WireFormatError("bad magic: not a ComPEFT wire artifact")
+    if version > VERSION:
+        raise WireFormatError(
+            f"wire format version {version} is newer than supported "
+            f"({VERSION}); upgrade the reader")
+    if len(data) < _HEADER.size + mlen:
+        raise WireFormatError("truncated blob: manifest incomplete")
+    try:
+        manifest = json.loads(data[_HEADER.size:_HEADER.size + mlen])
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise WireFormatError(f"manifest is not valid JSON: {e}") from e
+    if manifest.get("format") != WIRE_FORMAT:
+        raise WireFormatError(f"unknown manifest format "
+                              f"{manifest.get('format')!r}")
+    return manifest
+
+
+def decode_expert(data: bytes, name: Optional[str] = None) -> Expert:
+    """Inverse of :func:`encode_expert` -> :class:`~repro.expert.Expert`.
+
+    Verifies magic, version, payload length and CRC-32 before building
+    anything; raises :class:`WireFormatError` / :class:`ChecksumError` on
+    a bad blob.  GOLOMB payloads stay lazily encoded on the Expert (the
+    batched plane decode runs on first ``as_``/``.packed`` access, exactly
+    like the cold store tier); PACKED and DENSE payloads realise planes
+    immediately.
+    """
+    manifest = peek_manifest(data)
+    _, _, mlen = _HEADER.unpack_from(data)
+    payload = data[_HEADER.size + mlen:]
+    if len(payload) != manifest["payload_nbytes"]:
+        raise ChecksumError(
+            f"payload is {len(payload)} bytes, manifest promises "
+            f"{manifest['payload_nbytes']} — truncated transfer?")
+    if zlib.crc32(payload) != manifest["crc32"]:
+        raise ChecksumError("payload CRC mismatch — corrupt transfer")
+
+    from repro.expert import _np_dtype
+    rep = manifest["rep"]
+    ex = Expert(name or manifest["name"], manifest.get("kind", "full"),
+                density=manifest.get("density", 0.0),
+                alpha=manifest.get("alpha", 1.0),
+                meta=manifest.get("meta", {}))
+    ex._manifest = manifest
+    blobs: dict[str, bytes] = {}
+    planes: dict[str, Any] = {}
+    for leaf in manifest["leaves"]:
+        path = leaf["path"]
+        shape = tuple(leaf["shape"])
+        dtype = _np_dtype(leaf["dtype"])
+        ex._leaf_meta[path] = {"shape": shape, "orig_dtype": dtype}
+        raw = payload[leaf["offset"]:leaf["offset"] + leaf["nbytes"]]
+        if rep == GOLOMB:
+            blobs[path] = raw
+        elif rep == PACKED:
+            words = np.frombuffer(raw, dtype="<u4")
+            half = words.size // 2
+            from repro.core.packing import PackedTernary
+            planes[path] = PackedTernary(
+                pos=jnp.asarray(words[:half]), neg=jnp.asarray(words[half:]),
+                scale=jnp.asarray(leaf["scale"], jnp.float32),
+                shape=shape, orig_dtype=dtype)
+        elif rep == DENSE:
+            vals = np.frombuffer(raw, dtype=_BF16).astype(np.float32)
+            signs = np.sign(vals).astype(np.int8)
+            planes[path] = planes_from_signs(signs, leaf["scale"], shape,
+                                             dtype)
+        else:
+            raise WireFormatError(f"manifest names unknown representation "
+                                  f"{rep!r}")
+    if rep == GOLOMB:
+        ex._reps[GOLOMB] = blobs
+    else:
+        ex._reps[PACKED] = planes
+    return ex
+
+
+def wire_nbytes(expert: Any, rep: str = GOLOMB) -> int:
+    """Bytes-on-wire for one expert in one representation (header incl.)."""
+    return len(encode_expert(expert, rep=rep))

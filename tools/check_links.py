@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo links in README.md and docs/*.md.
+
+Checks every inline markdown link ``[text](target)`` whose target is a
+relative path (external URLs and mailto: are skipped; ``#fragment``
+suffixes are stripped; pure-fragment links are ignored).  A target must
+exist as a file or directory relative to the markdown file that names
+it.  Exits non-zero listing every broken link.
+
+    python tools/check_links.py [files...]     # default: README.md docs/*.md
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# inline links, excluding images' leading "!" is fine to include — a
+# broken image path is just as broken as a broken link
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = re.compile(r"^(https?:|mailto:|ftp:|#)")
+
+
+def check_file(md_path: str) -> list[str]:
+    base = os.path.dirname(os.path.abspath(md_path))
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    broken = []
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if _SKIP.match(target):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        line = text.count("\n", 0, m.start()) + 1
+        if not os.path.exists(os.path.join(base, path)):
+            broken.append(f"{md_path}:{line}: broken link -> {target}")
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    files = argv or (["README.md"] + sorted(glob.glob("docs/*.md")))
+    missing = [f for f in files if not os.path.exists(f)]
+    if missing:
+        print(f"no such markdown file(s): {missing}", file=sys.stderr)
+        return 2
+    broken = [b for f in files for b in check_file(f)]
+    for b in broken:
+        print(b, file=sys.stderr)
+    n_files = len(files)
+    if broken:
+        print(f"{len(broken)} broken link(s) across {n_files} file(s)",
+              file=sys.stderr)
+        return 1
+    print(f"link check OK ({n_files} file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
