@@ -88,6 +88,26 @@ def save(name: str, records: list):
               f"bound={r['bottleneck']} roofline={r['roofline_frac']:.4f}")
 
 
+def bench_update(fname: str, key: str, rec: dict):
+    """Merge one experiment's record into a repo-root BENCH_*.json snapshot
+    keyed by experiment, preserving the other experiments' entries (so
+    e.g. BENCH_serve.json carries mixed_serve AND decode_loop side by
+    side).  Legacy single-record snapshots are lifted under their tag."""
+    path = os.path.join(os.path.dirname(__file__), "..", fname)
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            data = {}
+    if "tag" in data:                      # legacy layout: one bare record
+        data = {data["tag"]: data}
+    data[key] = rec
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, default=float)
+
+
 # ---------------------------------------------------------------------------
 # Experiments
 # ---------------------------------------------------------------------------
@@ -371,9 +391,7 @@ def exp_mixed_serve(smoke: bool = False):
     assert rec["mixed_equals_sequential"], "mixed wave diverged"
 
     save_raw("mixed_serve", [rec])
-    with open(os.path.join(os.path.dirname(__file__), "..",
-                           "BENCH_serve.json"), "w") as f:
-        json.dump(rec, f, indent=1, default=float)
+    bench_update("BENCH_serve.json", "mixed_serve", rec)
     print(f"serve: grouped={t_grouped:.2f}s ({rec['grouped_tok_s']:.1f} "
           f"tok/s, {rec['grouped_summary']['n_swaps']} merges) "
           f"mixed={t_mixed:.2f}s ({rec['mixed_tok_s']:.1f} tok/s, "
@@ -382,6 +400,125 @@ def exp_mixed_serve(smoke: bool = False):
           f"parity={rec['mixed_equals_sequential']}")
     if not smoke:
         assert rec["decode_speedup_x"] >= 2.0, rec["decode_speedup_x"]
+
+
+def exp_decode_loop(smoke: bool = False):
+    """Tentpole measurement: device-resident chunked decode (scan-compiled
+    wave loop, one host sync per K steps, donated KV cache) vs the eager
+    per-token loop (one dispatch + one blocking ``np.asarray`` sync per
+    generated token).
+
+    Sweeps K ∈ {1, 4, 8, 16, 32} against eager at B ∈ {1, 8}, mixed and
+    grouped scheduling, on a request stream with more requests than slots
+    so mid-wave admissions (slot refills) are exercised.  Two gates:
+
+    * **parity** — greedy chunked decode must reproduce the eager loop's
+      tokens exactly, per request, for every (scheduling, B, K) cell,
+      admissions included (asserted in smoke mode too);
+    * **speedup** — ≥ 1.5x decode tokens/s over eager at B=8, K=16
+      (full runs only).
+    """
+    import jax.numpy as jnp
+
+    from repro import api as capi
+    from repro.serve import Request
+
+    n_experts = 4
+    max_new = 8 if smoke else 32     # decode-dominated sweep workload
+    adm_max_new = 8                  # admission workload: 2 fills per slot
+    prompt_len = 12
+    cache_len = 96
+    api, rt, cfg, base, experts = _serve_fixture(n_experts=n_experts)
+    rng = np.random.default_rng(0)
+    prompt_pool = [jnp.asarray(rng.integers(1, cfg.vocab, prompt_len),
+                               jnp.int32) for _ in range(16)]
+
+    def mk_reqs(n, new_tokens):
+        return [Request(uid=i, expert=f"expert{i % n_experts}",
+                        prompt=prompt_pool[i], max_new_tokens=new_tokens)
+                for i in range(n)]
+
+    def engine(sched, B, K):
+        return capi.serve(api, rt, base, capi.registry(experts=experts),
+                          max_batch=B, cache_len=cache_len,
+                          scheduling=sched, decode_chunk=K)
+
+    def run_timed(sched, B, K):
+        """One wave-sized batch (n_reqs = B), warm pass first, so the
+        timed pass isolates steady-state decode throughput."""
+        eng = engine(sched, B, K)
+        eng.run(mk_reqs(B, max_new))   # warm: compiles every executable
+        reqs = mk_reqs(B, max_new)
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        dt = time.perf_counter() - t0
+        return dt, {r.uid: list(r.out_tokens) for r in reqs}
+
+    def run_admissions(sched, B, K):
+        """2x oversubscribed queue: finished slots refill mid-wave."""
+        eng = engine(sched, B, K)
+        reqs = mk_reqs(2 * B, adm_max_new)
+        eng.run(reqs)
+        admitted = sum(w["admitted"] for w in eng.wave_log)
+        return {r.uid: list(r.out_tokens) for r in reqs}, admitted
+
+    scheds = ("mixed",) if smoke else ("mixed", "grouped")
+    batches = (8,) if smoke else (1, 8)
+    chunk_sizes = (8,) if smoke else (1, 4, 8, 16, 32)
+    rows, parity = [], True
+    tok_s = {}
+    for sched in scheds:
+        for B in batches:
+            t_eager, tok_eager = run_timed(sched, B, 0)
+            total = sum(len(v) for v in tok_eager.values())
+            tok_s[(sched, B, 0)] = total / t_eager
+            rows.append({"sched": sched, "B": B, "K": 0, "mode": "eager",
+                         "tokens": total, "seconds": t_eager,
+                         "tok_s": total / t_eager})
+            for K in chunk_sizes:
+                t, toks = run_timed(sched, B, K)
+                ok = toks == tok_eager
+                parity = parity and ok
+                tok_s[(sched, B, K)] = total / t
+                rows.append({"sched": sched, "B": B, "K": K,
+                             "mode": "chunked", "tokens": total,
+                             "seconds": t, "tok_s": total / t,
+                             "speedup_vs_eager_x": t_eager / t,
+                             "token_parity_vs_eager": ok})
+                print(f"[{sched:>7s} B={B} K={K:>2d}] "
+                      f"{total / t:8.1f} tok/s "
+                      f"({t_eager / t:4.2f}x eager) parity={ok}")
+
+    # parity gate WITH mid-wave admissions: greedy chunked decode must
+    # reproduce the eager loop's per-request tokens exactly while slots
+    # are being refilled (spliced prefills folded into the device state)
+    adm_B = 8
+    adm_parity = True
+    for sched in scheds:
+        tok_eager, _ = run_admissions(sched, adm_B, 0)
+        for K in chunk_sizes:
+            toks, admitted = run_admissions(sched, adm_B, K)
+            ok = toks == tok_eager
+            adm_parity = adm_parity and ok
+            print(f"[{sched:>7s} admissions K={K:>2d}] refills={admitted} "
+                  f"parity={ok}")
+
+    gate_B, gate_K = (8, 8) if smoke else (8, 16)
+    speedup = tok_s[("mixed", gate_B, gate_K)] / tok_s[("mixed", gate_B, 0)]
+    rec = {"tag": "decode_loop", "n_experts": n_experts,
+           "max_new_tokens": max_new, "prompt_len": prompt_len,
+           "rows": rows, "token_parity": parity,
+           "admission_token_parity": adm_parity,
+           "gate": {"B": gate_B, "K": gate_K,
+                    "speedup_vs_eager_x": speedup}}
+    save_raw("decode_loop", [rec])
+    bench_update("BENCH_serve.json", "decode_loop", rec)
+    print(f"decode_loop: parity={parity} (admissions: {adm_parity}); "
+          f"chunked K={gate_K} B={gate_B} is {speedup:.2f}x eager decode")
+    assert parity, "chunked decode diverged from the eager loop"
+    assert adm_parity, "chunked decode diverged under mid-wave admissions"
+    if not smoke:
+        assert speedup >= 1.5, speedup
 
 
 def exp_remote_fetch(smoke: bool = False):
@@ -485,6 +622,7 @@ EXPS = {
     "llama4_prefill": exp_llama4_prefill,
     "compress_swap": exp_compress_swap,
     "mixed_serve": exp_mixed_serve,
+    "decode_loop": exp_decode_loop,
     "remote_fetch": exp_remote_fetch,
 }
 

@@ -92,7 +92,7 @@ def merge(experts: Sequence[Any], method: str = "auto", lam: float = 1.0,
 
 def registry(store=None, *, cold_golomb: bool = False,
              device_cache_bytes: Optional[int] = None,
-             transport=None,
+             transport=None, cold_budget_bytes: Optional[int] = None,
              experts: Sequence[Any] = ()) -> "ExpertRegistry":
     """A fresh :class:`~repro.serve.expert_cache.ExpertRegistry` (cold
     store + lazy HBM tier), optionally pre-populated with ``experts``.
@@ -101,11 +101,14 @@ def registry(store=None, *, cold_golomb: bool = False,
     the registry over a **remote** store instead: experts publish and
     fetch as checksummed wire-format blobs, and ``reg.prefetch(names)``
     overlaps transfers with serving.  ``store`` and ``transport`` are
-    mutually exclusive.
+    mutually exclusive.  ``cold_budget_bytes`` bounds the cold-local cache
+    of fetched wire blobs with an LRU (dropped blobs re-fetch
+    transparently; ``SwapStats.cold_evictions`` counts them).
     """
     from repro.serve.expert_cache import DEFAULT_DEVICE_BYTES, ExpertRegistry
     reg = ExpertRegistry(
         store, cold_golomb=cold_golomb, transport=transport,
+        cold_budget_bytes=cold_budget_bytes,
         device_cache_bytes=device_cache_bytes or DEFAULT_DEVICE_BYTES)
     for e in experts:
         reg.add(e)
@@ -120,12 +123,29 @@ def serve(model, rt, base_params: PyTree, reg, cfg=None,
     ``repro.models.build``; ``cfg`` an
     :class:`~repro.serve.engine.EngineConfig` (or pass its fields as
     keyword arguments, e.g. ``max_batch=8, cache_len=128``).
+
+    Decode is device-resident by default: ``decode_chunk=K`` (16) compiles
+    K decode steps per launch with on-device stopping and token selection;
+    ``decode_chunk=0`` is the eager per-token baseline.  Sampling knobs
+    can be passed flat — ``temperature`` (0 = greedy), ``top_k`` (0 = full
+    vocabulary) and ``seed`` build the engine's
+    :class:`~repro.serve.decode_loop.SamplingConfig`; seeded sampling is
+    reproducible across chunk sizes and mid-wave admissions.
     """
+    import dataclasses
+    from repro.serve.decode_loop import SamplingConfig
     from repro.serve.engine import EngineConfig, ServeEngine
+    samp_kw = {k: engine_kw.pop(k)
+               for k in ("temperature", "top_k", "seed") if k in engine_kw}
+    if samp_kw:
+        if "sampling" in engine_kw:
+            raise ValueError("pass either sampling= or flat "
+                             "temperature/top_k/seed, not both")
+        base_samp = cfg.sampling if cfg is not None else SamplingConfig()
+        engine_kw["sampling"] = dataclasses.replace(base_samp, **samp_kw)
     if cfg is None:
         cfg = EngineConfig(**engine_kw)
     elif engine_kw:
-        import dataclasses
         cfg = dataclasses.replace(cfg, **engine_kw)
     return ServeEngine(model, rt, base_params, reg, cfg)
 

@@ -29,6 +29,12 @@ merge-on-swap.  ``build_overlay`` assembles the per-leaf stacks from the
 experts' packed path-dicts; block-level leaves carry the unit axis in front
 so the overlay threads through the model's ``lax.scan`` like the parameters
 themselves.
+
+The delta leaves are registered pytree nodes whose static aux data
+(``n_out``/``transpose``) is plain hashable tuples: an overlay built once
+per expert set has a **stable treedef**, so the compiled decode loop
+(``repro.serve.decode_loop``) can close over it as a scan invariant and
+re-trigger no compilation across chunk launches.
 """
 
 from __future__ import annotations

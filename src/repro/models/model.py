@@ -43,8 +43,13 @@ class ModelApi:
     init: Callable[[jax.Array], PyTree]
     loss_and_logits: Callable  # (params, batch, rt) -> (loss, (logits, aux))
     forward: Callable          # (params, batch, rt) -> (logits, aux)
-    prefill: Callable          # (params, batch, rt, cache_len) -> (logits, cache)
-    decode_step: Callable      # (params, token, cache, rt) -> (logits, cache)
+    # (params, batch, rt, cache_len) -> (logits, cache)
+    prefill: Callable
+    # (params, token, cache, rt, delta=, eid=) -> (logits, cache).
+    # Scan-compatible: ``cache["cur"]`` is a traced position, updates are
+    # functional with a stable pytree, so the serving layer can roll K
+    # steps into one lax.scan launch and donate the cache buffers.
+    decode_step: Callable
     init_decode_cache: Callable  # (batch, cache_len) -> cache
 
 

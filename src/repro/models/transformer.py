@@ -545,7 +545,15 @@ def _decode_block(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime, st,
 
 def decode_step(params, token, cache, cfg: ModelConfig, rt: Runtime,
                 delta=None, eid=None):
-    """token [B, 1] int32 -> (logits [B, 1, V], new_cache)."""
+    """token [B, 1] int32 -> (logits [B, 1, V], new_cache).
+
+    Scan-compatible by contract: the position ``cache["cur"]`` is consumed
+    as a traced int32 scalar (normalised below, so host-built caches with
+    a Python-int ``cur`` also work), every cache update is functional with
+    stable shapes, and the returned cache has the identical pytree
+    structure — the serving layer runs this body under ``lax.scan`` with
+    the cache donated (:mod:`repro.serve.decode_loop`).
+    """
     if rt.embed_lookup is not None:
         x = rt.embed_lookup(params["embed"], token)
     else:
@@ -556,7 +564,7 @@ def decode_step(params, token, cache, cfg: ModelConfig, rt: Runtime,
     if cfg.embed_scale:
         x = (x.astype(jnp.float32) * np.sqrt(cfg.d_model)).astype(x.dtype)
     x = rt.shard(x, ("batch", "seq", "embed_act"))
-    cur = cache["cur"]
+    cur = jnp.asarray(cache["cur"], jnp.int32)   # traced scalar position
     cross = cache.get("cross")
     start = cache.get("start")      # [B] first real position per row
     delta_blocks = delta.get("blocks") if delta is not None else None

@@ -1,3 +1,4 @@
+from repro.serve.decode_loop import PAD_TOKEN, SamplingConfig
 from repro.serve.engine import EngineConfig, Request, ServeEngine
 from repro.serve.expert_cache import (DeviceCache, ExpertRegistry,
                                       ExpertStore, RemoteExpertStore,
@@ -5,4 +6,4 @@ from repro.serve.expert_cache import (DeviceCache, ExpertRegistry,
 
 __all__ = ["EngineConfig", "Request", "ServeEngine", "DeviceCache",
            "ExpertRegistry", "ExpertStore", "RemoteExpertStore", "SwapStats",
-           "uncompressed_baseline_bytes"]
+           "SamplingConfig", "PAD_TOKEN", "uncompressed_baseline_bytes"]

@@ -1,0 +1,154 @@
+"""Device-resident decode: the wave loop as one compiled K-step launch.
+
+The eager serving loop pays one ``jax.jit`` dispatch **and** one blocking
+host sync (``np.asarray(tok)``) per generated token.  This module compiles
+K decode steps into a single launch instead: a ``lax.scan`` whose body
+
+  1. *emits* the pending token of every still-active row into an on-device
+     ``[B, K]`` buffer (finished rows emit :data:`PAD_TOKEN` — a done row
+     never forces an early host exit),
+  2. decrements each row's ``remaining`` generation budget, and
+  3. runs ``api.decode_step`` + on-device token selection (greedy argmax or
+     temperature/top-k sampling) for the whole batch — guarded by a
+     ``lax.cond`` on the on-device all-rows-done predicate, so the KV
+     position stops advancing the moment no row needs another token
+     (exactly where the eager loop breaks; this is what keeps chunked
+     decode bit-identical to eager, including the position mid-wave
+     admissions left-pad against).
+
+The KV cache is threaded through the launch with ``donate_argnums``: the
+scan updates it functionally and XLA reuses the donated buffers, so no
+per-step cache copy survives.  The engine becomes a *segmented* driver —
+launch a chunk, sync **once** to flush K tokens, run host-side
+admission/slot-refill, launch the next chunk.
+
+Sampling is reproducible by construction: every row derives its stream
+from ``fold_in(PRNGKey(seed), request.uid)`` and draws token *i* with
+``fold_in(row_key, i)``, so the tokens a request samples depend only on
+``(seed, uid, i)`` — not on the chunk size K, the slot it landed in, or
+when mid-wave admission spliced it into the batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PyTree = Any
+
+# emitted for rows whose budget is exhausted; engine flushes by count, so
+# pad entries are never read — -1 makes any accidental read fail loudly
+PAD_TOKEN = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    """On-device token selection knobs (static under jit).
+
+    ``temperature <= 0`` selects greedy argmax — the mode whose chunked
+    decode is bit-identical to the eager loop.  ``top_k = 0`` samples the
+    full vocabulary.  ``seed`` roots every per-request key stream.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def row_keys(seed: int, uids) -> jax.Array:
+    """Per-request PRNG keys [B, 2]: ``fold_in(PRNGKey(seed), uid)``."""
+    base = jax.random.PRNGKey(seed)
+    u = jnp.asarray(uids, jnp.uint32)
+    return jax.vmap(lambda x: jax.random.fold_in(base, x))(u)
+
+
+def select_tokens(logits: jax.Array, keys: jax.Array, gen: jax.Array,
+                  sampling: SamplingConfig) -> jax.Array:
+    """logits [B, V] -> next token [B] int32, on device.
+
+    ``gen`` is each row's position in its own token stream (number of
+    tokens generated so far); token *i* is drawn with
+    ``fold_in(keys[row], i)``, which makes sampled streams independent of
+    chunk size and admission timing.
+    """
+    logits = logits.astype(jnp.float32)
+    if sampling.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / max(sampling.temperature, 1e-6)
+    if sampling.top_k and sampling.top_k < logits.shape[-1]:
+        kth = lax.top_k(scaled, sampling.top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    step_keys = jax.vmap(jax.random.fold_in)(keys, gen.astype(jnp.uint32))
+    draw = jax.vmap(lambda k, l: jax.random.categorical(k, l))
+    return draw(step_keys, scaled).astype(jnp.int32)
+
+
+def make_token_select(sampling: SamplingConfig):
+    """Jitted first-token selector over prefill logits [B, T, V]."""
+
+    def first(logits, keys, gen):
+        return select_tokens(logits[:, -1], keys, gen, sampling)[:, None]
+
+    return jax.jit(first)
+
+
+def host_decode_steps(max_remaining: int, chunk: int) -> int:
+    """How many decode steps a chunk launch executes on device, computed
+    host-side so the engine can mirror ``cache["cur"]`` without a device
+    round-trip.  The scan body emits first, then decodes only while some
+    row still has budget after the emit — so a chunk whose largest
+    remaining budget is R advances the position by ``min(K, R - 1)``."""
+    return min(chunk, max(max_remaining - 1, 0))
+
+
+def make_decode_chunk(api, rt, chunk: int, sampling: SamplingConfig):
+    """Compile the K-step wave loop body for one engine.
+
+    Returns a jitted ``run(params, overlay, eid, tok, cache, remaining,
+    gen, keys) -> (tok, cache, tokens [B, K])`` with the cache donated.
+    ``overlay``/``eid`` are the zero-merge expert overlay and per-row
+    expert ids (``None`` on the merge/grouped path); ``tok`` [B, 1] is the
+    pending (generated, not yet emitted) token per row; ``remaining`` [B]
+    the per-row budget of tokens still to emit; ``gen`` [B] each row's
+    token-stream position; ``keys`` [B, 2] the per-row PRNG keys.
+
+    One launch serves up to K tokens per row; the engine syncs once on the
+    returned buffer, refills finished slots, and launches the next chunk.
+    """
+
+    def run(params, overlay, eid, tok, cache, remaining, gen, keys):
+        def body(carry, _):
+            tok, cache, remaining, gen = carry
+            active = remaining > 0
+            emit = jnp.where(active, tok[:, 0], PAD_TOKEN)
+            remaining = jnp.where(active, remaining - 1, remaining)
+
+            def step(op):
+                tok, cache, gen = op
+                logits, cache = api.decode_step(params, tok, cache, rt,
+                                                delta=overlay, eid=eid)
+                nxt = select_tokens(logits[:, -1], keys, gen, sampling)
+                return nxt[:, None].astype(jnp.int32), cache, gen + 1
+
+            # all-rows-done predicate ON DEVICE: once every budget is
+            # spent the position stops advancing, mirroring the eager
+            # loop's break — no host sync needed to stop early
+            tok, cache, gen = lax.cond(jnp.any(remaining > 0), step,
+                                       lambda op: op, (tok, cache, gen))
+            return (tok, cache, remaining, gen), emit
+
+        (tok, cache, _, _), buf = lax.scan(
+            body, (tok, cache, remaining, gen), length=chunk)
+        return tok, cache, buf.T          # tokens as [B, K]
+
+    # donate the KV cache (arg 4): the scan's functional updates then reuse
+    # the same HBM buffers across all K steps and across chunk launches
+    return jax.jit(run, donate_argnums=(4,))

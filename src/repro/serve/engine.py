@@ -21,7 +21,16 @@ base) survives as a fallback for model families the overlay cannot express
 (MoE/mamba/rwkv/enc-dec) and for waves whose expert set exceeds the stack
 budget.  ``scheduling="grouped"`` forces the old greedy same-expert
 scheduler — kept as the measured baseline of ``perf_lab --exp
-mixed_serve``."""
+mixed_serve``.
+
+Since PR 5 decode is **device-resident**: ``decode_chunk=K`` (the default)
+compiles K decode steps — including stopping masks and greedy/sampled
+token selection — into one ``lax.scan`` launch with a donated KV cache
+(:mod:`repro.serve.decode_loop`), and the wave loop becomes a segmented
+driver that syncs with the host once per chunk to flush tokens and run
+continuous admission.  ``decode_chunk=0`` keeps the eager per-token loop
+as the measured baseline of ``perf_lab --exp decode_loop``; greedy
+chunked decode is bit-identical to it, mid-wave admissions included."""
 
 from __future__ import annotations
 
@@ -38,6 +47,8 @@ import numpy as np
 from repro.models.delta import build_overlay, plan_overlay
 from repro.models.model import ModelApi
 from repro.models.transformer import Runtime
+from repro.serve import decode_loop
+from repro.serve.decode_loop import SamplingConfig
 from repro.serve.expert_cache import (BASE, DeviceCache, ExpertRegistry,
                                       ExpertStore, as_registry)
 
@@ -63,6 +74,11 @@ class EngineConfig:
     scheduling: str = "mixed"     # "mixed" (zero-merge) | "grouped" (merge)
     max_stack: int = 8            # max distinct experts stacked per wave
     continuous: bool = True       # refill finished slots mid-wave
+    # decode steps per compiled launch (scan-compiled wave loop with one
+    # host sync per chunk); 0 = the eager per-token loop (greedy only)
+    decode_chunk: int = 16
+    sampling: SamplingConfig = dataclasses.field(
+        default_factory=SamplingConfig)
 
 
 class ServeEngine:
@@ -86,6 +102,15 @@ class ServeEngine:
         # structure); rt and cache_len are static
         self._prefill = jax.jit(api.prefill, static_argnums=(2, 3))
         self._decode = jax.jit(api.decode_step, static_argnums=(3,))
+        if ecfg.decode_chunk < 0:
+            raise ValueError("decode_chunk must be >= 0")
+        if not ecfg.sampling.greedy and not ecfg.decode_chunk:
+            raise ValueError("temperature/top-k sampling needs the compiled "
+                             "decode loop; set decode_chunk > 0")
+        self._chunk_fn = (decode_loop.make_decode_chunk(
+            api, rt, ecfg.decode_chunk, ecfg.sampling)
+            if ecfg.decode_chunk else None)
+        self._select = decode_loop.make_token_select(ecfg.sampling)
         self.swap_log: list = []
         self.wave_log: list = []
 
@@ -232,13 +257,61 @@ class ServeEngine:
 
     def _serve_wave(self, wave: list[Request], experts: list[str],
                     overlay: dict, queue: deque) -> None:
+        if self.cfg.decode_chunk:
+            return self._serve_wave_chunked(wave, experts, overlay, queue)
+        return self._serve_wave_eager(wave, experts, overlay, queue)
+
+    def _try_admissions(self, rows, done, cur, experts, slot, overlay,
+                        eid, tok, keys, cache, queue):
+        """Refill finished slots in place from the queue head (host-side
+        continuous-admission logic, shared by the eager and chunked
+        drivers).  ``cur`` is the host-mirrored wave position — no device
+        round-trip per admission round.  Returns the updated device state
+        plus the list of slots refilled this round."""
+        refilled = []
+        for j in done:
+            if not queue:
+                break
+            nxt = queue[0]
+            if (nxt.expert not in slot
+                    and len(slot) >= self.cfg.max_stack):
+                break
+            if int(nxt.prompt.shape[0]) > cur:
+                break                 # cannot left-pad down
+            if cur + nxt.max_new_tokens > self.cfg.cache_len:
+                break                 # would wrap the KV ring
+            if nxt.expert not in slot:
+                grown = self._overlay_for(tuple(experts + [nxt.expert]))
+                if grown is None:
+                    break             # newcomer not coverable
+                experts.append(nxt.expert)
+                slot[nxt.expert] = len(experts) - 1
+                overlay = grown
+            queue.popleft()
+            rows[j] = nxt
+            eid = eid.at[j].set(slot[nxt.expert])
+            key_j = decode_loop.row_keys(self.cfg.sampling.seed, [nxt.uid])
+            keys = keys.at[j].set(key_j[0])
+            tok, cache = self._admit_row(nxt, j, cur, cache, tok,
+                                         overlay, eid, key_j)
+            refilled.append(j)
+        return rows, experts, overlay, eid, tok, keys, cache, refilled
+
+    def _serve_wave_eager(self, wave: list[Request], experts: list[str],
+                          overlay: dict, queue: deque) -> None:
+        """PR-2 baseline: one jitted decode dispatch + one host sync per
+        generated token.  Kept (``decode_chunk=0``) as the measured
+        baseline of ``perf_lab --exp decode_loop``."""
         t0 = time.perf_counter()
         slot = {e: i for i, e in enumerate(experts)}
         eid = jnp.asarray([slot[r.expert] for r in wave], jnp.int32)
         toks, start = self._pad_prompts(wave)
+        cur = int(toks.shape[1])           # host mirror of cache["cur"]
         logits, cache = self._prefill(self.base, {"tokens": toks}, self.rt,
                                       self.cfg.cache_len, delta=overlay,
                                       eid=eid, start=start)
+        keys = decode_loop.row_keys(self.cfg.sampling.seed,
+                                    [r.uid for r in wave])
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         rows: list[Optional[Request]] = list(wave)
         admitted = 0
@@ -251,37 +324,17 @@ class ServeEngine:
                     or len(r.out_tokens) >= r.max_new_tokens]
             # continuous admission: refill finished slots in place
             if queue and self._can_admit():
-                cur = int(cache["cur"])
-                for j in done:
-                    if not queue:
-                        break
-                    nxt = queue[0]
-                    if (nxt.expert not in slot
-                            and len(slot) >= self.cfg.max_stack):
-                        break
-                    if int(nxt.prompt.shape[0]) > cur:
-                        break                 # cannot left-pad down
-                    if cur + nxt.max_new_tokens > self.cfg.cache_len:
-                        break                 # would wrap the KV ring
-                    if nxt.expert not in slot:
-                        grown = self._overlay_for(tuple(experts
-                                                        + [nxt.expert]))
-                        if grown is None:
-                            break             # newcomer not coverable
-                        experts.append(nxt.expert)
-                        slot[nxt.expert] = len(experts) - 1
-                        overlay = grown
-                    queue.popleft()
-                    rows[j] = nxt
-                    eid = eid.at[j].set(slot[nxt.expert])
-                    tok, cache = self._admit_row(nxt, j, cur, cache, tok,
-                                                 overlay, eid)
+                (rows, experts, overlay, eid, tok, keys, cache,
+                 refilled) = self._try_admissions(
+                     rows, done, cur, experts, slot, overlay, eid, tok,
+                     keys, cache, queue)
+                for j in refilled:
                     # the newcomer's prefill argmax IS its first generated
                     # token; record it now — the next loop-top append only
                     # sees the decode output that consumes it
-                    if nxt.max_new_tokens > 0:
-                        nxt.out_tokens.append(int(tok[j, 0]))
-                    admitted += 1
+                    if rows[j].max_new_tokens > 0:
+                        rows[j].out_tokens.append(int(tok[j, 0]))
+                admitted += len(refilled)
                 done = [j for j, r in enumerate(rows) if r is None
                         or len(r.out_tokens) >= r.max_new_tokens]
             if len(done) == len(rows):
@@ -290,12 +343,84 @@ class ServeEngine:
                                          delta=overlay, eid=eid)
             tok = jnp.argmax(logits[:, -1],
                              axis=-1).astype(jnp.int32)[:, None]
+            cur += 1
         self.wave_log.append({"rows": len(wave), "experts": len(experts),
-                              "admitted": admitted,
+                              "admitted": admitted, "chunks": 0,
+                              "seconds": time.perf_counter() - t0})
+
+    def _drive_chunk(self, params, overlay, eid, tok, cache, rows, keys):
+        """Launch ONE compiled K-step chunk and flush its ``[B, K]`` token
+        buffer into the rows (a single host sync).  Shared by the mixed
+        wave and the grouped batch drivers — the flush count
+        (``min(K, remaining)``) and the ``gen`` stream indices must match
+        the scan body's emit semantics exactly, in one place.  Returns
+        ``(tok, cache, decode_steps, launched)`` where ``decode_steps``
+        advances the host-side position mirror and ``launched`` is False
+        when every row was already done (no launch happened)."""
+        K = self.cfg.decode_chunk
+        rem = [max(r.max_new_tokens - len(r.out_tokens), 0) for r in rows]
+        if max(rem) == 0:
+            return tok, cache, 0, False
+        # gen = tokens each row has generated so far (the pending ``tok``
+        # counts); indexes fold_in for reproducible sampling
+        gen = jnp.asarray([len(r.out_tokens) + 1 for r in rows], jnp.int32)
+        tok, cache, buf = self._chunk_fn(params, overlay, eid, tok, cache,
+                                         jnp.asarray(rem, jnp.int32), gen,
+                                         keys)
+        buf_np = np.asarray(buf)           # ONE host sync per K steps
+        for j, r in enumerate(rows):
+            n = min(K, rem[j])
+            if n:
+                r.out_tokens.extend(int(t) for t in buf_np[j, :n])
+        return tok, cache, decode_loop.host_decode_steps(max(rem), K), True
+
+    def _serve_wave_chunked(self, wave: list[Request], experts: list[str],
+                            overlay: dict, queue: deque) -> None:
+        """Device-resident wave loop: K decode steps (stopping masks,
+        token selection, KV writes) per compiled launch, ONE host sync per
+        chunk to flush the ``[B, K]`` token buffer, then host-side
+        admission — the newcomer's first token is folded into the device
+        token state instead of being read back row by row."""
+        t0 = time.perf_counter()
+        slot = {e: i for i, e in enumerate(experts)}
+        eid = jnp.asarray([slot[r.expert] for r in wave], jnp.int32)
+        toks, start = self._pad_prompts(wave)
+        cur = int(toks.shape[1])           # host mirror of cache["cur"]
+        logits, cache = self._prefill(self.base, {"tokens": toks}, self.rt,
+                                      self.cfg.cache_len, delta=overlay,
+                                      eid=eid, start=start)
+        rows: list[Request] = list(wave)
+        keys = decode_loop.row_keys(self.cfg.sampling.seed,
+                                    [r.uid for r in rows])
+        tok = self._select(logits, keys,
+                           jnp.zeros((len(rows),), jnp.int32))
+        admitted = chunks = 0
+        while True:
+            tok, cache, steps, launched = self._drive_chunk(
+                self.base, overlay, eid, tok, cache, rows, keys)
+            cur += steps
+            chunks += int(launched)
+            done = [j for j, r in enumerate(rows)
+                    if len(r.out_tokens) >= r.max_new_tokens]
+            if queue and self._can_admit():
+                (rows, experts, overlay, eid, tok, keys, cache,
+                 refilled) = self._try_admissions(
+                     rows, done, cur, experts, slot, overlay, eid, tok,
+                     keys, cache, queue)
+                # the newcomer's first token stays ON DEVICE: it is the
+                # pending ``tok[j]`` the next chunk emits first — no
+                # int(tok[j, 0]) read-back per admission
+                admitted += len(refilled)
+                done = [j for j, r in enumerate(rows)
+                        if len(r.out_tokens) >= r.max_new_tokens]
+            if len(done) == len(rows):
+                break
+        self.wave_log.append({"rows": len(wave), "experts": len(experts),
+                              "admitted": admitted, "chunks": chunks,
                               "seconds": time.perf_counter() - t0})
 
     def _admit_row(self, r: Request, j: int, cur: int, cache, tok,
-                   overlay, eid):
+                   overlay, eid, key_row):
         """Prefill one newcomer left-padded to the wave position and splice
         its KV state into row j of the running batch.  The row's ``start``
         (= cur - prompt length) rides along, so the spliced row's decode
@@ -318,8 +443,9 @@ class ServeEngine:
         new_cache["layers"] = jax.tree_util.tree_map(splice, cache["layers"],
                                                      row_cache["layers"])
         new_cache["start"] = cache["start"].at[j].set(row_start)
-        tok = tok.at[j].set(
-            jnp.argmax(row_logits[:, -1], axis=-1).astype(jnp.int32))
+        first = self._select(row_logits, key_row,
+                             jnp.zeros((1,), jnp.int32))   # [1, 1]
+        tok = tok.at[j].set(first[0])
         return tok, new_cache
 
     def _serve_batch(self, params, reqs: list[Request]) -> None:
@@ -337,6 +463,8 @@ class ServeEngine:
                                       self.cfg.cache_len,
                                       start=(start if self._row_mask_ok()
                                              else None))
+        if self.cfg.decode_chunk:
+            return self._decode_batch_chunked(params, reqs, logits, cache)
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         steps = max(r.max_new_tokens for r in reqs)
         for _ in range(steps):
@@ -346,6 +474,19 @@ class ServeEngine:
                     r.out_tokens.append(int(tok_np[j]))
             logits, cache = self._decode(params, tok, cache, self.rt)
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+    def _decode_batch_chunked(self, params, reqs: list[Request],
+                              logits, cache) -> None:
+        """Segmented merge-path decode: the same compiled K-step loop as
+        mixed waves, with a zero overlay (``delta=None``) and no
+        admission (the grouped scheduler refills between batches)."""
+        keys = decode_loop.row_keys(self.cfg.sampling.seed,
+                                    [r.uid for r in reqs])
+        tok = self._select(logits, keys, jnp.zeros((len(reqs),), jnp.int32))
+        launched = True
+        while launched:
+            tok, cache, _, launched = self._drive_chunk(
+                params, None, None, tok, cache, reqs, keys)
 
     # ---------------- accounting ----------------
 

@@ -82,6 +82,8 @@ class SwapStats:
     remote_fetches: int = 0
     remote_bytes: int = 0
     remote_seconds: float = 0.0
+    cold_evictions: int = 0         # refetchable blobs dropped by the
+                                    # cold tier's byte-budget LRU
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -98,13 +100,52 @@ class ExpertStore:
 
     Accepts both Experts and legacy ``ExpertArtifact`` objects on
     :meth:`put`; :meth:`get` always returns an Expert.
+
+    ``budget_bytes`` bounds the **refetchable** entries (blobs registered
+    via :meth:`_account` — in practice the wire blobs a
+    :class:`RemoteExpertStore` caches after a fetch) with an LRU: when the
+    accounted bytes exceed the budget, least-recently-used entries are
+    dropped and re-fetched from their upstream tier on next use.  Experts
+    ``put`` directly are the tier's source of truth and are never evicted.
     """
 
-    def __init__(self, cold_golomb: bool = False):
+    def __init__(self, cold_golomb: bool = False,
+                 budget_bytes: Optional[int] = None):
         self.cold_golomb = cold_golomb
+        self.budget_bytes = budget_bytes
+        self.cold_evictions = 0
+        self._lru: OrderedDict[str, int] = OrderedDict()
         self._store: dict[str, Expert] = {}
         self._blobs: dict[str, dict] = {}
         self._meta: dict[str, dict] = {}
+
+    # ---- cold byte-budget LRU (refetchable entries only) ---------------
+    def _account(self, name: str, nbytes: int) -> None:
+        """Register ``name`` as a refetchable cached blob of ``nbytes``
+        and evict LRU refetchable entries past the budget (the entry just
+        touched is always kept — it is the one in use)."""
+        if self.budget_bytes is None:
+            return
+        self._lru[name] = nbytes
+        self._lru.move_to_end(name)
+        while (sum(self._lru.values()) > self.budget_bytes
+               and len(self._lru) > 1):
+            victim, _ = self._lru.popitem(last=False)
+            self._evict_cold(victim)
+            self.cold_evictions += 1
+
+    def _touch(self, name: str) -> None:
+        if name in self._lru:
+            self._lru.move_to_end(name)
+
+    def _evict_cold(self, name: str) -> None:
+        self._store.pop(name, None)
+        self._blobs.pop(name, None)
+        self._meta.pop(name, None)
+
+    def cold_resident_bytes(self) -> int:
+        """Bytes held by the budget-bounded (refetchable) entries."""
+        return sum(self._lru.values())
 
     def put(self, art) -> Expert:
         ex = as_expert(art)
@@ -120,14 +161,24 @@ class ExpertStore:
         return ex
 
     def get(self, name: str) -> Expert:
+        ex, decode = self._get_cached(name)
+        if decode:
+            ex.as_(PACKED)   # one batched decode now, so promotion timing
+        return ex            # is attributed to the store tier
+
+    def _get_cached(self, name: str) -> tuple[Expert, bool]:
+        """Cheap dict reads only (LRU touch + entry lookup) — callers that
+        need thread safety against concurrent LRU eviction wrap THIS in
+        their lock and run the returned expert's (expensive) Golomb decode
+        outside it.  Returns (expert, needs_decode)."""
+        self._touch(name)
         if not self.cold_golomb:
-            return self._store[name]
+            return self._store[name], False
         m = self._meta[name]
         ex = Expert(name, m["kind"], density=m["density"], alpha=m["alpha"])
         ex._leaf_meta = {p: dict(v) for p, v in m["leaf"].items()}
         ex._reps[GOLOMB] = self._blobs[name]
-        ex.as_(PACKED)   # one batched decode now, so promotion timing is
-        return ex        # attributed to the store tier (golomb_decode stat)
+        return ex, True
 
     def __contains__(self, name: str) -> bool:
         return name in (self._blobs if self.cold_golomb else self._store)
@@ -154,10 +205,16 @@ class RemoteExpertStore(ExpertStore):
 
     Thread-safe for concurrent ``get`` of distinct names — the
     :class:`DeviceCache` prefetch pipeline calls it from worker threads.
+
+    ``budget_bytes`` bounds the cold cache of fetched wire blobs: past it,
+    LRU blobs are dropped (``cold_evictions`` counts them, mirrored into
+    :class:`SwapStats`) and transparently re-fetched over the transport on
+    next use.  Unbounded by default, as before.
     """
 
-    def __init__(self, transport, cold_golomb: bool = False):
-        super().__init__(cold_golomb=cold_golomb)
+    def __init__(self, transport, cold_golomb: bool = False,
+                 budget_bytes: Optional[int] = None):
+        super().__init__(cold_golomb=cold_golomb, budget_bytes=budget_bytes)
         self.transport = transport
         self._lock = threading.Lock()
         self._wire_bytes: dict[str, int] = {}
@@ -169,22 +226,36 @@ class RemoteExpertStore(ExpertStore):
         return ExpertStore.__contains__(self, name)
 
     def get(self, name: str) -> Expert:
+        # every read of the cold-local dicts happens under the lock: the
+        # byte-budget LRU may evict entries from a concurrent thread's
+        # _account, so check-then-read must be atomic.  The expensive
+        # Golomb decode still runs OUTSIDE the lock (prefetch threads keep
+        # overlapping decodes) — the snapshot holds its own blob refs.
         with self._lock:
-            have = self._local(name)
-        if not have:
+            ex, decode = (self._get_cached(name) if self._local(name)
+                          else (None, False))
+        if ex is None:
             from repro.transport.wire import decode_expert
             t0 = time.perf_counter()
             blob = self.transport.fetch_bytes(name)
-            ex = decode_expert(blob, name=name)
+            fetched = decode_expert(blob, name=name)
             dt = time.perf_counter() - t0
             with self._lock:
                 if not self._local(name):   # lost a race: keep first copy
-                    super().put(ex)
+                    super().put(fetched)
                     self._wire_bytes[name] = len(blob)
                     self._fetches += 1
                     self._fetch_bytes += len(blob)
                     self._fetch_seconds += dt
-        return super().get(name)
+                    self._account(name, len(blob))   # cold LRU budget
+                ex, decode = self._get_cached(name)
+        if decode:
+            ex.as_(PACKED)      # batched decode, outside the lock
+        return ex
+
+    def _evict_cold(self, name: str) -> None:
+        super()._evict_cold(name)
+        self._wire_bytes.pop(name, None)
 
     def publish(self, expert, rep: Optional[str] = None) -> dict:
         """Upload through the transport AND keep a cold-local copy."""
@@ -364,6 +435,7 @@ class DeviceCache:
             self.stats.remote_fetches = t["fetches"]
             self.stats.remote_bytes = t["bytes"]
             self.stats.remote_seconds = t["seconds"]
+        self.stats.cold_evictions = getattr(self.store, "cold_evictions", 0)
 
     def stacked(self, names: tuple) -> dict:
         """Stacked plane buffers for an ordered expert set (slot e = names[e]).
@@ -422,13 +494,17 @@ class ExpertRegistry:
     def __init__(self, store: Optional[ExpertStore] = None, *,
                  cold_golomb: bool = False,
                  device_cache_bytes: int = DEFAULT_DEVICE_BYTES,
-                 transport=None):
+                 transport=None, cold_budget_bytes: Optional[int] = None):
         if store is not None and transport is not None:
             raise ValueError("pass either store= or transport=, not both")
         if store is None:
-            store = (RemoteExpertStore(transport, cold_golomb=cold_golomb)
+            store = (RemoteExpertStore(transport, cold_golomb=cold_golomb,
+                                       budget_bytes=cold_budget_bytes)
                      if transport is not None
-                     else ExpertStore(cold_golomb=cold_golomb))
+                     else ExpertStore(cold_golomb=cold_golomb,
+                                      budget_bytes=cold_budget_bytes))
+        elif cold_budget_bytes is not None:
+            store.budget_bytes = cold_budget_bytes
         self.store = store
         self.device_cache_bytes = device_cache_bytes
         self._device: Optional[DeviceCache] = None
