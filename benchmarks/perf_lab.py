@@ -616,6 +616,130 @@ def exp_remote_fetch(smoke: bool = False):
         assert rec["golomb_vs_dense_wire_x"] >= 8.0, rec
 
 
+def exp_chaos_serve(smoke: bool = False):
+    """Robustness gate: serving under an injected fault schedule.
+
+    Publishes 4 experts through a :class:`ChaosTransport` whose schedule
+    injects one timeout (expert1), one payload bit-flip (expert2) and a
+    persistent replica blackout (expert3) into a round-robin request
+    stream, with a 1-failure quarantine trip.  Gates (all deterministic
+    under the seed):
+
+    * every healthy request completes with tokens **bit-identical** to
+      the no-fault run — transient faults are absorbed by retry/refetch
+      without touching decode results;
+    * every expert3 request ends in the terminal ``FAILED`` status with
+      error detail, returned via the normal results path (the engine
+      degrades per-request instead of crashing the wave);
+    * ``SwapStats`` match the schedule exactly: 5 transport retries
+      (1 timeout + 1 checksum refetch + 3 blackout retries), 1 quarantine
+      trip, ≥1 prefetch error — and a second chaos run reproduces the
+      same tokens, statuses and fired-fault log bit-for-bit.
+    """
+    import jax.numpy as jnp
+
+    from repro import api as capi
+    from repro.serve import DONE, FAILED, Request
+    from repro.transport import (ChaosFault, ChaosTransport,
+                                 InMemoryTransport)
+
+    n_experts = 4
+    n_reqs = 8 if smoke else 16
+    max_new = 4 if smoke else 8
+    # full mode serves two waves of 8, so the second wave's expert3 rows
+    # arrive through the continuous-admission path while quarantined
+    max_batch = 8
+    prompt_len = 8
+    api, rt, cfg, base, experts = _serve_fixture(n_experts=n_experts)
+    rng = np.random.default_rng(0)
+    prompts = [jnp.asarray(rng.integers(1, cfg.vocab, prompt_len), jnp.int32)
+               for _ in range(n_reqs)]
+
+    def mk_reqs():
+        return [Request(uid=i, expert=f"expert{i % n_experts}",
+                        prompt=prompts[i], max_new_tokens=max_new)
+                for i in range(n_reqs)]
+
+    schedule = [ChaosFault("expert1", 0, "timeout"),
+                ChaosFault("expert2", 0, "bitflip")]
+
+    def run(chaotic):
+        inner = InMemoryTransport()
+        for e in experts:
+            capi.publish(e, inner)
+        tr = (ChaosTransport(inner, faults=schedule, blackout=["expert3"],
+                             seed=0) if chaotic else inner)
+        reg = capi.registry(transport=tr, quarantine_after=1,
+                            quarantine_probe_s=1000.0)
+        eng = capi.serve(api, rt, base, reg, max_batch=max_batch,
+                         cache_len=64)
+        reqs = mk_reqs()
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        dt = time.perf_counter() - t0
+        reg.close()
+        return dt, eng, reqs, tr
+
+    t_base, eng_b, base_reqs, _ = run(chaotic=False)
+    assert all(r.status == DONE for r in base_reqs)
+    base_toks = {r.uid: list(r.out_tokens) for r in base_reqs}
+
+    t_chaos, eng_c, reqs, tr = run(chaotic=True)
+    healthy = [r for r in reqs if r.expert != "expert3"]
+    dead = [r for r in reqs if r.expert == "expert3"]
+    stats = eng_c.swap_summary()
+    parity = all(r.out_tokens == base_toks[r.uid] for r in healthy)
+
+    # determinism: an identical chaos run reproduces everything.  The
+    # fired log is compared order-independently: per-name fault order is
+    # deterministic (per-name fetch counters), but the prefetch pool may
+    # interleave fetches of DIFFERENT names either way round.
+    def fired_sorted(t):
+        return sorted(t.fired(), key=lambda f: (f["name"], f["fetch"]))
+
+    _, eng_c2, reqs2, tr2 = run(chaotic=True)
+    reproduced = (
+        [(r.uid, r.status, list(r.out_tokens)) for r in reqs]
+        == [(r.uid, r.status, list(r.out_tokens)) for r in reqs2]
+        and fired_sorted(tr) == fired_sorted(tr2)
+        and {k: eng_c2.swap_summary()[k]
+             for k in ("retries", "quarantines", "failed")}
+        == {k: stats[k] for k in ("retries", "quarantines", "failed")})
+
+    rec = {"tag": "chaos_serve", "n_reqs": n_reqs, "max_batch": max_batch,
+           "max_new_tokens": max_new, "baseline_s": t_base,
+           "chaos_s": t_chaos,
+           "healthy": len(healthy), "failed": len(dead),
+           "healthy_bit_identical": parity,
+           "all_failed_typed": all(r.status == FAILED and r.error
+                                   and not r.out_tokens for r in dead),
+           "retries": stats["retries"],
+           "quarantines": stats["quarantines"],
+           "prefetch_errors": stats["prefetch_errors"],
+           "fired": tr.fired(),
+           "health": eng_c.registry.health(),
+           "deterministic": reproduced}
+    save_raw("chaos_serve", [rec])
+    bench_update("BENCH_serve.json", "chaos_serve", rec)
+    print(f"chaos_serve: {len(healthy)} healthy (bit_identical={parity}), "
+          f"{len(dead)} failed, retries={rec['retries']}, "
+          f"quarantines={rec['quarantines']}, "
+          f"prefetch_errors={rec['prefetch_errors']}, "
+          f"deterministic={reproduced}")
+    assert all(r.status == DONE for r in healthy), rec
+    assert parity, "healthy requests diverged from the no-fault run"
+    assert rec["all_failed_typed"], rec
+    assert stats["failed"] == len(dead) == n_reqs // n_experts, rec
+    # the schedule, exactly: 1 timeout retry + 1 checksum refetch +
+    # (max_attempts-1)=3 blackout retries; ONE quarantine trip keeps every
+    # later expert3 fetch off the wire
+    assert rec["retries"] == 5, rec
+    assert rec["quarantines"] == 1, rec
+    assert rec["prefetch_errors"] >= 1, rec
+    assert [f["kind"] for f in rec["fired"]].count("blackout") == 4, rec
+    assert reproduced, "chaos run is not reproducible under the seed"
+
+
 EXPS = {
     "compression_ablation": exp_compression_ablation,
     "rwkv_chunk": exp_rwkv_chunk,
@@ -624,6 +748,7 @@ EXPS = {
     "mixed_serve": exp_mixed_serve,
     "decode_loop": exp_decode_loop,
     "remote_fetch": exp_remote_fetch,
+    "chaos_serve": exp_chaos_serve,
 }
 
 

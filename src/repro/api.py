@@ -93,6 +93,8 @@ def merge(experts: Sequence[Any], method: str = "auto", lam: float = 1.0,
 def registry(store=None, *, cold_golomb: bool = False,
              device_cache_bytes: Optional[int] = None,
              transport=None, cold_budget_bytes: Optional[int] = None,
+             retry=None, quarantine_after: Optional[int] = None,
+             quarantine_probe_s: Optional[float] = None,
              experts: Sequence[Any] = ()) -> "ExpertRegistry":
     """A fresh :class:`~repro.serve.expert_cache.ExpertRegistry` (cold
     store + lazy HBM tier), optionally pre-populated with ``experts``.
@@ -104,12 +106,30 @@ def registry(store=None, *, cold_golomb: bool = False,
     mutually exclusive.  ``cold_budget_bytes`` bounds the cold-local cache
     of fetched wire blobs with an LRU (dropped blobs re-fetch
     transparently; ``SwapStats.cold_evictions`` counts them).
+
+    Fault tolerance (remote registries only): ``retry=`` (a
+    :class:`~repro.transport.RetryPolicy`) replaces the transport's
+    retry/backoff policy; ``quarantine_after`` puts an expert in timed
+    quarantine after that many *consecutive* retry-exhausted fetch
+    failures, and ``quarantine_probe_s`` is how long before one probe
+    fetch is let through again.  A fetch that still fails after all of
+    this surfaces as :class:`~repro.serve.ExpertUnavailable`, which the
+    engine degrades to a per-request ``FAILED`` status.
     """
-    from repro.serve.expert_cache import DEFAULT_DEVICE_BYTES, ExpertRegistry
+    from repro.serve.expert_cache import (DEFAULT_DEVICE_BYTES,
+                                          DEFAULT_QUARANTINE_AFTER,
+                                          DEFAULT_QUARANTINE_PROBE_S,
+                                          ExpertRegistry)
     reg = ExpertRegistry(
         store, cold_golomb=cold_golomb, transport=transport,
         cold_budget_bytes=cold_budget_bytes,
-        device_cache_bytes=device_cache_bytes or DEFAULT_DEVICE_BYTES)
+        device_cache_bytes=device_cache_bytes or DEFAULT_DEVICE_BYTES,
+        retry=retry,
+        quarantine_after=(DEFAULT_QUARANTINE_AFTER if quarantine_after is None
+                          else quarantine_after),
+        quarantine_probe_s=(DEFAULT_QUARANTINE_PROBE_S
+                            if quarantine_probe_s is None
+                            else quarantine_probe_s))
     for e in experts:
         reg.add(e)
     return reg
@@ -131,6 +151,13 @@ def serve(model, rt, base_params: PyTree, reg, cfg=None,
     vocabulary) and ``seed`` build the engine's
     :class:`~repro.serve.decode_loop.SamplingConfig`; seeded sampling is
     reproducible across chunk sizes and mid-wave admissions.
+
+    ``degrade="request"`` (default) turns an unavailable expert
+    (:class:`~repro.serve.ExpertUnavailable` at admission — dead replica,
+    quarantined name, corrupted blob past all retries) into a terminal
+    per-request ``FAILED`` status (``Request.status``/``Request.error``)
+    while the rest of the wave serves normally; ``degrade="raise"``
+    propagates the error instead.
     """
     import dataclasses
     from repro.serve.decode_loop import SamplingConfig
@@ -173,10 +200,13 @@ def publish(expert: Expert, transport, rep: str = GOLOMB) -> dict:
     return transport.publish(expert, rep=rep)
 
 
-def fetch(transport, name: str) -> Expert:
+def fetch(transport, name: str, retry=None) -> Expert:
     """Fetch + decode one published expert from a transport backend.
 
     The blob's CRC and format version are verified before any plane is
     built; the result is bit-identical to the Expert that was published.
+    Transient failures (5xx, timeouts, checksum mismatches) are retried
+    under the transport's :class:`~repro.transport.RetryPolicy` — pass
+    ``retry=`` to override it for this call.
     """
-    return transport.fetch(name)
+    return transport.fetch_expert(name, retry=retry)[0]

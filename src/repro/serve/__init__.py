@@ -1,9 +1,11 @@
 from repro.serve.decode_loop import PAD_TOKEN, SamplingConfig
-from repro.serve.engine import EngineConfig, Request, ServeEngine
-from repro.serve.expert_cache import (DeviceCache, ExpertRegistry,
-                                      ExpertStore, RemoteExpertStore,
+from repro.serve.engine import (DONE, FAILED, PENDING, EngineConfig, Request,
+                                ServeEngine)
+from repro.serve.expert_cache import (DeviceCache, ExpertRegistry, ExpertStore,
+                                      ExpertUnavailable, RemoteExpertStore,
                                       SwapStats, uncompressed_baseline_bytes)
 
 __all__ = ["EngineConfig", "Request", "ServeEngine", "DeviceCache",
-           "ExpertRegistry", "ExpertStore", "RemoteExpertStore", "SwapStats",
-           "SamplingConfig", "PAD_TOKEN", "uncompressed_baseline_bytes"]
+           "ExpertRegistry", "ExpertStore", "ExpertUnavailable",
+           "RemoteExpertStore", "SwapStats", "SamplingConfig", "PAD_TOKEN",
+           "PENDING", "DONE", "FAILED", "uncompressed_baseline_bytes"]

@@ -50,9 +50,17 @@ from repro.models.transformer import Runtime
 from repro.serve import decode_loop
 from repro.serve.decode_loop import SamplingConfig
 from repro.serve.expert_cache import (BASE, DeviceCache, ExpertRegistry,
-                                      ExpertStore, as_registry)
+                                      ExpertStore, ExpertUnavailable,
+                                      as_registry)
 
 PyTree = Any
+
+# Request.status lifecycle: PENDING -> DONE | FAILED (terminal).  FAILED
+# requests carry the error detail and are returned through the normal
+# results path — an unavailable expert never crashes the wave.
+PENDING = "pending"
+DONE = "done"
+FAILED = "failed"
 
 
 @dataclasses.dataclass
@@ -62,6 +70,8 @@ class Request:
     prompt: jax.Array          # [T] int32
     max_new_tokens: int = 8
     out_tokens: list = dataclasses.field(default_factory=list)
+    status: str = PENDING      # PENDING -> DONE | FAILED
+    error: Optional[str] = None   # detail when status == FAILED
 
 
 @dataclasses.dataclass
@@ -79,6 +89,10 @@ class EngineConfig:
     decode_chunk: int = 16
     sampling: SamplingConfig = dataclasses.field(
         default_factory=SamplingConfig)
+    # what an ExpertUnavailable at admission does: "request" fails ONLY
+    # the affected requests (terminal FAILED status, wave proceeds);
+    # "raise" propagates — the pre-fault-tolerance behaviour
+    degrade: str = "request"
 
 
 class ServeEngine:
@@ -104,6 +118,9 @@ class ServeEngine:
         self._decode = jax.jit(api.decode_step, static_argnums=(3,))
         if ecfg.decode_chunk < 0:
             raise ValueError("decode_chunk must be >= 0")
+        if ecfg.degrade not in ("request", "raise"):
+            raise ValueError('degrade must be "request" or "raise", '
+                             f"got {ecfg.degrade!r}")
         if not ecfg.sampling.greedy and not ecfg.decode_chunk:
             raise ValueError("temperature/top-k sampling needs the compiled "
                              "decode loop; set decode_chunk > 0")
@@ -113,6 +130,7 @@ class ServeEngine:
         self._select = decode_loop.make_token_select(ecfg.sampling)
         self.swap_log: list = []
         self.wave_log: list = []
+        self.failed_log: list[dict] = []
 
     # ---------------- expert management ----------------
 
@@ -161,14 +179,35 @@ class ServeEngine:
             self._overlays[experts] = overlay
         return overlay
 
+    # ---------------- graceful degradation ----------------
+
+    def _fail(self, reqs: list[Request], err: Exception) -> None:
+        """Terminal per-request failure.  ``degrade="request"`` marks ONLY
+        the affected requests FAILED (error detail attached, returned via
+        the normal results path) and lets the rest of the wave proceed;
+        ``degrade="raise"`` propagates — the pre-fault-tolerance
+        behaviour."""
+        if self.cfg.degrade != "request":
+            raise err
+        for r in reqs:
+            r.status = FAILED
+            r.error = str(err)
+            self.failed_log.append({"uid": r.uid, "expert": r.expert,
+                                    "error": str(err)})
+
     # ---------------- serving loop ----------------
 
     def run(self, requests: list[Request],
             scheduling: Optional[str] = None) -> list[Request]:
         mode = scheduling or self.cfg.scheduling
         if mode == "grouped":
-            return self._run_grouped(requests)
-        return self._run_mixed(requests)
+            self._run_grouped(requests)
+        else:
+            self._run_mixed(requests)
+        for r in requests:
+            if r.status == PENDING:
+                r.status = DONE
+        return requests
 
     def _prefetch_upcoming(self, queue, extra=()) -> None:
         """Admission-time prefetch: stage promotions for every distinct
@@ -197,7 +236,12 @@ class ServeEngine:
                 # overlap the next group's cold fetch with this group's
                 # merge + decode steps
                 self.registry.prefetch([order[gi + 1]])
-            params = self._params_for(expert)
+            try:
+                params = self._params_for(expert)
+            except ExpertUnavailable as e:
+                # one dead expert fails ITS group; every other group serves
+                self._fail(groups[expert], e)
+                continue
             reqs = groups[expert]
             for i in range(0, len(reqs), self.cfg.max_batch):
                 self._serve_batch(params, reqs[i:i + self.cfg.max_batch])
@@ -221,7 +265,22 @@ class ServeEngine:
                     experts.append(r.expert)
                 wave.append(queue.popleft())
             self._prefetch_upcoming(queue, extra=experts)
-            overlay = self._overlay_for(tuple(experts))
+            overlay = None
+            while wave:
+                try:
+                    overlay = self._overlay_for(tuple(experts))
+                    break
+                except ExpertUnavailable as e:
+                    # evict the dead expert's rows from the wave and retry
+                    # the (shrunken) stack build; the healthy rows serve
+                    hit = [r for r in wave if r.expert == e.name]
+                    if not hit:
+                        raise    # not from this wave: don't loop forever
+                    self._fail(hit, e)
+                    wave = [r for r in wave if r.expert != e.name]
+                    experts = [x for x in experts if x != e.name]
+            if not wave:
+                continue
             if overlay is None:
                 # family/leaf not coverable -> merge-on-swap fallback
                 self._run_grouped(wave)
@@ -269,32 +328,49 @@ class ServeEngine:
         round-trip per admission round.  Returns the updated device state
         plus the list of slots refilled this round."""
         refilled = []
+        blocked = False               # head-of-line block: stop all slots
         for j in done:
-            if not queue:
+            if blocked:
                 break
-            nxt = queue[0]
-            if (nxt.expert not in slot
-                    and len(slot) >= self.cfg.max_stack):
-                break
-            if int(nxt.prompt.shape[0]) > cur:
-                break                 # cannot left-pad down
-            if cur + nxt.max_new_tokens > self.cfg.cache_len:
-                break                 # would wrap the KV ring
-            if nxt.expert not in slot:
-                grown = self._overlay_for(tuple(experts + [nxt.expert]))
-                if grown is None:
-                    break             # newcomer not coverable
-                experts.append(nxt.expert)
-                slot[nxt.expert] = len(experts) - 1
-                overlay = grown
-            queue.popleft()
-            rows[j] = nxt
-            eid = eid.at[j].set(slot[nxt.expert])
-            key_j = decode_loop.row_keys(self.cfg.sampling.seed, [nxt.uid])
-            keys = keys.at[j].set(key_j[0])
-            tok, cache = self._admit_row(nxt, j, cur, cache, tok,
-                                         overlay, eid, key_j)
-            refilled.append(j)
+            while queue:
+                nxt = queue[0]
+                if (nxt.expert not in slot
+                        and len(slot) >= self.cfg.max_stack):
+                    blocked = True
+                    break
+                if int(nxt.prompt.shape[0]) > cur:
+                    blocked = True    # cannot left-pad down
+                    break
+                if cur + nxt.max_new_tokens > self.cfg.cache_len:
+                    blocked = True    # would wrap the KV ring
+                    break
+                if nxt.expert not in slot:
+                    try:
+                        grown = self._overlay_for(
+                            tuple(experts + [nxt.expert]))
+                    except ExpertUnavailable as e:
+                        # fail ONLY the head request and try the next one
+                        # for this slot — a dead expert must not block the
+                        # whole admission queue
+                        queue.popleft()
+                        self._fail([nxt], e)
+                        continue
+                    if grown is None:
+                        blocked = True    # newcomer not coverable
+                        break
+                    experts.append(nxt.expert)
+                    slot[nxt.expert] = len(experts) - 1
+                    overlay = grown
+                queue.popleft()
+                rows[j] = nxt
+                eid = eid.at[j].set(slot[nxt.expert])
+                key_j = decode_loop.row_keys(self.cfg.sampling.seed,
+                                             [nxt.uid])
+                keys = keys.at[j].set(key_j[0])
+                tok, cache = self._admit_row(nxt, j, cur, cache, tok,
+                                             overlay, eid, key_j)
+                refilled.append(j)
+                break                 # slot j filled; move to the next
         return rows, experts, overlay, eid, tok, keys, cache, refilled
 
     def _serve_wave_eager(self, wave: list[Request], experts: list[str],
@@ -496,4 +572,5 @@ class ServeEngine:
         s["swap_seconds"] = sum(x["seconds"] for x in self.swap_log)
         s["n_waves"] = len(self.wave_log)
         s["admitted"] = sum(x["admitted"] for x in self.wave_log)
+        s["failed"] = len(self.failed_log)
         return s

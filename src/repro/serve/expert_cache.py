@@ -54,12 +54,38 @@ from repro.expert import GOLOMB, PACKED, Expert, as_expert
 
 # canonical sign->planes bridge lives with the Expert artifact now
 from repro.expert import planes_from_signs as _planes_from_signs  # noqa: F401
+from repro.transport.retry import ExpertNotFound
+from repro.transport.wire import TransportError, WireFormatError
 
 PyTree = Any
 
 BASE = "__base__"   # pseudo-expert: serve the unmodified base weights
 
 DEFAULT_DEVICE_BYTES = 1 << 28
+
+DEFAULT_QUARANTINE_AFTER = 3     # consecutive fetch failures -> quarantine
+DEFAULT_QUARANTINE_PROBE_S = 30.0
+
+
+class ExpertUnavailable(TransportError):
+    """One expert cannot be promoted right now — the typed, per-request
+    failure the engine degrades on (the affected request gets a terminal
+    ``failed`` status; the rest of the wave proceeds).
+
+    ``terminal=True`` means retrying cannot help (never published, bad
+    wire blob); ``quarantined=True`` means the expert's health account
+    tripped and fetches are suppressed until the timed re-probe.
+    Subclasses :class:`~repro.transport.wire.TransportError` so existing
+    ``except TransportError`` callers keep working.
+    """
+
+    def __init__(self, name: str, reason: str, *, terminal: bool = False,
+                 quarantined: bool = False):
+        super().__init__(f"expert {name!r} unavailable: {reason}")
+        self.name = name
+        self.reason = reason
+        self.terminal = terminal
+        self.quarantined = quarantined
 
 
 @dataclasses.dataclass
@@ -84,6 +110,12 @@ class SwapStats:
     remote_seconds: float = 0.0
     cold_evictions: int = 0         # refetchable blobs dropped by the
                                     # cold tier's byte-budget LRU
+    prefetch_errors: int = 0        # staged promotions that failed (counted,
+                                    # never silently dropped)
+    retries: int = 0                # transport-level retry attempts (mirror
+                                    # of the transport's ledger)
+    quarantines: int = 0            # expert health trips (consecutive
+                                    # failures -> timed quarantine)
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -210,20 +242,65 @@ class RemoteExpertStore(ExpertStore):
     LRU blobs are dropped (``cold_evictions`` counts them, mirrored into
     :class:`SwapStats`) and transparently re-fetched over the transport on
     next use.  Unbounded by default, as before.
+
+    **Health accounting**: every name carries a consecutive-failure count.
+    ``quarantine_after`` retry-exhausted fetch cycles in a row trip a
+    timed quarantine — for ``quarantine_probe_s`` the store raises
+    :class:`ExpertUnavailable` *without* touching the transport, then the
+    next ``get`` is a re-probe (success clears the account, failure
+    re-arms the timer).  Terminal failures (:class:`ExpertNotFound` — the
+    expert was never published — and non-checksum wire-format errors)
+    surface immediately as terminal :class:`ExpertUnavailable` and do NOT
+    count against health: absence is not flakiness.
     """
 
     def __init__(self, transport, cold_golomb: bool = False,
-                 budget_bytes: Optional[int] = None):
+                 budget_bytes: Optional[int] = None,
+                 quarantine_after: int = DEFAULT_QUARANTINE_AFTER,
+                 quarantine_probe_s: float = DEFAULT_QUARANTINE_PROBE_S):
         super().__init__(cold_golomb=cold_golomb, budget_bytes=budget_bytes)
         self.transport = transport
+        self.quarantine_after = quarantine_after
+        self.quarantine_probe_s = quarantine_probe_s
+        self.quarantines = 0
         self._lock = threading.Lock()
         self._wire_bytes: dict[str, int] = {}
+        self._failures: dict[str, int] = {}       # consecutive, per name
+        self._quarantined: dict[str, float] = {}  # name -> re-probe time
         self._fetches = 0
         self._fetch_bytes = 0
         self._fetch_seconds = 0.0
 
     def _local(self, name: str) -> bool:
         return ExpertStore.__contains__(self, name)
+
+    def _check_quarantine(self, name: str) -> None:
+        """Raise inside an active quarantine window; past it, let ONE
+        fetch through as the re-probe (the entry stays armed until the
+        probe's outcome settles it)."""
+        until = self._quarantined.get(name)
+        if until is not None and time.monotonic() < until:
+            raise ExpertUnavailable(
+                name, f"quarantined after {self._failures.get(name, 0)} "
+                f"consecutive fetch failures; re-probe in "
+                f"{until - time.monotonic():.2f}s", quarantined=True)
+
+    def _record_failure(self, name: str) -> None:
+        with self._lock:
+            fails = self._failures.get(name, 0) + 1
+            self._failures[name] = fails
+            # a failed re-probe re-arms the timer without re-counting
+            # toward a second quarantine event
+            if fails >= self.quarantine_after:
+                if name not in self._quarantined:
+                    self.quarantines += 1
+                self._quarantined[name] = (time.monotonic()
+                                           + self.quarantine_probe_s)
+
+    def _record_success(self, name: str) -> None:
+        with self._lock:
+            self._failures.pop(name, None)
+            self._quarantined.pop(name, None)
 
     def get(self, name: str) -> Expert:
         # every read of the cold-local dicts happens under the lock: the
@@ -234,24 +311,47 @@ class RemoteExpertStore(ExpertStore):
         with self._lock:
             ex, decode = (self._get_cached(name) if self._local(name)
                           else (None, False))
+            if ex is None:
+                self._check_quarantine(name)
         if ex is None:
-            from repro.transport.wire import decode_expert
             t0 = time.perf_counter()
-            blob = self.transport.fetch_bytes(name)
-            fetched = decode_expert(blob, name=name)
+            try:
+                # the transport's RetryPolicy spans decode: a corrupt
+                # blob (ChecksumError) is refetched, not surfaced
+                fetched, nbytes = self.transport.fetch_expert(name)
+            except ExpertNotFound as e:
+                raise ExpertUnavailable(name, str(e), terminal=True) from e
+            except WireFormatError as e:
+                # non-checksum by construction: ChecksumError is
+                # retryable and only escapes wrapped in RetriesExhausted
+                raise ExpertUnavailable(name, str(e), terminal=True) from e
+            except TransportError as e:
+                self._record_failure(name)
+                raise ExpertUnavailable(name, str(e)) from e
             dt = time.perf_counter() - t0
+            self._record_success(name)
             with self._lock:
                 if not self._local(name):   # lost a race: keep first copy
                     super().put(fetched)
-                    self._wire_bytes[name] = len(blob)
+                    self._wire_bytes[name] = nbytes
                     self._fetches += 1
-                    self._fetch_bytes += len(blob)
+                    self._fetch_bytes += nbytes
                     self._fetch_seconds += dt
-                    self._account(name, len(blob))   # cold LRU budget
+                    self._account(name, nbytes)      # cold LRU budget
                 ex, decode = self._get_cached(name)
         if decode:
             ex.as_(PACKED)      # batched decode, outside the lock
         return ex
+
+    def health(self) -> dict:
+        """Snapshot of the per-expert health account (for dashboards and
+        tests): consecutive failures, active quarantines, trip count."""
+        now = time.monotonic()
+        with self._lock:
+            return {"failures": dict(self._failures),
+                    "quarantined": {n: max(0.0, t - now)
+                                    for n, t in self._quarantined.items()},
+                    "quarantines": self.quarantines}
 
     def _evict_cold(self, name: str) -> None:
         super()._evict_cold(name)
@@ -404,10 +504,24 @@ class DeviceCache:
                 host_packed, stage_s = fut.result()
                 self.stats.prefetch_hits += 1
                 self.stats.prefetch_seconds += stage_s
+            except ExpertUnavailable:
+                # the store already ran the full retry + health path on
+                # the worker thread; repeating it synchronously would
+                # only double the damage (and break determinism) —
+                # propagate the typed failure to the engine
+                self.stats.prefetch_errors += 1
+                self._sync_remote_stats()
+                raise
             except Exception:
-                pass        # advisory stage failed: retry synchronously
+                # transient stage failure (not a store verdict): count
+                # it and fall back to the synchronous path
+                self.stats.prefetch_errors += 1
         if host_packed is None:
-            art = self.store.get(name)
+            try:
+                art = self.store.get(name)
+            except ExpertUnavailable:
+                self._sync_remote_stats()    # failures still hit the ledger
+                raise
             if self.store.cold_golomb:
                 self.stats.golomb_decode_seconds += time.perf_counter() - t0
             host_packed = art.packed
@@ -436,6 +550,10 @@ class DeviceCache:
             self.stats.remote_bytes = t["bytes"]
             self.stats.remote_seconds = t["seconds"]
         self.stats.cold_evictions = getattr(self.store, "cold_evictions", 0)
+        self.stats.quarantines = getattr(self.store, "quarantines", 0)
+        transport = getattr(self.store, "transport", None)
+        if transport is not None:
+            self.stats.retries = transport.stats.retries
 
     def stacked(self, names: tuple) -> dict:
         """Stacked plane buffers for an ordered expert set (slot e = names[e]).
@@ -494,12 +612,21 @@ class ExpertRegistry:
     def __init__(self, store: Optional[ExpertStore] = None, *,
                  cold_golomb: bool = False,
                  device_cache_bytes: int = DEFAULT_DEVICE_BYTES,
-                 transport=None, cold_budget_bytes: Optional[int] = None):
+                 transport=None, cold_budget_bytes: Optional[int] = None,
+                 retry=None,
+                 quarantine_after: int = DEFAULT_QUARANTINE_AFTER,
+                 quarantine_probe_s: float = DEFAULT_QUARANTINE_PROBE_S):
         if store is not None and transport is not None:
             raise ValueError("pass either store= or transport=, not both")
+        if retry is not None:
+            if transport is None:
+                raise ValueError("retry= needs a transport-backed registry")
+            transport.retry = retry
         if store is None:
             store = (RemoteExpertStore(transport, cold_golomb=cold_golomb,
-                                       budget_bytes=cold_budget_bytes)
+                                       budget_bytes=cold_budget_bytes,
+                                       quarantine_after=quarantine_after,
+                                       quarantine_probe_s=quarantine_probe_s)
                      if transport is not None
                      else ExpertStore(cold_golomb=cold_golomb,
                                       budget_bytes=cold_budget_bytes))
@@ -575,6 +702,14 @@ class ExpertRegistry:
         (the registry stays usable; a later fetch re-promotes)."""
         if self._device is not None:
             self._device.close()
+
+    def health(self) -> dict:
+        """Per-expert health snapshot (remote registries track consecutive
+        failures and quarantines; local stores are always healthy)."""
+        h = getattr(self.store, "health", None)
+        if h is not None:
+            return h()
+        return {"failures": {}, "quarantined": {}, "quarantines": 0}
 
     def publish(self, expert, rep: Optional[str] = None) -> dict:
         """Upload an expert through the registry's transport (remote

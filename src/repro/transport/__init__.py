@@ -3,15 +3,23 @@
 The wire format (:mod:`repro.transport.wire`) serializes one
 :class:`~repro.expert.Expert` into a self-describing, checksummed blob;
 the backends (:mod:`repro.transport.backends`) move blobs over a
-filesystem, a simulated network link, or HTTP(S).  The serving stack's
-REMOTE storage tier (:class:`repro.serve.expert_cache.RemoteExpertStore`)
-is built on this module — see ``docs/ARCHITECTURE.md``.
+filesystem, a simulated network link, or HTTP(S), all behind one
+retry/backoff policy (:mod:`repro.transport.retry`); the chaos wrapper
+(:mod:`repro.transport.chaos`) injects deterministic faults so every
+recovery path is testable.  The serving stack's REMOTE storage tier
+(:class:`repro.serve.expert_cache.RemoteExpertStore`) is built on this
+module — see ``docs/ARCHITECTURE.md``.
 """
 
 from repro.transport.backends import (ExpertTransport, HTTPTransport,
                                       InMemoryTransport, LocalTransport,
                                       SimulatedNetworkTransport,
                                       TransportStats, serve_local_http)
+from repro.transport.chaos import ChaosFault, ChaosTransport
+from repro.transport.retry import (DeadlineExceeded, ExpertNotFound,
+                                   FetchTimeout, ReplicaUnreachable,
+                                   RetriesExhausted, RetryPolicy,
+                                   TransientTransportError, is_retryable)
 from repro.transport.wire import (MAGIC, VERSION, WIRE_SUFFIX, ChecksumError,
                                   TransportError, WireFormatError,
                                   decode_expert, encode_expert, is_wire_blob,
@@ -19,7 +27,10 @@ from repro.transport.wire import (MAGIC, VERSION, WIRE_SUFFIX, ChecksumError,
 
 __all__ = ["ExpertTransport", "HTTPTransport", "InMemoryTransport",
            "LocalTransport", "SimulatedNetworkTransport", "TransportStats",
-           "serve_local_http", "MAGIC", "VERSION", "WIRE_SUFFIX",
-           "ChecksumError", "TransportError", "WireFormatError",
-           "decode_expert", "encode_expert", "is_wire_blob",
-           "peek_manifest", "wire_nbytes"]
+           "serve_local_http", "ChaosFault", "ChaosTransport",
+           "DeadlineExceeded", "ExpertNotFound", "FetchTimeout",
+           "ReplicaUnreachable", "RetriesExhausted", "RetryPolicy",
+           "TransientTransportError", "is_retryable", "MAGIC", "VERSION",
+           "WIRE_SUFFIX", "ChecksumError", "TransportError",
+           "WireFormatError", "decode_expert", "encode_expert",
+           "is_wire_blob", "peek_manifest", "wire_nbytes"]

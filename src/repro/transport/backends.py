@@ -19,6 +19,14 @@ backends ship:
 Backends are thread-safe for concurrent ``fetch`` of distinct names —
 the prefetch pipeline in :class:`~repro.serve.expert_cache.DeviceCache`
 issues them from worker threads so transfer overlaps decode.
+
+Every backend applies one uniform :class:`~repro.transport.retry.RetryPolicy`
+to its fetch path: retryable failures (5xx, unreachable replica, seeded
+loss, timeouts, CRC mismatch → refetch) back off and retry up to the
+attempt/deadline budget; terminal failures (404, bad magic, unsupported
+version) raise immediately.  See :mod:`repro.transport.retry` for the
+taxonomy and :class:`~repro.transport.chaos.ChaosTransport` for the
+failure-injection wrapper that exercises every branch deterministically.
 """
 
 from __future__ import annotations
@@ -27,11 +35,16 @@ import dataclasses
 import os
 import threading
 import time
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
 
 from repro.expert import GOLOMB, Expert
+from repro.transport.retry import (DEFAULT_RETRY, SIMULATED_RETRY,
+                                   DeadlineExceeded, ExpertNotFound,
+                                   FetchTimeout, ReplicaUnreachable,
+                                   RetriesExhausted, RetryPolicy,
+                                   TransientTransportError, is_retryable)
 from repro.transport.wire import (WIRE_SUFFIX, TransportError, decode_expert,
                                   encode_expert)
 
@@ -53,13 +66,15 @@ class ExpertTransport:
     """Named blob store for wire-format experts.
 
     Subclasses implement ``_put(name, blob)``, ``_get(name) -> bytes``
-    and ``_names() -> list[str]``; this base class owns encode/decode and
-    the :class:`TransportStats` ledger.
+    and ``_names() -> list[str]``; this base class owns encode/decode,
+    the :class:`TransportStats` ledger, and the uniform retry loop
+    (``retry=`` a :class:`~repro.transport.retry.RetryPolicy`).
     """
 
     default_rep = GOLOMB
 
-    def __init__(self):
+    def __init__(self, retry: Optional[RetryPolicy] = None):
+        self.retry = retry or DEFAULT_RETRY
         self.stats = TransportStats()
         self._stats_lock = threading.Lock()
 
@@ -78,8 +93,9 @@ class ExpertTransport:
             self.stats.bytes_out += len(blob)
         return {"name": name, "rep": rep, "nbytes": len(blob)}
 
-    def fetch_bytes(self, name: str) -> bytes:
-        """Download the raw wire blob for ``name`` (no decode)."""
+    def _timed_get(self, name: str) -> bytes:
+        """One fetch attempt with byte/latency accounting (bytes that
+        arrive are charged even if decode later rejects them)."""
         t0 = time.perf_counter()
         blob = self._get(name)
         dt = time.perf_counter() - t0
@@ -89,16 +105,73 @@ class ExpertTransport:
             self.stats.fetch_seconds += dt
         return blob
 
+    def _retrying(self, name: str, attempt: Callable[[], Any],
+                  retry: Optional[RetryPolicy] = None) -> Any:
+        """Run ``attempt`` under the retry policy: retryable errors back
+        off (seeded jitter, deterministic per name) and retry within the
+        attempt/deadline budget; terminal errors raise immediately."""
+        pol = retry or self.retry
+        t0 = time.monotonic()
+        last: Optional[Exception] = None
+        for i in range(pol.max_attempts):
+            if i:
+                delay = pol.backoff_s(i - 1, name)
+                if (pol.deadline_s is not None
+                        and time.monotonic() - t0 + delay > pol.deadline_s):
+                    raise DeadlineExceeded(
+                        f"fetch of {name!r} would exceed the "
+                        f"{pol.deadline_s}s deadline after {i} attempt(s); "
+                        f"last error: {last}") from last
+                if delay:
+                    time.sleep(delay)
+                with self._stats_lock:
+                    self.stats.retries += 1
+            try:
+                return attempt()
+            except Exception as e:
+                if not is_retryable(e):
+                    raise
+                last = e
+        raise RetriesExhausted(
+            f"fetch of {name!r} failed after {pol.max_attempts} attempt(s); "
+            f"last error: {last}") from last
+
+    def fetch_bytes(self, name: str,
+                    retry: Optional[RetryPolicy] = None) -> bytes:
+        """Download the raw wire blob for ``name`` (no decode).  Retries
+        transport-level failures; cannot see checksum corruption — use
+        :meth:`fetch_expert` for the verified refetch-on-corruption path."""
+        return self._retrying(name, lambda: self._timed_get(name), retry)
+
+    def fetch_expert(self, name: str,
+                     retry: Optional[RetryPolicy] = None
+                     ) -> tuple[Expert, int]:
+        """Download + decode + verify ``name``; returns ``(expert,
+        bytes_on_wire)``.  The retry loop spans decode too, so a blob
+        that arrives corrupt (``ChecksumError``) is *refetched* instead
+        of failing the caller."""
+        def attempt():
+            blob = self._timed_get(name)
+            return decode_expert(blob, name=name), len(blob)
+        return self._retrying(name, attempt, retry)
+
     def fetch(self, name: str) -> Expert:
         """Download + decode ``name`` into an :class:`Expert` (checksum
         verified; GOLOMB payloads stay lazily encoded on the Expert)."""
-        return decode_expert(self.fetch_bytes(name), name=name)
+        return self.fetch_expert(name)[0]
 
     def names(self) -> list[str]:
         return self._names()
 
-    def __contains__(self, name: str) -> bool:
+    def contains(self, name: str) -> bool:
+        """Definitive membership: True/False when the backend can answer,
+        :class:`ReplicaUnreachable` when it cannot — "the replica is
+        down" is NOT "the expert is absent" (health accounting depends
+        on the distinction)."""
         return name in self._names()
+
+    def __contains__(self, name: str) -> bool:
+        return self.contains(name)
 
     # ---- backend hooks -------------------------------------------------
     def _put(self, name: str, blob: bytes) -> None:
@@ -115,8 +188,8 @@ class InMemoryTransport(ExpertTransport):
     """Dict-backed store — unit tests and the simulated-network inner
     store."""
 
-    def __init__(self):
-        super().__init__()
+    def __init__(self, retry: Optional[RetryPolicy] = None):
+        super().__init__(retry=retry)
         self._blobs: dict[str, bytes] = {}
 
     def _put(self, name: str, blob: bytes) -> None:
@@ -126,7 +199,7 @@ class InMemoryTransport(ExpertTransport):
         try:
             return self._blobs[name]
         except KeyError:
-            raise TransportError(f"no published expert named {name!r}") \
+            raise ExpertNotFound(f"no published expert named {name!r}") \
                 from None
 
     def _names(self) -> list[str]:
@@ -138,8 +211,8 @@ class LocalTransport(ExpertTransport):
     ``root``.  Expert names must be filesystem-safe (they are used as
     file names verbatim)."""
 
-    def __init__(self, root: str):
-        super().__init__()
+    def __init__(self, root: str, retry: Optional[RetryPolicy] = None):
+        super().__init__(retry=retry)
         self.root = root
         os.makedirs(root, exist_ok=True)
 
@@ -157,7 +230,7 @@ class LocalTransport(ExpertTransport):
             with open(self._path(name), "rb") as f:
                 return f.read()
         except FileNotFoundError:
-            raise TransportError(
+            raise ExpertNotFound(
                 f"no published expert named {name!r} under {self.root}") \
                 from None
 
@@ -169,10 +242,15 @@ class LocalTransport(ExpertTransport):
 class SimulatedNetworkTransport(ExpertTransport):
     """A link model in front of another transport.
 
-    ``fetch_bytes`` charges ``latency_s + nbytes / bandwidth_bps`` of real
-    wall time per attempt, and with probability ``loss`` an attempt is
-    dropped (the full delay is still paid, then the fetch retries, up to
-    ``max_retries``).  Seeded, so a benchmark run is reproducible.
+    One ``_get`` attempt charges ``latency_s + nbytes / bandwidth_bps``
+    of real wall time, and with probability ``loss`` the attempt is
+    dropped (the full delay is still paid, then
+    :class:`~repro.transport.retry.TransientTransportError` surfaces and
+    the base class's :class:`~repro.transport.retry.RetryPolicy` decides
+    whether to retry).  Seeded, so a benchmark run is reproducible.
+    ``max_retries`` survives as a shorthand for ``retry=
+    RetryPolicy(max_attempts=max_retries, backoff_base_s=0)`` — the link
+    already charges latency per attempt, so the default adds no backoff.
     Publishing is free: the publisher's upload is not what the paper's
     per-query retrieval claim is about.
     """
@@ -180,14 +258,20 @@ class SimulatedNetworkTransport(ExpertTransport):
     def __init__(self, bandwidth_bps: float = 1e9, latency_s: float = 0.0,
                  loss: float = 0.0, seed: int = 0,
                  inner: Optional[ExpertTransport] = None,
-                 max_retries: int = 5):
-        super().__init__()
+                 max_retries: Optional[int] = None,
+                 retry: Optional[RetryPolicy] = None):
+        if retry is None:
+            retry = (SIMULATED_RETRY if max_retries is None else
+                     dataclasses.replace(SIMULATED_RETRY,
+                                         max_attempts=max_retries))
+        elif max_retries is not None:
+            raise ValueError("pass either retry= or max_retries=, not both")
+        super().__init__(retry=retry)
         if not (0.0 <= loss < 1.0):
             raise ValueError(f"loss must be in [0, 1), got {loss}")
         self.bandwidth_bps = float(bandwidth_bps)
         self.latency_s = float(latency_s)
         self.loss = float(loss)
-        self.max_retries = max_retries
         self.inner = inner or InMemoryTransport()
         self._rng = np.random.default_rng(seed)
         self._rng_lock = threading.Lock()
@@ -207,15 +291,17 @@ class SimulatedNetworkTransport(ExpertTransport):
     def _get(self, name: str) -> bytes:
         blob = self.inner._get(name)
         delay = self._delay(len(blob))
-        for _ in range(self.max_retries):
-            time.sleep(delay)
-            if not self._dropped():
-                return blob
-            with self._stats_lock:
-                self.stats.retries += 1
-        raise TransportError(
-            f"fetch of {name!r} dropped {self.max_retries} times "
-            f"(loss={self.loss})")
+        timeout = self.retry.per_attempt_timeout_s
+        if timeout is not None and delay > timeout:
+            time.sleep(timeout)     # the attempt hangs until its budget
+            raise FetchTimeout(
+                f"fetch of {name!r} needs {delay:.3f}s on this link, over "
+                f"the {timeout}s per-attempt timeout")
+        time.sleep(delay)
+        if self._dropped():
+            raise TransientTransportError(
+                f"fetch of {name!r} dropped (loss={self.loss})")
+        return blob
 
     def _names(self) -> list[str]:
         return self.inner._names()
@@ -228,10 +314,17 @@ class HTTPTransport(ExpertTransport):
     :class:`LocalTransport` root works (see :func:`serve_local_http`).
     ``publish`` issues an HTTP PUT, which plain static servers reject —
     publish through the filesystem/object store behind the server instead.
+
+    Failures are classified for the retry policy: 404 is a terminal
+    :class:`ExpertNotFound` (the expert was never published), 5xx and
+    socket timeouts are retryable, and a connection-level failure is
+    :class:`ReplicaUnreachable` — retryable, and explicitly NOT the same
+    thing as "absent" (see :meth:`contains`).
     """
 
-    def __init__(self, base_url: str, timeout_s: float = 30.0):
-        super().__init__()
+    def __init__(self, base_url: str, timeout_s: float = 30.0,
+                 retry: Optional[RetryPolicy] = None):
+        super().__init__(retry=retry)
         self.base_url = base_url.rstrip("/")
         self.timeout_s = timeout_s
 
@@ -240,20 +333,34 @@ class HTTPTransport(ExpertTransport):
         return f"{self.base_url}/{quote(name)}{WIRE_SUFFIX}"
 
     def _request(self, name: str, method: str):
+        import socket
         import urllib.error
         import urllib.request
         req = urllib.request.Request(self._url(name), method=method)
+        timeout = self.retry.per_attempt_timeout_s or self.timeout_s
         try:
-            return urllib.request.urlopen(req, timeout=self.timeout_s)
+            return urllib.request.urlopen(req, timeout=timeout)
         except urllib.error.HTTPError as e:
-            if method == "HEAD" and e.code == 404:
-                return None
-            raise TransportError(
+            if e.code == 404:
+                raise ExpertNotFound(
+                    f"no expert {name!r} at {self._url(name)} "
+                    f"(HTTP 404)") from e
+            cls = (TransientTransportError if e.code >= 500
+                   else TransportError)
+            raise cls(
                 f"HTTP {e.code} for expert {name!r} at {self._url(name)}") \
                 from e
         except urllib.error.URLError as e:
-            raise TransportError(
+            if isinstance(e.reason, (TimeoutError, socket.timeout)):
+                raise FetchTimeout(
+                    f"fetch of {name!r} from {self._url(name)} timed out "
+                    f"after {timeout}s") from e
+            raise ReplicaUnreachable(
                 f"cannot reach {self._url(name)}: {e.reason}") from e
+        except (TimeoutError, socket.timeout) as e:
+            raise FetchTimeout(
+                f"fetch of {name!r} from {self._url(name)} timed out "
+                f"after {timeout}s") from e
 
     def _get(self, name: str) -> bytes:
         with self._request(name, "GET") as resp:
@@ -272,9 +379,15 @@ class HTTPTransport(ExpertTransport):
                 "servers are read-only — publish via the store behind "
                 "the server (e.g. LocalTransport on its root)") from e
 
-    def __contains__(self, name: str) -> bool:
-        resp = self._request(name, "HEAD")
-        if resp is None:
+    def contains(self, name: str) -> bool:
+        """HEAD probe.  False ONLY on a definitive 404 ("the expert is
+        absent"); an unreachable replica raises
+        :class:`ReplicaUnreachable` instead of masquerading as absence —
+        health accounting must never quarantine an expert because the
+        probe could not be delivered."""
+        try:
+            resp = self._request(name, "HEAD")
+        except ExpertNotFound:
             return False
         resp.close()
         return True

@@ -1,0 +1,156 @@
+"""ChaosTransport — deterministic failure injection for the fetch path.
+
+Same spirit as :class:`repro.distributed.fault.FailureInjector`: on real
+networks failures arrive as timeouts, torn reads and dead origins; here
+they are *injected* at configured points so every recovery path is
+testable and every test is reproducible.  The wrapper sits in front of
+any :class:`~repro.transport.backends.ExpertTransport` and perturbs raw
+``_get`` attempts:
+
+* ``timeout``  — the attempt raises :class:`FetchTimeout` (retryable).
+* ``partial``  — the blob is truncated; ``decode_expert`` rejects it
+  with a :class:`ChecksumError` and the retry loop refetches.
+* ``bitflip``  — one payload bit is flipped (seeded position); CRC
+  verification rejects it and the retry loop refetches.
+* ``blackout`` — the replica is unreachable
+  (:class:`ReplicaUnreachable`).  As a scheduled fault it fires once;
+  names in ``blackout`` (or hit by a scheduled ``blackout`` fault with
+  ``persistent=True``, the default) stay dark until
+  :meth:`restore` — the scenario that must degrade to a request-level
+  ``FAILED``, not a crashed engine.
+
+Faults are addressed by **(expert name, per-name fetch index)** — not a
+global counter — so schedules are deterministic even when the prefetch
+pool interleaves fetches of different experts across threads.  Each
+scheduled fault fires exactly once; ``log`` records what fired and when.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import defaultdict
+from typing import Iterable, Optional
+
+import numpy as np
+
+from repro.transport.backends import ExpertTransport
+from repro.transport.retry import (FetchTimeout, ReplicaUnreachable,
+                                   RetryPolicy)
+from repro.transport.wire import _HEADER
+
+FAULT_KINDS = ("timeout", "partial", "bitflip", "blackout")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosFault:
+    """One scheduled fault: the ``at``-th fetch (0-based, per-name) of
+    ``name`` fails with ``kind``.  A ``blackout`` with ``persistent=True``
+    additionally takes the name dark for every later fetch."""
+
+    name: str
+    at: int
+    kind: str
+    persistent: bool = True      # blackout only: stay dark after firing
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"choose from {FAULT_KINDS}")
+
+
+class ChaosTransport(ExpertTransport):
+    """Failure-injecting wrapper around ``inner`` (seeded, deterministic).
+
+    The retry policy applies at THIS layer (the wrapped transport's own
+    fetch entry points are bypassed), so an injected fault exercises
+    exactly one retry loop.  ``stats.retries`` therefore counts the
+    recoveries the schedule forced.
+    """
+
+    def __init__(self, inner: ExpertTransport,
+                 faults: Iterable[ChaosFault] = (),
+                 blackout: Iterable[str] = (), seed: int = 0,
+                 retry: Optional[RetryPolicy] = None):
+        super().__init__(retry=retry)
+        self.inner = inner
+        self._faults: dict[tuple[str, int], ChaosFault] = {}
+        for f in faults:
+            key = (f.name, f.at)
+            if key in self._faults:
+                raise ValueError(f"duplicate fault for {key}")
+            self._faults[key] = f
+        self._dark: set[str] = set(blackout)
+        self._counts: defaultdict[str, int] = defaultdict(int)
+        self._rng = np.random.default_rng(seed)
+        self._chaos_lock = threading.Lock()
+        self.log: list[dict] = []
+
+    # ---- fault scheduling ----------------------------------------------
+    def _next_fault(self, name: str) -> Optional[str]:
+        """Consume (at most) the fault scheduled for this fetch attempt;
+        returns its kind.  Thread-safe and order-deterministic because
+        the index is per-name."""
+        with self._chaos_lock:
+            idx = self._counts[name]
+            self._counts[name] += 1
+            fault = self._faults.pop((name, idx), None)
+            kind = fault.kind if fault is not None else None
+            if kind is None and name in self._dark:
+                kind = "blackout"
+            elif kind == "blackout" and fault.persistent:
+                self._dark.add(name)
+            if kind is not None:
+                self.log.append({"name": name, "fetch": idx, "kind": kind})
+            return kind
+
+    def restore(self, name: str) -> None:
+        """Bring a blacked-out replica back (quarantine re-probes then
+        succeed)."""
+        with self._chaos_lock:
+            self._dark.discard(name)
+
+    def fired(self) -> list[dict]:
+        """Schedule accounting for tests/benchmarks: every fault that has
+        fired, in firing order."""
+        with self._chaos_lock:
+            return list(self.log)
+
+    # ---- corruption ----------------------------------------------------
+    def _corrupt(self, blob: bytes, kind: str) -> bytes:
+        """Damage the *payload* region only — the manifest must stay
+        parseable so the failure is a retryable ChecksumError, not a
+        terminal WireFormatError (a torn read rarely lands in the first
+        few hundred header bytes of a multi-KB blob)."""
+        _, _, mlen = _HEADER.unpack_from(blob)
+        payload_start = _HEADER.size + mlen
+        if payload_start >= len(blob):         # degenerate blob: drop a byte
+            return blob[:-1]
+        if kind == "partial":
+            keep = max(payload_start, (payload_start + len(blob)) // 2)
+            return blob[:keep]
+        flipped = bytearray(blob)
+        with self._chaos_lock:
+            pos = int(self._rng.integers(payload_start, len(blob)))
+            bit = int(self._rng.integers(8))
+        flipped[pos] ^= 1 << bit
+        return bytes(flipped)
+
+    # ---- backend hooks -------------------------------------------------
+    def _get(self, name: str) -> bytes:
+        kind = self._next_fault(name)
+        if kind == "blackout":
+            raise ReplicaUnreachable(
+                f"replica for {name!r} blacked out (injected)")
+        if kind == "timeout":
+            raise FetchTimeout(f"fetch of {name!r} timed out (injected)")
+        blob = self.inner._get(name)
+        if kind in ("partial", "bitflip"):
+            return self._corrupt(blob, kind)
+        return blob
+
+    def _put(self, name: str, blob: bytes) -> None:
+        self.inner._put(name, blob)
+
+    def _names(self) -> list[str]:
+        return self.inner._names()

@@ -1,0 +1,194 @@
+"""Chaos serving: injected transport faults must degrade to per-request
+FAILED statuses — never a crashed engine — while healthy requests stay
+bit-identical to a no-fault run, and the whole schedule is deterministic
+under the seed (the ``perf_lab --exp chaos_serve`` gate, unit-sized)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api as rapi
+from repro.configs import get_smoke_config
+from repro.models import Runtime, build
+from repro.serve import DONE, FAILED, ExpertUnavailable, Request
+from repro.transport import ChaosFault, ChaosTransport, InMemoryTransport
+
+RT = Runtime(attn_chunk_q=16, attn_chunk_k=16, remat_policy="none")
+N_EXPERTS = 3
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    """Model + experts published over a transport (built once: the model
+    compile dominates test time)."""
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    experts = []
+    for i in range(N_EXPERTS):
+        leaves, tdef = jax.tree_util.tree_flatten(base)
+        keys = jax.random.split(jax.random.PRNGKey(100 + i), len(leaves))
+        ft = jax.tree_util.tree_unflatten(tdef, [
+            (l.astype(jnp.float32)
+             + 0.01 * jax.random.normal(k, l.shape)).astype(l.dtype)
+            for l, k in zip(leaves, keys)])
+        experts.append(rapi.compress(base, ft, name=f"expert{i}",
+                                     density=0.2))
+    rng = np.random.default_rng(0)
+    prompts = [jnp.asarray(rng.integers(1, cfg.vocab, 6), jnp.int32)
+               for _ in range(8)]
+    return api, base, experts, prompts
+
+
+def _registry(experts, faults=(), blackout=(), **kw):
+    inner = InMemoryTransport()
+    for e in experts:
+        rapi.publish(e, inner)
+    tr = (ChaosTransport(inner, faults=faults, blackout=blackout, seed=0)
+          if (faults or blackout) else inner)
+    kw.setdefault("quarantine_after", 1)
+    kw.setdefault("quarantine_probe_s", 1000.0)
+    return rapi.registry(transport=tr, **kw), tr
+
+
+def _reqs(prompts, experts_by_uid, max_new=3):
+    return [Request(uid=i, expert=e, prompt=prompts[i],
+                    max_new_tokens=max_new)
+            for i, e in enumerate(experts_by_uid)]
+
+
+def test_blackout_fails_only_affected_requests(fixture):
+    api, base, experts, prompts = fixture
+    stream = ["expert0", "expert1", "expert2", "expert0", "expert1",
+              "expert2"]
+
+    reg0, _ = _registry(experts)
+    eng0 = rapi.serve(api, RT, base, reg0, max_batch=6, cache_len=32)
+    clean = _reqs(prompts, stream)
+    eng0.run(clean)
+    assert all(r.status == DONE for r in clean)
+    want = {r.uid: list(r.out_tokens) for r in clean}
+    reg0.close()
+
+    reg, tr = _registry(experts, blackout=["expert2"])
+    eng = rapi.serve(api, RT, base, reg, max_batch=6, cache_len=32)
+    reqs = _reqs(prompts, stream)
+    out = eng.run(reqs)
+    assert out is reqs            # results flow through the normal path
+    for r in reqs:
+        if r.expert == "expert2":
+            assert r.status == FAILED
+            assert "expert2" in r.error and "unavailable" in r.error
+            assert r.out_tokens == []
+        else:
+            # healthy rows: bit-identical to the no-fault run even though
+            # the wave composition changed under them
+            assert r.status == DONE
+            assert r.out_tokens == want[r.uid]
+    s = eng.swap_summary()
+    assert s["failed"] == 2
+    assert s["quarantines"] == 1
+    assert reg.health()["quarantined"].keys() == {"expert2"}
+    reg.close()
+
+
+def test_transient_faults_are_absorbed(fixture):
+    """A timeout and a corrupted payload retry/refetch to success: no
+    FAILED requests, and tokens match the no-fault run."""
+    api, base, experts, prompts = fixture
+    stream = ["expert0", "expert1"]
+
+    reg0, _ = _registry(experts)
+    eng0 = rapi.serve(api, RT, base, reg0, max_batch=2, cache_len=32)
+    clean = _reqs(prompts, stream)
+    eng0.run(clean)
+    want = {r.uid: list(r.out_tokens) for r in clean}
+    reg0.close()
+
+    reg, tr = _registry(experts,
+                        faults=[ChaosFault("expert0", 0, "timeout"),
+                                ChaosFault("expert1", 0, "bitflip")])
+    eng = rapi.serve(api, RT, base, reg, max_batch=2, cache_len=32)
+    reqs = _reqs(prompts, stream)
+    eng.run(reqs)
+    assert all(r.status == DONE for r in reqs)
+    assert all(r.out_tokens == want[r.uid] for r in reqs)
+    assert eng.swap_summary()["retries"] == 2
+    assert eng.swap_summary()["quarantines"] == 0
+    assert {f["kind"] for f in tr.fired()} == {"timeout", "bitflip"}
+    reg.close()
+
+
+def test_admission_path_failure_does_not_block_queue(fixture):
+    """A dead expert arriving through continuous admission fails ONLY its
+    request; requests behind it in the queue still serve."""
+    api, base, experts, prompts = fixture
+    stream = ["expert0", "expert0", "expert1", "expert0"]
+    reg, _ = _registry(experts, blackout=["expert1"])
+    eng = rapi.serve(api, RT, base, reg, max_batch=2, cache_len=32)
+    reqs = _reqs(prompts, stream)
+    eng.run(reqs)
+    statuses = {r.uid: r.status for r in reqs}
+    assert statuses == {0: DONE, 1: DONE, 2: FAILED, 3: DONE}
+    reg.close()
+
+
+def test_degrade_raise_propagates(fixture):
+    api, base, experts, prompts = fixture
+    reg, _ = _registry(experts, blackout=["expert0"])
+    eng = rapi.serve(api, RT, base, reg, max_batch=2, cache_len=32,
+                     degrade="raise")
+    with pytest.raises(ExpertUnavailable):
+        eng.run(_reqs(prompts, ["expert0"]))
+    reg.close()
+
+
+def test_quarantine_reprobe_recovers():
+    """After the probe window a restored replica serves again and its
+    health account resets (no engine needed: store-level contract)."""
+    tau = {"w": np.full((8, 8), 0.5, np.float32)}
+    ex = rapi.compress(tau, name="e", density=0.5)
+    inner = InMemoryTransport()
+    rapi.publish(ex, inner)
+    tr = ChaosTransport(inner, blackout=["e"], seed=0)
+    reg = rapi.registry(transport=tr, quarantine_after=1,
+                        quarantine_probe_s=0.05)
+    with pytest.raises(ExpertUnavailable):
+        reg.get("e")
+    # inside the window every access is refused WITHOUT touching the wire
+    fetches_after_trip = len(tr.fired())
+    with pytest.raises(ExpertUnavailable) as ei:
+        reg.get("e")
+    assert ei.value.quarantined
+    assert len(tr.fired()) == fetches_after_trip
+    # replica comes back; past the window one probe is let through
+    tr.restore("e")
+    time.sleep(0.06)
+    got = reg.get("e")
+    assert got.name == "e"
+    h = reg.health()
+    assert h["failures"] == {} and h["quarantined"] == {}
+    assert h["quarantines"] == 1          # the historical trip count stays
+    reg.close()
+
+
+def test_prefetch_failure_is_counted_and_surfaces():
+    """Satellite of PR 6: the staged-prefetch path must COUNT a failed
+    fetch and surface the typed error — never swallow it."""
+    tau = {"w": np.full((8, 8), 0.5, np.float32)}
+    ex = rapi.compress(tau, name="e", density=0.5)
+    inner = InMemoryTransport()
+    rapi.publish(ex, inner)
+    tr = ChaosTransport(inner, blackout=["e"], seed=0)
+    reg = rapi.registry(transport=tr, quarantine_after=1,
+                        quarantine_probe_s=1000.0)
+    cache = reg.device(1 << 20)
+    reg.prefetch(["e"])
+    with pytest.raises(ExpertUnavailable):
+        cache.fetch("e")
+    assert cache.stats.prefetch_errors == 1
+    assert cache.stats.quarantines == 1
+    reg.close()

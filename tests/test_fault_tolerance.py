@@ -1,0 +1,125 @@
+"""Fault-tolerance contracts (repro.distributed.fault).
+
+The recovery path is testable because failures are *injected*
+deterministically: a crashed-and-restarted run must produce bit-identical
+parameters to an uninterrupted one (stateless pipeline + exact
+checkpoints), stragglers must not poison the step-time EWMA, and every
+injected failure fires exactly once.
+"""
+
+import numpy as np
+import pytest
+
+from repro.distributed.fault import (ElasticPlan, FailureInjector,
+                                     SimulatedFailure, StragglerMonitor)
+
+
+# ---------------- FailureInjector ----------------
+
+def test_injector_fires_at_configured_steps_once():
+    inj = FailureInjector(fail_at_steps=[2, 5])
+    fired = []
+    for step in range(8):
+        try:
+            inj.check(step)
+        except SimulatedFailure:
+            fired.append(step)
+    assert fired == [2, 5]
+    # each failure fires exactly once: re-checking the same steps is clean
+    for step in range(8):
+        inj.check(step)
+
+
+def test_injector_no_failures_is_a_noop():
+    inj = FailureInjector()
+    for step in range(10):
+        inj.check(step)
+
+
+# ---------------- restart reproducibility ----------------
+
+def _batch(step: int) -> np.ndarray:
+    """Stateless pipeline: batch = f(step), no iterator state to lose."""
+    return np.random.default_rng(1000 + step).standard_normal(4)
+
+
+def _update(params: np.ndarray, batch: np.ndarray) -> np.ndarray:
+    """Deterministic step function (stand-in for the pjit'd train step)."""
+    return params + 0.1 * np.tanh(batch) - 0.01 * params
+
+
+def _train(n_steps: int, injector=None):
+    """Tiny elastic-training loop: checkpoint every step, and on a
+    SimulatedFailure restart from the last checkpoint (the crashed step
+    re-runs — exactly the restore contract of ElasticPlan)."""
+    params = np.zeros(4)
+    ckpt = {"step": 0, "params": params.copy()}
+    step = 0
+    while step < n_steps:
+        try:
+            if injector is not None:
+                injector.check(step)
+            params = _update(params, _batch(step))
+            step += 1
+            ckpt = {"step": step, "params": params.copy()}
+        except SimulatedFailure:
+            # crash: lose in-memory state, restore from the checkpoint
+            step = ckpt["step"]
+            params = ckpt["params"].copy()
+    return params
+
+
+def test_crash_restart_bit_identical():
+    clean = _train(10)
+    crashed = _train(10, injector=FailureInjector(fail_at_steps=[3, 7]))
+    np.testing.assert_array_equal(clean, crashed)
+
+
+def test_crash_at_step_zero_restarts_from_init():
+    clean = _train(5)
+    crashed = _train(5, injector=FailureInjector(fail_at_steps=[0]))
+    np.testing.assert_array_equal(clean, crashed)
+
+
+# ---------------- StragglerMonitor ----------------
+
+def test_straggler_flagged_but_ewma_not_poisoned():
+    mon = StragglerMonitor(alpha=0.2, slowdown_threshold=2.0)
+    assert not mon.observe(0, 1.0)
+    assert mon.ewma == 1.0
+    assert not mon.observe(1, 1.0)
+    ewma_before = mon.ewma
+    # a 10x step is flagged AND excluded from the average, so one slow
+    # host does not raise the threshold for catching the next one
+    assert mon.observe(2, 10.0)
+    assert mon.ewma == ewma_before
+    assert mon.flagged_steps[0][0] == 2
+    # the monitor still flags a later straggler of the same magnitude
+    assert mon.observe(3, 10.0)
+
+
+def test_straggler_recommendation_transitions():
+    mon = StragglerMonitor()
+    assert mon.recommendation() == "healthy"
+    mon.observe(0, 1.0)
+    assert mon.recommendation() == "healthy"
+    mon.observe(1, 5.0)
+    assert mon.recommendation() == "monitor"
+    mon.observe(2, 5.0)
+    mon.observe(3, 5.0)
+    assert mon.recommendation() == "exclude-host-and-reshard"
+
+
+def test_normal_steps_update_ewma():
+    mon = StragglerMonitor(alpha=0.5)
+    mon.observe(0, 1.0)
+    mon.observe(1, 2.0)          # 2x exactly is NOT > threshold * ewma
+    assert mon.ewma == pytest.approx(1.5)
+    assert mon.flagged_steps == []
+
+
+# ---------------- ElasticPlan ----------------
+
+def test_elastic_plan_validity():
+    assert ElasticPlan(old_shape=(4, 2), new_shape=(2, 2)).valid()
+    assert not ElasticPlan(old_shape=(4, 2), new_shape=(0, 2)).valid()

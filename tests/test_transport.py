@@ -357,3 +357,130 @@ def test_engine_over_remote_registry_matches_local():
     assert st.remote_fetches == len(exs)
     assert st.prefetch_hits >= 1        # admission staged the cold fetches
     assert st.remote_bytes == tr.stats.bytes_in
+
+
+# ---------------------------------------------------------------------------
+# retry/backoff policy + failure classification (PR 6)
+# ---------------------------------------------------------------------------
+
+from repro.transport import (ChaosFault, ChaosTransport, DeadlineExceeded,
+                             ExpertNotFound, ReplicaUnreachable,
+                             RetriesExhausted, RetryPolicy, is_retryable)
+
+FAST = RetryPolicy(max_attempts=3, backoff_base_s=0.0)
+
+
+class CountingTransport(InMemoryTransport):
+    """Counts raw _get attempts — what the retry loop actually issued."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.calls = 0
+
+    def _get(self, name):
+        self.calls += 1
+        return super()._get(name)
+
+
+def test_backoff_schedule_deterministic_and_bounded():
+    pol = RetryPolicy(seed=3, backoff_base_s=0.05, backoff_multiplier=2.0,
+                      jitter=0.1)
+    again = RetryPolicy(seed=3, backoff_base_s=0.05, backoff_multiplier=2.0,
+                        jitter=0.1)
+    for attempt in range(4):
+        d = pol.backoff_s(attempt, "ex")
+        # keyed by (seed, name, attempt): stable across policy instances
+        # and independent of call order / thread interleaving
+        assert d == again.backoff_s(attempt, "ex")
+        nominal = 0.05 * 2.0 ** attempt
+        assert nominal * 0.9 <= d <= nominal * 1.1
+    # different names draw different jitter, so replicas don't sync up
+    assert pol.backoff_s(0, "ex") != pol.backoff_s(0, "other")
+
+
+def test_terminal_absence_is_not_retried():
+    tr = CountingTransport(retry=FAST)
+    with pytest.raises(ExpertNotFound):
+        tr.fetch_bytes("missing")
+    assert tr.calls == 1              # 404-class errors never retry
+    assert tr.stats.retries == 0
+
+
+@pytest.mark.parametrize("kind", ["bitflip", "partial"])
+def test_corrupted_payload_refetched(kind):
+    inner = CountingTransport()
+    ex = small_expert()
+    inner.publish(ex, rep=GOLOMB)
+    tr = ChaosTransport(inner, faults=[ChaosFault("wire", 0, kind)],
+                        seed=0, retry=FAST)
+    got, nbytes = tr.fetch_expert("wire")
+    assert_planes_equal(ex.packed, got.packed)
+    assert inner.calls == 2           # corrupt read + clean refetch
+    assert tr.stats.retries == 1
+    assert [f["kind"] for f in tr.fired()] == [kind]
+
+
+def test_blackout_exhausts_retries_with_typed_error():
+    inner = InMemoryTransport()
+    inner.publish(small_expert(), rep=GOLOMB)
+    tr = ChaosTransport(inner, blackout=["wire"], seed=0, retry=FAST)
+    with pytest.raises(RetriesExhausted, match="blacked out"):
+        tr.fetch_bytes("wire")
+    assert len(tr.fired()) == FAST.max_attempts
+    # the wrapped error chain keeps the last cause for diagnostics
+    tr.restore("wire")
+    assert len(tr.fetch_bytes("wire")) > 0
+
+
+def test_overall_deadline_cuts_backoff_short():
+    inner = InMemoryTransport()
+    inner.publish(small_expert(), rep=GOLOMB)
+    slow = RetryPolicy(max_attempts=5, backoff_base_s=10.0, jitter=0.0,
+                       deadline_s=0.05)
+    tr = ChaosTransport(inner, blackout=["wire"], seed=0, retry=slow)
+    t0 = time.perf_counter()
+    with pytest.raises(DeadlineExceeded):
+        tr.fetch_bytes("wire")
+    # the 10 s backoff would blow the 50 ms deadline, so the loop gives
+    # up BEFORE sleeping — not after
+    assert time.perf_counter() - t0 < 2.0
+
+
+def test_error_classification():
+    assert is_retryable(ChecksumError("crc"))          # refetch fixes it
+    assert is_retryable(ReplicaUnreachable("down"))
+    assert not is_retryable(ExpertNotFound("404"))
+    assert not is_retryable(WireFormatError("bad magic"))
+    assert not is_retryable(ValueError("not transport-related"))
+
+
+def test_http_contains_absent_vs_unreachable(tmp_path):
+    """`contains` answers "expert absent" ONLY from a definitive 404; a
+    dead replica raises instead of masquerading as absence (callers would
+    otherwise treat an outage as "never published")."""
+    root = LocalTransport(str(tmp_path))
+    root.publish(small_expert(), rep=GOLOMB)
+    server, url = serve_local_http(str(tmp_path))
+    try:
+        tr = HTTPTransport(url, retry=FAST)
+        assert tr.contains("wire")
+        assert not tr.contains("missing")      # 404: definitively absent
+    finally:
+        server.shutdown()
+    dead = HTTPTransport("http://127.0.0.1:9", timeout_s=0.2,
+                         retry=RetryPolicy(max_attempts=1))
+    with pytest.raises(ReplicaUnreachable):
+        dead.contains("wire")
+    with pytest.raises((RetriesExhausted, ReplicaUnreachable)):
+        dead.fetch_bytes("wire")
+
+
+def test_simulated_timeout_classified_and_retried():
+    tr = SimulatedNetworkTransport(
+        bandwidth_bps=1e3, latency_s=0.05, seed=0,
+        retry=RetryPolicy(max_attempts=2, backoff_base_s=0.0,
+                          per_attempt_timeout_s=0.01))
+    tr.publish(small_expert(), rep=GOLOMB)
+    with pytest.raises(RetriesExhausted, match="per-attempt timeout"):
+        tr.fetch_bytes("wire")
+    assert tr.stats.retries == 1
