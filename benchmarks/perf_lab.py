@@ -603,9 +603,7 @@ def exp_remote_fetch(smoke: bool = False):
            "golomb_vs_dense_slow_ttft_x": (by[(DENSE, "slow")]["ttft_s"]
                                            / by[(GOLOMB, "slow")]["ttft_s"])}
     save_raw("remote_fetch", [rec])
-    with open(os.path.join(os.path.dirname(__file__), "..",
-                           "BENCH_transport.json"), "w") as f:
-        json.dump(rec, f, indent=1, default=float)
+    bench_update("BENCH_transport.json", "remote_fetch", rec)
     print(f"remote_fetch: golomb wire is "
           f"{rec['golomb_vs_dense_wire_x']:.1f}x smaller than dense; "
           f"slow-link TTFT {rec['golomb_vs_dense_slow_ttft_x']:.2f}x faster; "
@@ -740,6 +738,199 @@ def exp_chaos_serve(smoke: bool = False):
     assert reproduced, "chaos run is not reproducible under the seed"
 
 
+def exp_chaos_cdn(smoke: bool = False):
+    """Robustness gate: the replicated expert CDN losing a replica
+    mid-fetch.
+
+    A 3-replica heterogeneous fleet (fast / medium / slow simulated
+    links, each behind a :class:`ChaosTransport`) serves a round-robin
+    request stream with ``replication_factor=3``.  The *fast* replica —
+    the one EWMA selection always tries first — blacks out at per-name
+    op index 2: the probe and the first leaf range of every expert are
+    delivered, the rest never arrive, so every fetch fails over
+    **mid-blob**.  Gates (deterministic under the seeds):
+
+    * token parity — every request completes ``DONE`` with tokens
+      bit-identical to the same fleet without the fault;
+    * zero-waste failover — only undelivered leaves are re-requested:
+      the CDN's ``bytes_in`` equals the published bytes-on-wire exactly,
+      ``bytes_wasted == 0``, and the per-replica ledgers sum to the same
+      total (the new byte accounting makes this assertable);
+    * exactly one failover per expert (``retries == n_experts``) and one
+      ``replica_blackout`` fired per name on the dead replica;
+    * an R=1 control fleet of just the faulty replica fails every
+      request with a typed ``FAILED`` status (never a crashed engine);
+    * a second chaos run reproduces tokens, statuses, fired logs and
+      fleet byte totals bit-for-bit.
+
+    Also measures the cold-start TTFT-vs-replica-count curve (fleet of
+    R ∈ {1, 2, 3} slowest-first links, hedged and unhedged, cold and
+    EWMA-probed) and merges it into ``BENCH_transport.json``.
+    """
+    import jax.numpy as jnp
+
+    from repro import api as capi
+    from repro.expert import PACKED
+    from repro.serve import DONE, FAILED, Request
+    from repro.transport import (ChaosTransport, ReplicaFault,
+                                 ReplicatedTransport, RetryPolicy,
+                                 SimulatedNetworkTransport)
+
+    n_experts = 3
+    n_reqs = 6 if smoke else 12
+    max_new = 4 if smoke else 8
+    prompt_len = 8
+    probe = 4096        # < blob size: the probe leaves leaves in flight
+    pol = RetryPolicy(max_attempts=3, backoff_base_s=0.0)
+    api, rt, cfg, base, experts = _serve_fixture(n_experts=n_experts + 1)
+    warm, experts = experts[-1], experts[:-1]
+    rng = np.random.default_rng(0)
+    prompts = [jnp.asarray(rng.integers(1, cfg.vocab, prompt_len), jnp.int32)
+               for _ in range(n_reqs)]
+    links = [dict(bandwidth_bps=1e8, latency_s=0.001),   # fast (faulty)
+             dict(bandwidth_bps=2e7, latency_s=0.005),   # medium
+             dict(bandwidth_bps=5e6, latency_s=0.02)]    # slow
+
+    def mk_fleet(faulty):
+        chaos = [ChaosTransport(
+            SimulatedNetworkTransport(seed=i, **links[i]),
+            replica_faults=([ReplicaFault("blackout", at=2)]
+                            if faulty and i == 0 else ()))
+            for i in range(3)]
+        cdn = ReplicatedTransport(chaos, replication_factor=3,
+                                  probe_bytes=probe, quarantine_after=99,
+                                  retry=pol)
+        return cdn, chaos
+
+    def run(faulty):
+        cdn, chaos = mk_fleet(faulty)
+        pubs = [cdn.publish(e, rep=PACKED) for e in experts]
+        reg = capi.registry(transport=cdn)
+        eng = capi.serve(api, rt, base, reg, max_batch=8, cache_len=64)
+        reqs = [Request(uid=i, expert=f"expert{i % n_experts}",
+                        prompt=prompts[i], max_new_tokens=max_new)
+                for i in range(n_reqs)]
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        dt = time.perf_counter() - t0
+        reg.close()
+        return dt, reqs, cdn, chaos, pubs
+
+    t_base, base_reqs, _, _, _ = run(faulty=False)
+    assert all(r.status == DONE for r in base_reqs)
+    base_toks = {r.uid: list(r.out_tokens) for r in base_reqs}
+
+    def fired_sorted(chaos):
+        return sorted((f for c in chaos for f in c.fired()),
+                      key=lambda f: (f["name"], f["fetch"]))
+
+    t_chaos, reqs, cdn, chaos, pubs = run(faulty=True)
+    expected_bytes = sum(p["nbytes"] for p in pubs)
+    parity = all(r.status == DONE and list(r.out_tokens) == base_toks[r.uid]
+                 for r in reqs)
+    fleet_bytes_in = sum(c.stats.bytes_in for c in chaos)
+
+    # R=1 control: the same faulty replica with nobody to fail over to
+    cdn1 = ReplicatedTransport(
+        [ChaosTransport(SimulatedNetworkTransport(seed=0, **links[0]),
+                        replica_faults=[ReplicaFault("blackout", at=2)])],
+        replication_factor=1, probe_bytes=probe,
+        retry=RetryPolicy(max_attempts=2, backoff_base_s=0.0))
+    for e in experts:
+        cdn1.publish(e, rep=PACKED)
+    reg1 = capi.registry(transport=cdn1, quarantine_after=1)
+    eng1 = capi.serve(api, rt, base, reg1, max_batch=8, cache_len=64)
+    ctrl = [Request(uid=i, expert=f"expert{i}", prompt=prompts[i],
+                    max_new_tokens=max_new) for i in range(n_experts)]
+    eng1.run(ctrl)
+    reg1.close()
+    control_failed = all(r.status == FAILED and r.error for r in ctrl)
+
+    # determinism: an identical chaos run reproduces everything
+    _, reqs2, cdn2, chaos2, _ = run(faulty=True)
+    reproduced = (
+        [(r.uid, r.status, list(r.out_tokens)) for r in reqs]
+        == [(r.uid, r.status, list(r.out_tokens)) for r in reqs2]
+        and fired_sorted(chaos) == fired_sorted(chaos2)
+        and (cdn2.stats.retries, cdn2.stats.bytes_in,
+             cdn2.stats.bytes_wasted)
+        == (cdn.stats.retries, cdn.stats.bytes_in, cdn.stats.bytes_wasted)
+        and sum(c.stats.bytes_in for c in chaos2) == fleet_bytes_in)
+
+    # cold-start TTFT vs replica count: slowest-first fleets, so the
+    # cold (unprobed) path pays the worst link and hedging/EWMA recover
+    curve_links = [dict(bandwidth_bps=1e6, latency_s=0.05),    # slow
+                   dict(bandwidth_bps=2e7, latency_s=0.005),   # medium
+                   dict(bandwidth_bps=1e8, latency_s=0.001)]   # fast
+    curve = []
+    for R in (1, 2, 3):
+        for hedge_ms in (None, 25.0):
+            fleet = [SimulatedNetworkTransport(seed=10 + i, **curve_links[i])
+                     for i in range(R)]
+            ttft_cdn = ReplicatedTransport(fleet, replication_factor=R,
+                                           probe_bytes=probe,
+                                           hedge_ms=hedge_ms, retry=pol)
+            for e in experts[:2]:
+                ttft_cdn.publish(e, rep=PACKED)
+            reg = capi.registry(transport=ttft_cdn)
+            reg.add(warm)       # local overlay: warm-up never probes links
+            eng = capi.serve(api, rt, base, reg, max_batch=1, cache_len=64)
+            eng.run([Request(uid=0, expert=warm.name, prompt=prompts[0],
+                             max_new_tokens=1)])
+            row = {"replicas": R, "hedge_ms": hedge_ms}
+            # cold: no EWMA yet, selection is index order (the slow link);
+            # probed: the cold fetch taught the EWMAs, selection recovers
+            for regime, uid, name in (("cold", 1, experts[0].name),
+                                      ("probed", 2, experts[1].name)):
+                r = Request(uid=uid, expert=name, prompt=prompts[0],
+                            max_new_tokens=1)
+                t0 = time.perf_counter()
+                eng.run([r])
+                row[f"ttft_{regime}_s"] = time.perf_counter() - t0
+            row["bytes_wasted"] = ttft_cdn.stats.bytes_wasted
+            reg.close()
+            curve.append(row)
+            print(f"[cdn ttft | R={R} hedge={hedge_ms}] "
+                  f"cold={row['ttft_cold_s']*1e3:7.1f} ms  "
+                  f"probed={row['ttft_probed_s']*1e3:7.1f} ms")
+
+    by = {(r["replicas"], r["hedge_ms"]): r for r in curve}
+    rec = {"tag": "chaos_cdn", "n_reqs": n_reqs, "max_new_tokens": max_new,
+           "baseline_s": t_base, "chaos_s": t_chaos,
+           "bytes_on_wire": expected_bytes,
+           "cdn_bytes_in": cdn.stats.bytes_in,
+           "fleet_bytes_in": fleet_bytes_in,
+           "bytes_wasted": cdn.stats.bytes_wasted,
+           "retries": cdn.stats.retries,
+           "healthy_bit_identical": parity,
+           "control_r1_all_failed": control_failed,
+           "fired": fired_sorted(chaos),
+           "health": cdn.health(),
+           "deterministic": reproduced,
+           "ttft_curve": curve}
+    save_raw("chaos_cdn", [rec])
+    bench_update("BENCH_transport.json", "chaos_cdn", rec)
+    print(f"chaos_cdn: parity={parity}, bytes_in={cdn.stats.bytes_in} "
+          f"(expected {expected_bytes}), wasted={cdn.stats.bytes_wasted}, "
+          f"retries={cdn.stats.retries}, r1_control_failed={control_failed}, "
+          f"deterministic={reproduced}")
+    assert parity, "requests diverged from the no-fault fleet"
+    # the zero-waste invariant, through the new byte accounting: failover
+    # refetched ONLY undelivered leaves, so the fleet moved exactly the
+    # published bytes and threw none of them away
+    assert cdn.stats.bytes_in == expected_bytes, rec
+    assert fleet_bytes_in == expected_bytes, rec
+    assert cdn.stats.bytes_wasted == 0, rec
+    assert cdn.stats.retries == n_experts, rec
+    assert (rec["fired"]
+            == [{"name": e.name, "fetch": 2, "kind": "replica_blackout"}
+                for e in experts]), rec
+    assert control_failed, "R=1 control should fail every request"
+    assert reproduced, "chaos_cdn run is not reproducible under the seeds"
+    assert (by[(3, 25.0)]["ttft_cold_s"]
+            < by[(1, None)]["ttft_cold_s"]), rec
+
+
 EXPS = {
     "compression_ablation": exp_compression_ablation,
     "rwkv_chunk": exp_rwkv_chunk,
@@ -749,6 +940,7 @@ EXPS = {
     "decode_loop": exp_decode_loop,
     "remote_fetch": exp_remote_fetch,
     "chaos_serve": exp_chaos_serve,
+    "chaos_cdn": exp_chaos_cdn,
 }
 
 

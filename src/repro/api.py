@@ -95,6 +95,8 @@ def registry(store=None, *, cold_golomb: bool = False,
              transport=None, cold_budget_bytes: Optional[int] = None,
              retry=None, quarantine_after: Optional[int] = None,
              quarantine_probe_s: Optional[float] = None,
+             replicas=None, replication_factor: Optional[int] = None,
+             hedge_ms: Optional[float] = None,
              experts: Sequence[Any] = ()) -> "ExpertRegistry":
     """A fresh :class:`~repro.serve.expert_cache.ExpertRegistry` (cold
     store + lazy HBM tier), optionally pre-populated with ``experts``.
@@ -115,6 +117,15 @@ def registry(store=None, *, cold_golomb: bool = False,
     fetch is let through again.  A fetch that still fails after all of
     this surfaces as :class:`~repro.serve.ExpertUnavailable`, which the
     engine degrades to a per-request ``FAILED`` status.
+
+    Replication: ``replicas=[t0, t1, ...]`` (a fleet of transports)
+    builds the registry over a
+    :class:`~repro.transport.ReplicatedTransport` — consistent-hash
+    placement of published blobs onto ``replication_factor`` owners
+    (default 2), fastest-healthy-first selection, leaf-resumable
+    mid-stream failover, and optional hedged reads after ``hedge_ms``
+    (``None`` disables hedging).  A single-replica blackout then costs
+    latency, not availability.
     """
     from repro.serve.expert_cache import (DEFAULT_DEVICE_BYTES,
                                           DEFAULT_QUARANTINE_AFTER,
@@ -124,7 +135,8 @@ def registry(store=None, *, cold_golomb: bool = False,
         store, cold_golomb=cold_golomb, transport=transport,
         cold_budget_bytes=cold_budget_bytes,
         device_cache_bytes=device_cache_bytes or DEFAULT_DEVICE_BYTES,
-        retry=retry,
+        retry=retry, replicas=replicas,
+        replication_factor=replication_factor, hedge_ms=hedge_ms,
         quarantine_after=(DEFAULT_QUARANTINE_AFTER if quarantine_after is None
                           else quarantine_after),
         quarantine_probe_s=(DEFAULT_QUARANTINE_PROBE_S
@@ -188,15 +200,35 @@ def save(expert: Expert, path: str) -> dict:
     return expert.save(path)
 
 
-def publish(expert: Expert, transport, rep: str = GOLOMB) -> dict:
+def publish(expert: Expert, transport, rep: str = GOLOMB,
+            replication_factor: Optional[int] = None) -> dict:
     """Upload ``expert`` through a transport backend as one wire-format
-    blob (manifest + checksum; see :mod:`repro.transport.wire`).
+    blob (manifest + per-leaf checksums; see :mod:`repro.transport.wire`).
 
     ``rep`` picks the payload encoding: :data:`GOLOMB` (default,
     storage-optimal), :data:`PACKED` (2 bits/param, zero decode cost on
     arrival) or :data:`DENSE` (bf16 baseline — what shipping the
     uncompressed delta would cost).  Returns ``{name, rep, nbytes}``.
+
+    ``transport`` may also be a **list** of transports: the blob then
+    fans out to the ``replication_factor`` (default 2) consistent-hash
+    ring owners of the name, and the result gains a ``replicas`` key
+    naming them.  The ring is deterministic in the fleet, so a consumer
+    building a :class:`~repro.transport.ReplicatedTransport` over the
+    same replica list computes the same owners.
     """
+    if isinstance(transport, (list, tuple)):
+        from repro.transport.replication import ReplicatedTransport
+        transport = ReplicatedTransport(
+            list(transport),
+            replication_factor=(replication_factor
+                                if replication_factor is not None else 2))
+    elif replication_factor is not None:
+        if not hasattr(transport, "replication_factor"):
+            raise ValueError("replication_factor= needs a replica list or "
+                             "a ReplicatedTransport")
+        transport.replication_factor = min(replication_factor,
+                                           len(transport.replicas))
     return transport.publish(expert, rep=rep)
 
 

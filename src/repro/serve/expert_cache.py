@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.core import tree_packed_bytes
 from repro.core.packing import stack_packed, stacked_bytes
+from repro.distributed.fault import StragglerMonitor
 from repro.expert import GOLOMB, PACKED, Expert, as_expert
 
 # canonical sign->planes bridge lives with the Expert artifact now
@@ -116,6 +117,10 @@ class SwapStats:
                                     # of the transport's ledger)
     quarantines: int = 0            # expert health trips (consecutive
                                     # failures -> timed quarantine)
+    transport_bytes_wasted: int = 0  # bytes fetched but never served (mirror
+                                     # of the transport's ledger)
+    straggler_flags: int = 0        # promotions flagged slow vs the EWMA
+    straggler_recommendation: str = "healthy"   # StragglerMonitor verdict
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -224,6 +229,34 @@ class ExpertStore:
         return self._store[name].nbytes(PACKED)
 
 
+def _resolve_transport(transport, replicas, replication_factor, hedge_ms):
+    """Normalize the ``transport=`` / ``replicas=`` spelling shared by
+    :class:`RemoteExpertStore`, :class:`ExpertRegistry` and
+    ``repro.api.registry``: a replica fleet builds a
+    :class:`~repro.transport.replication.ReplicatedTransport` (consistent-
+    hash placement + leaf-resumable failover + optional hedged reads)."""
+    if replicas is not None:
+        if transport is not None:
+            raise ValueError("pass either transport= or replicas=, not both")
+        from repro.transport.replication import ReplicatedTransport
+        return ReplicatedTransport(
+            list(replicas),
+            replication_factor=(replication_factor
+                                if replication_factor is not None else 2),
+            hedge_ms=hedge_ms)
+    if replication_factor is not None or hedge_ms is not None:
+        if transport is None or not hasattr(transport, "replication_factor"):
+            raise ValueError("replication_factor=/hedge_ms= need replicas= "
+                             "(or an existing ReplicatedTransport)")
+        if replication_factor is not None:
+            transport.replication_factor = min(
+                replication_factor, len(transport.replicas))
+        transport.hedge_ms = hedge_ms
+    if transport is None:
+        raise ValueError("a remote store needs transport= or replicas=")
+    return transport
+
+
 class RemoteExpertStore(ExpertStore):
     """REMOTE tier: wire-format experts behind an
     :class:`~repro.transport.ExpertTransport`.
@@ -254,11 +287,15 @@ class RemoteExpertStore(ExpertStore):
     count against health: absence is not flakiness.
     """
 
-    def __init__(self, transport, cold_golomb: bool = False,
+    def __init__(self, transport=None, cold_golomb: bool = False,
                  budget_bytes: Optional[int] = None,
                  quarantine_after: int = DEFAULT_QUARANTINE_AFTER,
-                 quarantine_probe_s: float = DEFAULT_QUARANTINE_PROBE_S):
+                 quarantine_probe_s: float = DEFAULT_QUARANTINE_PROBE_S,
+                 replicas=None, replication_factor: Optional[int] = None,
+                 hedge_ms: Optional[float] = None):
         super().__init__(cold_golomb=cold_golomb, budget_bytes=budget_bytes)
+        transport = _resolve_transport(
+            transport, replicas, replication_factor, hedge_ms)
         self.transport = transport
         self.quarantine_after = quarantine_after
         self.quarantine_probe_s = quarantine_probe_s
@@ -345,13 +382,19 @@ class RemoteExpertStore(ExpertStore):
 
     def health(self) -> dict:
         """Snapshot of the per-expert health account (for dashboards and
-        tests): consecutive failures, active quarantines, trip count."""
+        tests): consecutive failures, active quarantines, trip count.
+        Replicated transports contribute a ``replicas`` section (per-
+        replica EWMA latency, failure counts, quarantine state)."""
         now = time.monotonic()
         with self._lock:
-            return {"failures": dict(self._failures),
-                    "quarantined": {n: max(0.0, t - now)
-                                    for n, t in self._quarantined.items()},
-                    "quarantines": self.quarantines}
+            out = {"failures": dict(self._failures),
+                   "quarantined": {n: max(0.0, t - now)
+                                   for n, t in self._quarantined.items()},
+                   "quarantines": self.quarantines}
+        transport_health = getattr(self.transport, "health", None)
+        if transport_health is not None:
+            out["replicas"] = transport_health()
+        return out
 
     def _evict_cold(self, name: str) -> None:
         super()._evict_cold(name)
@@ -403,6 +446,18 @@ class DeviceCache:
         self._pending: dict[str, Future] = {}
         self._pool: Optional[ThreadPoolExecutor] = None
         self.stats = SwapStats()
+        # promotion-latency health: every fetch/decode stage (prefetch
+        # worker or synchronous) feeds the EWMA; a stage much slower than
+        # the running average is flagged and the monitor's
+        # recommendation() surfaces in SwapStats / registry.health()
+        self.straggler = StragglerMonitor()
+        self._straggler_lock = threading.Lock()
+        self._straggler_obs = 0
+
+    def _observe_promotion(self, seconds: float) -> None:
+        with self._straggler_lock:
+            self._straggler_obs += 1
+            self.straggler.observe(self._straggler_obs, seconds)
 
     def resident_bytes(self) -> int:
         """Packed trees + stacked buffers — everything under the budget."""
@@ -473,7 +528,9 @@ class DeviceCache:
         t0 = time.perf_counter()
         art = self.store.get(name)      # remote fetch / cold Golomb decode
         packed_host = art.packed        # plane build (host)
-        return packed_host, time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self._observe_promotion(dt)
+        return packed_host, dt
 
     def invalidate_pending(self, name: str) -> None:
         """Drop a staged promotion whose cold-tier source changed (e.g. a
@@ -525,6 +582,7 @@ class DeviceCache:
             if self.store.cold_golomb:
                 self.stats.golomb_decode_seconds += time.perf_counter() - t0
             host_packed = art.packed
+            self._observe_promotion(time.perf_counter() - t0)
         self._sync_remote_stats()
         self.stats.store_to_host_bytes += self.store.nbytes(name)
         packed = jax.tree_util.tree_map(
@@ -554,6 +612,11 @@ class DeviceCache:
         transport = getattr(self.store, "transport", None)
         if transport is not None:
             self.stats.retries = transport.stats.retries
+            self.stats.transport_bytes_wasted = transport.stats.bytes_wasted
+        with self._straggler_lock:
+            self.stats.straggler_flags = len(self.straggler.flagged_steps)
+            self.stats.straggler_recommendation = \
+                self.straggler.recommendation()
 
     def stacked(self, names: tuple) -> dict:
         """Stacked plane buffers for an ordered expert set (slot e = names[e]).
@@ -615,9 +678,17 @@ class ExpertRegistry:
                  transport=None, cold_budget_bytes: Optional[int] = None,
                  retry=None,
                  quarantine_after: int = DEFAULT_QUARANTINE_AFTER,
-                 quarantine_probe_s: float = DEFAULT_QUARANTINE_PROBE_S):
-        if store is not None and transport is not None:
-            raise ValueError("pass either store= or transport=, not both")
+                 quarantine_probe_s: float = DEFAULT_QUARANTINE_PROBE_S,
+                 replicas=None, replication_factor: Optional[int] = None,
+                 hedge_ms: Optional[float] = None):
+        if store is not None and (transport is not None
+                                  or replicas is not None):
+            raise ValueError("pass either store= or transport=/replicas=, "
+                             "not both")
+        if (transport is not None or replicas is not None
+                or replication_factor is not None or hedge_ms is not None):
+            transport = _resolve_transport(transport, replicas,
+                                           replication_factor, hedge_ms)
         if retry is not None:
             if transport is None:
                 raise ValueError("retry= needs a transport-backed registry")
@@ -704,12 +775,22 @@ class ExpertRegistry:
             self._device.close()
 
     def health(self) -> dict:
-        """Per-expert health snapshot (remote registries track consecutive
-        failures and quarantines; local stores are always healthy)."""
+        """Health snapshot: per-expert failure/quarantine accounts (remote
+        registries), per-replica health when the transport is replicated
+        (``replicas`` section), and the device tier's promotion-latency
+        straggler verdict (``straggler`` section)."""
         h = getattr(self.store, "health", None)
-        if h is not None:
-            return h()
-        return {"failures": {}, "quarantined": {}, "quarantines": 0}
+        out = (h() if h is not None
+               else {"failures": {}, "quarantined": {}, "quarantines": 0})
+        if self._device is not None:
+            with self._device._straggler_lock:
+                out["straggler"] = {
+                    "recommendation":
+                        self._device.straggler.recommendation(),
+                    "flags": len(self._device.straggler.flagged_steps),
+                    "ewma_s": self._device.straggler.ewma,
+                }
+        return out
 
     def publish(self, expert, rep: Optional[str] = None) -> dict:
         """Upload an expert through the registry's transport (remote

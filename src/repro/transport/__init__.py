@@ -15,22 +15,25 @@ from repro.transport.backends import (ExpertTransport, HTTPTransport,
                                       InMemoryTransport, LocalTransport,
                                       SimulatedNetworkTransport,
                                       TransportStats, serve_local_http)
-from repro.transport.chaos import ChaosFault, ChaosTransport
+from repro.transport.chaos import ChaosFault, ChaosTransport, ReplicaFault
+from repro.transport.replication import ReplicatedTransport
 from repro.transport.retry import (DeadlineExceeded, ExpertNotFound,
                                    FetchTimeout, ReplicaUnreachable,
                                    RetriesExhausted, RetryPolicy,
                                    TransientTransportError, is_retryable)
 from repro.transport.wire import (MAGIC, VERSION, WIRE_SUFFIX, ChecksumError,
                                   TransportError, WireFormatError,
-                                  decode_expert, encode_expert, is_wire_blob,
-                                  peek_manifest, wire_nbytes)
+                                  decode_expert, decode_leaves, encode_expert,
+                                  is_wire_blob, payload_offset, peek_manifest,
+                                  supports_resume, verify_leaf, wire_nbytes)
 
 __all__ = ["ExpertTransport", "HTTPTransport", "InMemoryTransport",
            "LocalTransport", "SimulatedNetworkTransport", "TransportStats",
-           "serve_local_http", "ChaosFault", "ChaosTransport",
-           "DeadlineExceeded", "ExpertNotFound", "FetchTimeout",
-           "ReplicaUnreachable", "RetriesExhausted", "RetryPolicy",
-           "TransientTransportError", "is_retryable", "MAGIC", "VERSION",
-           "WIRE_SUFFIX", "ChecksumError", "TransportError",
-           "WireFormatError", "decode_expert", "encode_expert",
-           "is_wire_blob", "peek_manifest", "wire_nbytes"]
+           "serve_local_http", "ChaosFault", "ChaosTransport", "ReplicaFault",
+           "ReplicatedTransport", "DeadlineExceeded", "ExpertNotFound",
+           "FetchTimeout", "ReplicaUnreachable", "RetriesExhausted",
+           "RetryPolicy", "TransientTransportError", "is_retryable", "MAGIC",
+           "VERSION", "WIRE_SUFFIX", "ChecksumError", "TransportError",
+           "WireFormatError", "decode_expert", "decode_leaves",
+           "encode_expert", "is_wire_blob", "payload_offset", "peek_manifest",
+           "supports_resume", "verify_leaf", "wire_nbytes"]

@@ -45,21 +45,37 @@ from repro.transport.retry import (DEFAULT_RETRY, SIMULATED_RETRY,
                                    FetchTimeout, ReplicaUnreachable,
                                    RetriesExhausted, RetryPolicy,
                                    TransientTransportError, is_retryable)
-from repro.transport.wire import (WIRE_SUFFIX, TransportError, decode_expert,
-                                  encode_expert)
+from repro.transport.wire import (WIRE_SUFFIX, TransportError, WireFormatError,
+                                  decode_expert, encode_expert)
 
 
 @dataclasses.dataclass
 class TransportStats:
     publishes: int = 0
     fetches: int = 0
+    range_fetches: int = 0
     bytes_out: int = 0
     bytes_in: int = 0
+    bytes_wasted: int = 0
     fetch_seconds: float = 0.0
     retries: int = 0
 
     def as_dict(self):
         return dataclasses.asdict(self)
+
+
+# Overall fetch deadline for the *current thread*, as a monotonic instant.
+# ``_retrying`` (and the replicated fetch loop) arm it so backends that
+# charge wall time — the simulated link above all — can refuse to start a
+# transfer the caller will no longer wait for, instead of sleeping through
+# an already-expired deadline (chaos sweeps with many blackouts would
+# otherwise serially burn CI wall-clock).
+_DEADLINE = threading.local()
+
+
+def _deadline_remaining() -> Optional[float]:
+    until = getattr(_DEADLINE, "until", None)
+    return None if until is None else until - time.monotonic()
 
 
 class ExpertTransport:
@@ -112,29 +128,36 @@ class ExpertTransport:
         attempt/deadline budget; terminal errors raise immediately."""
         pol = retry or self.retry
         t0 = time.monotonic()
+        prev_deadline = getattr(_DEADLINE, "until", None)
+        if pol.deadline_s is not None:
+            _DEADLINE.until = t0 + pol.deadline_s
         last: Optional[Exception] = None
-        for i in range(pol.max_attempts):
-            if i:
-                delay = pol.backoff_s(i - 1, name)
-                if (pol.deadline_s is not None
-                        and time.monotonic() - t0 + delay > pol.deadline_s):
-                    raise DeadlineExceeded(
-                        f"fetch of {name!r} would exceed the "
-                        f"{pol.deadline_s}s deadline after {i} attempt(s); "
-                        f"last error: {last}") from last
-                if delay:
-                    time.sleep(delay)
-                with self._stats_lock:
-                    self.stats.retries += 1
-            try:
-                return attempt()
-            except Exception as e:
-                if not is_retryable(e):
-                    raise
-                last = e
-        raise RetriesExhausted(
-            f"fetch of {name!r} failed after {pol.max_attempts} attempt(s); "
-            f"last error: {last}") from last
+        try:
+            for i in range(pol.max_attempts):
+                if i:
+                    delay = pol.backoff_s(i - 1, name)
+                    if (pol.deadline_s is not None
+                            and time.monotonic() - t0 + delay
+                            > pol.deadline_s):
+                        raise DeadlineExceeded(
+                            f"fetch of {name!r} would exceed the "
+                            f"{pol.deadline_s}s deadline after {i} "
+                            f"attempt(s); last error: {last}") from last
+                    if delay:
+                        time.sleep(delay)
+                    with self._stats_lock:
+                        self.stats.retries += 1
+                try:
+                    return attempt()
+                except Exception as e:
+                    if not is_retryable(e):
+                        raise
+                    last = e
+            raise RetriesExhausted(
+                f"fetch of {name!r} failed after {pol.max_attempts} "
+                f"attempt(s); last error: {last}") from last
+        finally:
+            _DEADLINE.until = prev_deadline
 
     def fetch_bytes(self, name: str,
                     retry: Optional[RetryPolicy] = None) -> bytes:
@@ -149,11 +172,37 @@ class ExpertTransport:
         """Download + decode + verify ``name``; returns ``(expert,
         bytes_on_wire)``.  The retry loop spans decode too, so a blob
         that arrives corrupt (``ChecksumError``) is *refetched* instead
-        of failing the caller."""
+        of failing the caller.  Bytes that arrived but failed
+        verification are charged to ``stats.bytes_wasted`` — they crossed
+        the link and bought nothing."""
         def attempt():
             blob = self._timed_get(name)
-            return decode_expert(blob, name=name), len(blob)
+            try:
+                return decode_expert(blob, name=name), len(blob)
+            except WireFormatError:
+                with self._stats_lock:
+                    self.stats.bytes_wasted += len(blob)
+                raise
         return self._retrying(name, attempt, retry)
+
+    def get_range(self, name: str, start: int, length: int) -> bytes:
+        """One ranged read of the stored blob: ``length`` bytes from
+        absolute offset ``start``, clamped at end-of-blob (a probe larger
+        than the blob returns the whole blob, never an error).
+
+        No retry loop and no decode — this is the primitive the
+        replicated CDN (:mod:`repro.transport.replication`) builds its
+        leaf-resumable fetch on; multi-replica callers own failover.
+        Charged to ``stats.range_fetches`` / ``bytes_in``.
+        """
+        t0 = time.perf_counter()
+        chunk = self._get_range(name, int(start), int(length))
+        dt = time.perf_counter() - t0
+        with self._stats_lock:
+            self.stats.range_fetches += 1
+            self.stats.bytes_in += len(chunk)
+            self.stats.fetch_seconds += dt
+        return chunk
 
     def fetch(self, name: str) -> Expert:
         """Download + decode ``name`` into an :class:`Expert` (checksum
@@ -180,6 +229,11 @@ class ExpertTransport:
     def _get(self, name: str) -> bytes:
         raise NotImplementedError
 
+    def _get_range(self, name: str, start: int, length: int) -> bytes:
+        # Fallback: fetch whole, slice locally.  Backends with a native
+        # ranged read (file seek, HTTP Range) override this.
+        return self._get(name)[start:start + length]
+
     def _names(self) -> list[str]:
         raise NotImplementedError
 
@@ -201,6 +255,12 @@ class InMemoryTransport(ExpertTransport):
         except KeyError:
             raise ExpertNotFound(f"no published expert named {name!r}") \
                 from None
+
+    def _get_range(self, name: str, start: int, length: int) -> bytes:
+        return self._get(name)[start:start + length]
+
+    def _delete(self, name: str) -> None:
+        self._blobs.pop(name, None)
 
     def _names(self) -> list[str]:
         return list(self._blobs)
@@ -229,6 +289,16 @@ class LocalTransport(ExpertTransport):
         try:
             with open(self._path(name), "rb") as f:
                 return f.read()
+        except FileNotFoundError:
+            raise ExpertNotFound(
+                f"no published expert named {name!r} under {self.root}") \
+                from None
+
+    def _get_range(self, name: str, start: int, length: int) -> bytes:
+        try:
+            with open(self._path(name), "rb") as f:
+                f.seek(start)
+                return f.read(length)
         except FileNotFoundError:
             raise ExpertNotFound(
                 f"no published expert named {name!r} under {self.root}") \
@@ -288,20 +358,53 @@ class SimulatedNetworkTransport(ExpertTransport):
     def _put(self, name: str, blob: bytes) -> None:
         self.inner._put(name, blob)
 
-    def _get(self, name: str) -> bytes:
-        blob = self.inner._get(name)
-        delay = self._delay(len(blob))
+    def _transmit(self, name: str, nbytes: int) -> None:
+        """Charge link time for ``nbytes``, honouring the caller's
+        per-attempt timeout AND overall deadline, and roll the loss dice.
+
+        If the sleep we are about to pay would outlive the thread's armed
+        deadline, raise :class:`DeadlineExceeded` *without sleeping* —
+        the caller has already given up on this fetch, so burning its
+        wall-clock on the link model is pure waste (chaos CI sweeps hit
+        this constantly).  Bytes that cross the link but never reach the
+        caller (timeout partials, loss drops) are charged to
+        ``stats.bytes_wasted``.
+        """
+        delay = self._delay(nbytes)
         timeout = self.retry.per_attempt_timeout_s
+        sleep_s = delay if (timeout is None or delay <= timeout) else timeout
+        remaining = _deadline_remaining()
+        if remaining is not None and sleep_s > remaining:
+            raise DeadlineExceeded(
+                f"fetch of {name!r} needs {sleep_s:.3f}s of link time but "
+                f"only {max(0.0, remaining):.3f}s of the deadline remain")
         if timeout is not None and delay > timeout:
             time.sleep(timeout)     # the attempt hangs until its budget
+            arrived = int(max(0.0, timeout - self.latency_s)
+                          * self.bandwidth_bps)
+            with self._stats_lock:
+                self.stats.bytes_wasted += min(nbytes, arrived)
             raise FetchTimeout(
                 f"fetch of {name!r} needs {delay:.3f}s on this link, over "
                 f"the {timeout}s per-attempt timeout")
         time.sleep(delay)
         if self._dropped():
+            with self._stats_lock:
+                self.stats.bytes_wasted += nbytes
             raise TransientTransportError(
                 f"fetch of {name!r} dropped (loss={self.loss})")
+
+    def _get(self, name: str) -> bytes:
+        blob = self.inner._get(name)
+        self._transmit(name, len(blob))
         return blob
+
+    def _get_range(self, name: str, start: int, length: int) -> bytes:
+        # Link time is charged per chunk: a leaf-granular resumable fetch
+        # pays for exactly the bytes it requests, nothing more.
+        chunk = self.inner._get_range(name, start, length)
+        self._transmit(name, len(chunk))
+        return chunk
 
     def _names(self) -> list[str]:
         return self.inner._names()
@@ -332,11 +435,13 @@ class HTTPTransport(ExpertTransport):
         from urllib.parse import quote
         return f"{self.base_url}/{quote(name)}{WIRE_SUFFIX}"
 
-    def _request(self, name: str, method: str):
+    def _request(self, name: str, method: str,
+                 headers: Optional[dict] = None):
         import socket
         import urllib.error
         import urllib.request
-        req = urllib.request.Request(self._url(name), method=method)
+        req = urllib.request.Request(self._url(name), method=method,
+                                     headers=headers or {})
         timeout = self.retry.per_attempt_timeout_s or self.timeout_s
         try:
             return urllib.request.urlopen(req, timeout=timeout)
@@ -365,6 +470,26 @@ class HTTPTransport(ExpertTransport):
     def _get(self, name: str) -> bytes:
         with self._request(name, "GET") as resp:
             return resp.read()
+
+    def _get_range(self, name: str, start: int, length: int) -> bytes:
+        """Ranged GET via an RFC 7233 ``Range`` header.
+
+        A 206 body is the requested slice (clamped at end-of-file by the
+        server).  A server that ignores Range answers 200 with the full
+        blob — we slice locally and charge the surplus to
+        ``stats.bytes_wasted``, so "zero extra bytes" claims stay honest
+        against non-compliant origins."""
+        if length <= 0:
+            return b""
+        hdrs = {"Range": f"bytes={start}-{start + length - 1}"}
+        with self._request(name, "GET", headers=hdrs) as resp:
+            body = resp.read()
+            if resp.status == 206:
+                return body
+        chunk = body[start:start + length]
+        with self._stats_lock:
+            self.stats.bytes_wasted += len(body) - len(chunk)
+        return chunk
 
     def _put(self, name: str, blob: bytes) -> None:
         import urllib.error
@@ -397,16 +522,70 @@ class HTTPTransport(ExpertTransport):
             "HTTPTransport cannot enumerate experts; fetch by name")
 
 
+def _make_range_handler():
+    import re
+    from http.server import SimpleHTTPRequestHandler
+
+    class RangeRequestHandler(SimpleHTTPRequestHandler):
+        """SimpleHTTPRequestHandler + single-range ``Range: bytes=a-b``
+        support (RFC 7233): answers 206 Partial Content with the
+        requested slice, clamped at end-of-file.  This is what makes the
+        replicated CDN's leaf-resumable fetch work over plain HTTP."""
+
+        _range_re = re.compile(r"bytes=(\d+)-(\d*)$")
+
+        def log_message(self, *a):        # keep test output quiet
+            pass
+
+        def do_GET(self):
+            m = self._range_re.match(self.headers.get("Range", ""))
+            if not m:
+                return super().do_GET()
+            path = self.translate_path(self.path)
+            try:
+                f = open(path, "rb")
+            except OSError:
+                self.send_error(404, "File not found")
+                return
+            try:
+                size = os.fstat(f.fileno()).st_size
+                start = int(m.group(1))
+                end = int(m.group(2)) if m.group(2) else size - 1
+                end = min(end, size - 1)
+                if start >= size or start > end:
+                    self.send_error(
+                        416, "Requested Range Not Satisfiable")
+                    return
+                length = end - start + 1
+                self.send_response(206)
+                self.send_header("Content-Type",
+                                 self.guess_type(path))
+                self.send_header("Accept-Ranges", "bytes")
+                self.send_header("Content-Range",
+                                 f"bytes {start}-{end}/{size}")
+                self.send_header("Content-Length", str(length))
+                self.end_headers()
+                f.seek(start)
+                self.wfile.write(f.read(length))
+            finally:
+                f.close()
+
+    return RangeRequestHandler
+
+
 def serve_local_http(root: str, host: str = "127.0.0.1", port: int = 0):
     """Serve a :class:`LocalTransport` root over HTTP in a daemon thread.
 
     Returns ``(server, base_url)``; call ``server.shutdown()`` when done.
     Pairs a filesystem publisher with :class:`HTTPTransport` consumers —
     the integration tests and ``examples/remote_experts.py`` use it.
+    Answers ``Range`` requests with 206 Partial Content, so
+    :meth:`HTTPTransport.get_range` (and the replicated CDN's resumable
+    fetch on top of it) transfers only the requested bytes.
     """
     import functools
-    from http.server import SimpleHTTPRequestHandler, ThreadingHTTPServer
-    handler = functools.partial(SimpleHTTPRequestHandler, directory=root)
+    from http.server import ThreadingHTTPServer
+    handler = functools.partial(_make_range_handler(), directory=root)
     server = ThreadingHTTPServer((host, port), handler)
     thread = threading.Thread(target=server.serve_forever, daemon=True)
     thread.start()

@@ -12,8 +12,12 @@ blob carries an entire expert:
 The manifest is self-describing: representation (``dense`` / ``packed`` /
 ``golomb``), per-leaf path/shape/dtype/scale and payload offsets, plus a
 CRC-32 of the payload so a torn or corrupted transfer is rejected instead
-of silently decoded.  The payload is the concatenation of the per-leaf
-encodings for the chosen representation:
+of silently decoded.  Each leaf additionally carries its own CRC-32, so a
+**partial** payload can be verified leaf by leaf: a ranged fetch that died
+mid-blob resumes from the first unfinished leaf instead of starting over
+(:func:`decode_leaves` / :func:`verify_leaf`; the replicated CDN in
+:mod:`repro.transport.replication` is the consumer).  The payload is the
+concatenation of the per-leaf encodings for the chosen representation:
 
 * ``GOLOMB`` — each leaf is a self-contained Golomb-Rice stream
   (:func:`repro.core.golomb.encode`); the storage-optimal form and the
@@ -104,7 +108,8 @@ def encode_expert(expert: Any, rep: str = GOLOMB) -> bytes:
         leaves.append({"path": path, "shape": list(pt.shape),
                        "dtype": str(jnp.dtype(pt.orig_dtype)),
                        "scale": float(pt.scale),
-                       "offset": offset, "nbytes": len(blob)})
+                       "offset": offset, "nbytes": len(blob),
+                       "crc32": zlib.crc32(blob)})
         parts.append(blob)
         offset += len(blob)
     payload = b"".join(parts)
@@ -144,6 +149,63 @@ def peek_manifest(data: bytes) -> dict:
         raise WireFormatError(f"unknown manifest format "
                               f"{manifest.get('format')!r}")
     return manifest
+
+
+def payload_offset(data: bytes) -> int:
+    """Absolute byte offset where the payload starts (header + manifest).
+
+    Works on any prefix of the blob that covers the 9-byte header; leaf
+    ``offset`` fields are payload-relative, so a ranged read of leaf L
+    spans ``[payload_offset(head) + L["offset"], ... + L["nbytes"])``.
+    """
+    if len(data) < _HEADER.size:
+        raise WireFormatError("blob shorter than the wire header")
+    magic, _, mlen = _HEADER.unpack_from(data)
+    if magic != MAGIC:
+        raise WireFormatError("bad magic: not a ComPEFT wire artifact")
+    return _HEADER.size + mlen
+
+
+def decode_leaves(manifest: dict,
+                  byte_range: Optional[tuple] = None) -> list[dict]:
+    """Leaf descriptors driving a (partial) payload fetch.
+
+    Returns the manifest's leaves sorted by payload ``offset``.  With
+    ``byte_range=(start, stop)`` (payload-relative, half-open) only the
+    leaves intersecting that span are returned — the unit of resumption
+    for a fetch that died mid-blob: everything before the range is already
+    verified, everything inside it still needs bytes.
+    """
+    leaves = sorted(manifest["leaves"], key=lambda l: l["offset"])
+    if byte_range is None:
+        return leaves
+    start, stop = byte_range
+    return [l for l in leaves
+            if l["offset"] < stop and l["offset"] + l["nbytes"] > start]
+
+
+def supports_resume(manifest: dict) -> bool:
+    """True when every leaf carries its own CRC-32 (blobs written by this
+    version do).  Older blobs fall back to whole-payload verification —
+    a mid-blob failover then refetches the full payload."""
+    return all("crc32" in l for l in manifest["leaves"])
+
+
+def verify_leaf(leaf: dict, raw: bytes) -> None:
+    """Verify one leaf's bytes against its manifest entry.
+
+    Raises :class:`ChecksumError` on a length or CRC mismatch — the
+    caller treats that like any retryable transfer fault and re-requests
+    just this leaf (possibly from a different replica).
+    """
+    if len(raw) != leaf["nbytes"]:
+        raise ChecksumError(
+            f"leaf {leaf.get('path')!r} is {len(raw)} bytes, manifest "
+            f"promises {leaf['nbytes']} — truncated transfer?")
+    crc = leaf.get("crc32")
+    if crc is not None and zlib.crc32(raw) != crc:
+        raise ChecksumError(f"leaf {leaf.get('path')!r} CRC mismatch — "
+                            f"corrupt transfer")
 
 
 def decode_expert(data: bytes, name: Optional[str] = None) -> Expert:

@@ -1,0 +1,464 @@
+"""Replicated expert CDN: placement, failover, hedging, revalidation.
+
+Covers the replication tentpole end to end:
+
+* consistent-hash ring stability under replica add/remove (bounded key
+  movement) and R-way publish fan-out;
+* leaf-resumable mid-stream failover — bit-identical Expert vs a
+  no-fault fetch, with the byte ledger proving ZERO refetched bytes;
+* hedged reads (winner determinism under seeded link latencies);
+* per-replica quarantine -> revalidate -> recover, and repair of
+  under-replicated names;
+* HTTP 206/Range roundtrip against ``serve_local_http``;
+* the satellite fixes: ``bytes_wasted`` accounting, deadline-aware
+  simulated links, and the DeviceCache straggler monitor.
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as rapi
+from repro.expert import GOLOMB, PACKED
+from repro.serve.expert_cache import ExpertRegistry
+from repro.transport import (ChaosFault, ChaosTransport, ChecksumError,
+                             DeadlineExceeded, ExpertNotFound, HTTPTransport,
+                             InMemoryTransport, LocalTransport, ReplicaFault,
+                             ReplicatedTransport, RetryPolicy,
+                             SimulatedNetworkTransport, decode_leaves,
+                             encode_expert, peek_manifest, payload_offset,
+                             serve_local_http, verify_leaf)
+
+FAST = RetryPolicy(max_attempts=3, backoff_base_s=0.0)
+
+
+def make_expert(name="cdn", seed=0, shape=(256, 192), nleaves=4):
+    rng = np.random.default_rng(seed)
+    tau = {f"l{i}/w": jnp.asarray(rng.normal(0, 7e-4, shape), jnp.float32)
+           for i in range(nleaves)}
+    return rapi.compress(tau, name=name, density=0.2)
+
+
+def assert_planes_equal(a, b):
+    assert set(a) == set(b)
+    for p in a:
+        np.testing.assert_array_equal(np.asarray(a[p].pos),
+                                      np.asarray(b[p].pos))
+        np.testing.assert_array_equal(np.asarray(a[p].neg),
+                                      np.asarray(b[p].neg))
+        assert float(a[p].scale) == float(b[p].scale)
+
+
+def fleet(n=3, fault_replica=None, replica_faults=(), **rep_kw):
+    """n chaos-wrapped in-memory replicas under one ReplicatedTransport."""
+    inners = [InMemoryTransport() for _ in range(n)]
+    chaos = [ChaosTransport(inners[i], retry=FAST,
+                            replica_faults=(replica_faults
+                                            if i == fault_replica else ()))
+             for i in range(n)]
+    rep_kw.setdefault("retry", FAST)
+    return ReplicatedTransport(chaos, **rep_kw), chaos, inners
+
+
+# ---------------------------------------------------------------- wire helpers
+def test_manifest_carries_per_leaf_crcs():
+    blob = encode_expert(make_expert(), rep=GOLOMB)
+    m = peek_manifest(blob)
+    leaves = decode_leaves(m)
+    assert all("crc32" in l for l in leaves)
+    assert [l["offset"] for l in leaves] == sorted(l["offset"]
+                                                   for l in leaves)
+    pay = payload_offset(blob)
+    for l in leaves:
+        raw = blob[pay + l["offset"]:pay + l["offset"] + l["nbytes"]]
+        verify_leaf(l, raw)                      # clean bytes verify
+        if l["nbytes"]:
+            bad = bytearray(raw)
+            bad[0] ^= 1
+            with pytest.raises(ChecksumError):
+                verify_leaf(l, bytes(bad))       # one flipped bit is caught
+
+
+def test_decode_leaves_byte_range_selects_intersecting():
+    blob = encode_expert(make_expert(), rep=PACKED)
+    m = peek_manifest(blob)
+    leaves = decode_leaves(m)
+    l1 = leaves[1]
+    mid = l1["offset"] + l1["nbytes"] // 2
+    got = decode_leaves(m, byte_range=(mid, mid + 1))
+    assert [l["path"] for l in got] == [l1["path"]]
+    rest = decode_leaves(m, byte_range=(mid, m["payload_nbytes"]))
+    assert [l["path"] for l in rest] == [l["path"] for l in leaves[1:]]
+
+
+# ------------------------------------------------------------------ placement
+def test_ring_stability_bounded_key_movement():
+    names = [f"expert-{i}" for i in range(300)]
+    ids4 = ["a", "b", "c", "d"]
+    r4 = ReplicatedTransport([InMemoryTransport() for _ in ids4],
+                             replica_ids=ids4, replication_factor=2)
+    owners4 = {n: [ids4[i] for i in r4._owners(n)] for n in names}
+
+    ids5 = ids4 + ["e"]
+    r5 = ReplicatedTransport([InMemoryTransport() for _ in ids5],
+                             replica_ids=ids5, replication_factor=2)
+    owners5 = {n: [ids5[i] for i in r5._owners(n)] for n in names}
+
+    moved = sum(1 for n in names if set(owners4[n]) != set(owners5[n]))
+    # adding 1 of 5 replicas should re-home roughly R/5 of the keys; a
+    # naive mod-N hash would move nearly all of them
+    assert moved < 0.45 * len(names), f"{moved}/{len(names)} keys moved"
+    # every changed assignment involves the new replica
+    for n in names:
+        diff = set(owners5[n]) - set(owners4[n])
+        assert diff <= {"e"}
+
+    # removal is symmetric: drop "e" again -> back to the original owners
+    owners4b = {n: [ids4[i] for i in r4._owners(n)] for n in names}
+    assert owners4b == owners4
+
+
+def test_publish_fans_out_to_R_owners():
+    rep, _, inners = fleet(n=3, replication_factor=2)
+    experts = [make_expert(f"e{i}", seed=i) for i in range(6)]
+    for ex in experts:
+        info = rep.publish(ex, rep=GOLOMB)
+        assert len(info["replicas"]) == 2
+        holders = [i for i, t in enumerate(inners) if ex.name in t._blobs]
+        assert sorted(holders) == sorted(info["replicas"])
+    assert sorted(rep.names()) == sorted(e.name for e in experts)
+    for ex in experts:
+        assert ex.name in rep
+
+
+# ------------------------------------------------- resumable fetch / failover
+def test_clean_fetch_bit_identical_and_zero_waste():
+    rep, chaos, _ = fleet(n=3, replication_factor=3, probe_bytes=4096)
+    ex = make_expert()
+    blob = encode_expert(ex, rep=PACKED)
+    rep.publish(ex, rep=PACKED)
+    got = rep.fetch(ex.name)
+    assert_planes_equal(got.packed, ex.packed)
+    assert rep.stats.bytes_wasted == 0
+    # total bytes pulled across the fleet == bytes-on-wire, exactly
+    assert sum(c.stats.bytes_in for c in chaos) == len(blob)
+    assert rep.stats.bytes_in == len(blob)
+
+
+def test_midstream_failover_refetches_only_unfinished_leaves():
+    ex = make_expert()
+    blob = encode_expert(ex, rep=PACKED)
+    m = peek_manifest(blob)
+    leaves = decode_leaves(m)
+    pay = payload_offset(blob)
+    probe = 4096
+
+    # replica 0 dies after serving 2 chunks of every name: the probe
+    # (op 0) and leaf0's suffix (op 1) arrive, op 2 never does
+    rep, chaos, _ = fleet(n=3, fault_replica=0,
+                          replica_faults=[ReplicaFault("blackout", at=2)],
+                          replication_factor=3, probe_bytes=probe,
+                          quarantine_after=99)
+    rep.publish(ex, rep=PACKED)
+    got = rep.fetch(ex.name)
+    assert_planes_equal(got.packed, ex.packed)       # bit-identical stitch
+
+    # replica 0 delivered: probe + (leaf0 end - probe) + nothing more
+    leaf0_end = pay + leaves[0]["offset"] + leaves[0]["nbytes"]
+    assert chaos[0].stats.bytes_in == probe + (leaf0_end - probe)
+    # failover pulled ONLY the unfinished leaves from the next replica
+    rest = sum(l["nbytes"] for l in leaves[1:])
+    assert chaos[1].stats.bytes_in + chaos[2].stats.bytes_in == rest
+    # nothing was fetched twice, nothing was thrown away
+    assert sum(c.stats.bytes_in for c in chaos) == len(blob)
+    assert rep.stats.bytes_wasted == 0
+    assert rep.stats.retries == 1
+    assert chaos[0].fired() == [{"name": ex.name, "fetch": 2,
+                                 "kind": "replica_blackout"}]
+
+
+def test_r1_control_fails_where_r3_survives():
+    faults = [ReplicaFault("blackout", at=2)]
+    ex = make_expert()
+
+    rep1, _, _ = fleet(n=1, fault_replica=0, replica_faults=faults,
+                       replication_factor=1, probe_bytes=4096)
+    rep1.publish(ex, rep=PACKED)
+    with pytest.raises(Exception) as ei:
+        rep1.fetch(ex.name)
+    assert "failed after" in str(ei.value)
+    # everything the dead fetch pulled is accounted as waste
+    assert rep1.stats.bytes_wasted > 0
+    assert rep1.stats.bytes_wasted == rep1.replicas[0].stats.bytes_in
+
+    rep3, _, _ = fleet(n=3, fault_replica=0, replica_faults=faults,
+                       replication_factor=3, probe_bytes=4096)
+    rep3.publish(ex, rep=PACKED)
+    got = rep3.fetch(ex.name)
+    assert_planes_equal(got.packed, ex.packed)
+
+
+def test_corrupt_leaf_from_one_replica_is_refetched_clean():
+    ex = make_expert()
+    inners = [InMemoryTransport() for _ in range(2)]
+    # bitflip on replica 0's op 1 (the first post-probe chunk)
+    chaos = [ChaosTransport(inners[0], retry=FAST,
+                            faults=[ChaosFault(ex.name, 1, "bitflip")]),
+             ChaosTransport(inners[1], retry=FAST)]
+    rep = ReplicatedTransport(chaos, replication_factor=2, probe_bytes=4096,
+                              retry=FAST)
+    rep.publish(ex, rep=PACKED)
+    got = rep.fetch(ex.name)
+    assert_planes_equal(got.packed, ex.packed)
+    assert rep.stats.bytes_wasted > 0        # the corrupt chunk
+    assert rep.stats.retries >= 1
+
+
+def test_absent_everywhere_is_terminal_not_found():
+    rep, _, _ = fleet(n=3, replication_factor=2)
+    with pytest.raises(ExpertNotFound):
+        rep.fetch_bytes("never-published")
+
+
+# -------------------------------------------------------------------- hedging
+def test_hedge_winner_deterministic_under_seeded_latencies():
+    ex = make_expert()
+    blob = encode_expert(ex, rep=PACKED)
+    for _ in range(3):          # deterministic across repeated runs
+        slow = SimulatedNetworkTransport(latency_s=0.25, seed=0)
+        fast = SimulatedNetworkTransport(latency_s=0.002, seed=1)
+        rep = ReplicatedTransport([slow, fast], replication_factor=2,
+                                  hedge_ms=40, probe_bytes=4096, retry=FAST)
+        rep.publish(ex, rep=PACKED)
+        t0 = time.perf_counter()
+        out = rep.fetch_bytes(ex.name)
+        dt = time.perf_counter() - t0
+        assert out == blob
+        # the slow primary needs >= 5 x 250ms; the hedge must win long
+        # before that (40ms budget + a few fast-link chunks)
+        assert dt < 0.8, f"hedge did not rescue the fetch ({dt:.3f}s)"
+        assert fast.stats.bytes_in >= len(blob) - 4096
+
+
+def test_hedge_disabled_pays_the_slow_primary():
+    ex = make_expert()
+    slow = SimulatedNetworkTransport(latency_s=0.10, seed=0)
+    fast = SimulatedNetworkTransport(latency_s=0.002, seed=1)
+    rep = ReplicatedTransport([slow, fast], replication_factor=2,
+                              hedge_ms=None, probe_bytes=4096, retry=FAST)
+    rep.publish(ex, rep=PACKED)
+    t0 = time.perf_counter()
+    rep.fetch_bytes(ex.name)
+    dt = time.perf_counter() - t0
+    assert dt > 0.3              # unprobed order tries the slow link first
+    assert rep.stats.bytes_wasted == 0
+
+
+# ------------------------------------------- quarantine / revalidate / repair
+def test_quarantine_revalidate_recover():
+    ex = make_expert()
+    rep, chaos, _ = fleet(n=2, fault_replica=0,
+                          replica_faults=[ReplicaFault("blackout", at=0)],
+                          replication_factor=2, probe_bytes=4096,
+                          quarantine_after=1, quarantine_probe_s=30.0)
+    rep.publish(ex, rep=PACKED)
+    got = rep.fetch(ex.name)                 # fails over to replica 1
+    assert_planes_equal(got.packed, ex.packed)
+    h = rep.health()
+    assert h["quarantined"] == 1
+    assert h["replicas"][0]["quarantined_for_s"] > 0
+    assert h["replicas"][0]["failures"] >= 1
+
+    ops_before = chaos[0].stats.range_fetches + chaos[0].stats.fetches
+    rep.fetch_bytes(ex.name)                 # quarantined replica skipped
+    assert (chaos[0].stats.range_fetches
+            + chaos[0].stats.fetches) == ops_before
+
+    # dead host: revalidation probes it, keeps it benched
+    out = rep.revalidate(repair=False)
+    assert out["probed"] == 1 and out["recovered"] == 0
+    assert rep.health()["quarantined"] == 1
+
+    # host comes back: re-probe clears the bench
+    chaos[0].restore_replica()
+    out = rep.revalidate(repair=False)
+    assert out["probed"] == 1 and out["recovered"] == 1
+    h = rep.health()
+    assert h["quarantined"] == 0
+    assert h["replicas"][0]["failures"] == 0
+
+
+def test_revalidate_repairs_under_replicated_names():
+    rep, _, inners = fleet(n=3, replication_factor=2)
+    ex = make_expert()
+    info = rep.publish(ex, rep=GOLOMB)
+    lost = info["replicas"][0]
+    inners[lost]._delete(ex.name)            # a replica lost its disk
+    holders = [i for i, t in enumerate(inners) if ex.name in t._blobs]
+    assert len(holders) == 1                 # under-replicated now
+    out = rep.revalidate(repair=True)
+    assert out["repaired"] == 1
+    holders = [i for i, t in enumerate(inners) if ex.name in t._blobs]
+    assert sorted(holders) == sorted(info["replicas"])
+    got = rep.fetch(ex.name)
+    assert_planes_equal(got.packed, ex.packed)
+
+
+def test_background_sweep_runs_and_stops():
+    rep, _, inners = fleet(n=2, replication_factor=2)
+    ex = make_expert()
+    info = rep.publish(ex, rep=GOLOMB)
+    inners[info["replicas"][0]]._delete(ex.name)
+    rep.start_sweep(interval_s=0.05)
+    try:
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline:
+            if all(ex.name in inners[i]._blobs for i in info["replicas"]):
+                break
+            time.sleep(0.02)
+        assert all(ex.name in inners[i]._blobs for i in info["replicas"])
+    finally:
+        rep.stop_sweep()
+    assert rep._sweep_thread is None
+
+
+# ------------------------------------------------------------ HTTP 206/Range
+def test_http_range_roundtrip_206(tmp_path):
+    root = str(tmp_path)
+    local = LocalTransport(root)
+    ex = make_expert()
+    blob = encode_expert(ex, rep=PACKED)
+    local.publish(ex, rep=PACKED)
+    server, base = serve_local_http(root)
+    try:
+        tr = HTTPTransport(base, retry=FAST)
+        # exact interior slice
+        chunk = tr.get_range(ex.name, 100, 1000)
+        assert chunk == blob[100:1100]
+        # probe larger than the blob clamps at EOF (single-request fetch)
+        whole = tr.get_range(ex.name, 0, len(blob) + 100000)
+        assert whole == blob
+        assert tr.stats.bytes_wasted == 0    # 206s, no 200 fallback
+        # and a replicated fetch over two HTTP replicas of the same root
+        rep = ReplicatedTransport([HTTPTransport(base, retry=FAST),
+                                   HTTPTransport(base, retry=FAST)],
+                                  replication_factor=2, probe_bytes=4096,
+                                  retry=FAST)
+        out = rep.fetch_bytes(ex.name)
+        assert out == blob
+        assert rep.stats.bytes_wasted == 0
+    finally:
+        server.shutdown()
+
+
+# --------------------------------------------------------- satellite: ledger
+def test_simulated_timeout_partial_bytes_are_wasted():
+    ex = make_expert()
+    tr = SimulatedNetworkTransport(
+        bandwidth_bps=1e5, latency_s=0.0, seed=0,
+        retry=RetryPolicy(max_attempts=1, backoff_base_s=0.0,
+                          per_attempt_timeout_s=0.05))
+    tr.publish(ex, rep=GOLOMB)
+    with pytest.raises(Exception):
+        tr.fetch_bytes(ex.name)
+    # ~0.05s at 1e5 B/s arrived before the attempt hung
+    assert 0 < tr.stats.bytes_wasted <= 5500
+
+
+def test_simulated_drop_counts_wasted_bytes():
+    ex = make_expert()
+    tr = SimulatedNetworkTransport(loss=0.5, seed=3, retry=FAST)
+    tr.publish(ex, rep=GOLOMB)
+    blob = encode_expert(ex, rep=GOLOMB)
+    failures = 0
+    for _ in range(6):
+        try:
+            tr.fetch_bytes(ex.name)
+        except Exception:
+            failures += 1           # all attempts dropped
+    # every drop crossed the link and bought nothing: waste is an exact
+    # multiple of the blob, one per retry plus one per exhausted fetch
+    # (whose final drop triggers no further retry)
+    drops = tr.stats.bytes_wasted // len(blob)
+    assert drops >= 1
+    assert tr.stats.bytes_wasted == drops * len(blob)
+    assert drops == tr.stats.retries + failures
+
+
+def test_deadline_skips_link_sleep():
+    ex = make_expert()
+    crawl = SimulatedNetworkTransport(bandwidth_bps=1e3, latency_s=0.0,
+                                      seed=0)
+    crawl.publish(ex, rep=GOLOMB)
+    pol = RetryPolicy(max_attempts=3, backoff_base_s=0.0, deadline_s=0.05)
+    t0 = time.perf_counter()
+    with pytest.raises(DeadlineExceeded):
+        crawl.fetch_expert(ex.name, retry=pol)
+    # the blob needs ~20s of link time; without the deadline check the
+    # attempt would sleep through all of it
+    assert time.perf_counter() - t0 < 1.0
+
+
+# ------------------------------------------- satellite: straggler + registry
+def test_registry_replicas_knob_and_health_sections():
+    ex = make_expert()
+    reg = rapi.registry(replicas=[InMemoryTransport() for _ in range(3)],
+                        replication_factor=2)
+    assert isinstance(reg.store.transport, ReplicatedTransport)
+    assert reg.store.transport.replication_factor == 2
+    reg.publish(ex, rep=GOLOMB)
+    got = reg.get(ex.name)
+    assert_planes_equal(got.packed, ex.packed)
+    h = reg.health()
+    assert len(h["replicas"]["replicas"]) == 3
+    assert h["replicas"]["quarantined"] == 0
+
+    with pytest.raises(ValueError):
+        rapi.registry(transport=InMemoryTransport(),
+                      replicas=[InMemoryTransport()])
+    with pytest.raises(ValueError):
+        ExpertRegistry(replication_factor=2)   # needs replicas=
+
+
+def test_api_publish_accepts_replica_list():
+    ex = make_expert()
+    fleet_ = [InMemoryTransport() for _ in range(3)]
+    info = rapi.publish(ex, fleet_, rep=GOLOMB, replication_factor=2)
+    holders = [i for i, t in enumerate(fleet_) if ex.name in t._blobs]
+    assert sorted(holders) == sorted(info["replicas"])
+    # a consumer over the same fleet computes the same owners
+    rep = ReplicatedTransport(fleet_, replication_factor=2)
+    assert rep._owners(ex.name) == info["replicas"]
+    got = rep.fetch(ex.name)
+    assert_planes_equal(got.packed, ex.packed)
+
+
+def test_device_cache_straggler_recommendation_surfaces():
+    ex = [make_expert(f"s{i}", seed=i) for i in range(3)]
+    inner = InMemoryTransport()
+    # per-name ops 3..4 pay +0.5s (a replica warming up); promotion-
+    # latency health should flag the slow promotions it causes
+    chaos = ChaosTransport(inner, retry=FAST, replica_faults=[
+        ReplicaFault("slow_start", at=3, slow_s=0.5, warmup=2)])
+    reg = rapi.registry(transport=chaos)
+    for e in ex:
+        reg.publish(e, rep=PACKED)      # publish keeps a cold-local copy
+    cache = reg.device()
+    for e in ex:                        # cold-local promotions: fast
+        cache.fetch(e.name)
+    assert cache.stats.straggler_recommendation == "healthy"
+    # repeated re-promotions of one name advance its per-name op count
+    # into the slow window; drop it from every tier to force refetches
+    for _ in range(4):
+        cache._cache.pop(ex[0].name, None)
+        cache._sizes.pop(ex[0].name, None)
+        reg.store._evict_cold(ex[0].name)     # force a real refetch
+        cache.fetch(ex[0].name)
+    assert cache.stats.straggler_flags >= 1
+    assert cache.stats.straggler_recommendation in ("monitor",
+                                                    "exclude-host-and-reshard")
+    h = reg.health()
+    assert h["straggler"]["recommendation"] != "healthy"
+    assert h["straggler"]["flags"] >= 1
