@@ -521,6 +521,156 @@ def exp_decode_loop(smoke: bool = False):
         assert speedup >= 1.5, speedup
 
 
+def exp_serve_load(smoke: bool = False):
+    """Tentpole measurement: paged KV + SLO-aware scheduling under seeded
+    open-loop traffic (Poisson arrivals + bursts, Zipf expert popularity,
+    short/long prompt and output mix — :mod:`benchmarks.traffic`).
+
+    Three engine configurations serve the same workload:
+
+    * ``dense_fifo`` — left-padded KV slots + FIFO admission (the
+      historical engine, parity baseline);
+    * ``paged_fifo`` — block-table KV, same FIFO order;
+    * ``paged_affinity`` — block-table KV + priority/deadline scheduler
+      with expert-affinity wave packing (canonical stack tuples).
+
+    Gates (smoke included unless noted):
+
+    * **token parity** — all three produce identical per-request tokens,
+      greedy AND sampled (streams are keyed by (seed, uid, draw), so they
+      are invariant to KV layout, wave composition and admission timing);
+    * **affinity stack hits** — the affinity scheduler's stacked-plane
+      hit-rate beats FIFO's on the same Zipf traffic;
+    * **determinism** — ``generate()`` replays bit-identically and a
+      repeated paged_affinity run reproduces tokens and statuses;
+    * **latency/throughput** (full runs only) — paged_affinity p99 TTFT
+      <= dense_fifo and tokens/s >= dense_fifo at B >= 16.
+    """
+    from benchmarks import traffic
+    from repro import api as capi
+
+    if smoke:
+        n_experts, B, max_stack = 6, 6, 3
+        tcfg = traffic.TrafficConfig(
+            seed=11, n_requests=24, base_rate=60.0, burst_every_s=0.2,
+            burst_duration_s=0.05, burst_rate_x=4.0, n_experts=n_experts,
+            zipf_alpha=1.2, prompt_len_short=6, prompt_len_long=24,
+            long_frac=0.25, max_new_short=4, max_new_long=8,
+            long_out_frac=0.25, vocab=512)
+        cache_len = 48
+    else:
+        n_experts, B, max_stack = 8, 16, 4
+        tcfg = traffic.TrafficConfig(
+            seed=11, n_requests=96, base_rate=24.0, burst_every_s=2.0,
+            burst_duration_s=0.5, burst_rate_x=4.0, n_experts=n_experts,
+            zipf_alpha=1.1, prompt_len_short=6, prompt_len_long=40,
+            long_frac=0.25, max_new_short=8, max_new_long=16,
+            long_out_frac=0.25, vocab=512)
+        cache_len = 64
+    api, rt, cfg, base, experts = _serve_fixture(n_experts=n_experts)
+
+    CONFIGS = {
+        "dense_fifo": dict(kv_layout="dense", scheduler="fifo"),
+        "paged_fifo": dict(kv_layout="paged", scheduler="fifo"),
+        "paged_affinity": dict(kv_layout="paged", scheduler="affinity"),
+    }
+
+    def engine(name, **samp):
+        kw = dict(CONFIGS[name])
+        if kw["kv_layout"] == "paged":
+            kw["kv_block_size"] = 8
+        return capi.serve(api, rt, base, capi.registry(experts=experts),
+                          max_batch=B, cache_len=cache_len,
+                          max_stack=max_stack, **kw, **samp)
+
+    def workload(immediate=False):
+        reqs = traffic.generate(tcfg)
+        if immediate:
+            for r in reqs:
+                r.arrival_s = 0.0
+        return reqs
+
+    def toks(reqs):
+        return {r.uid: list(r.out_tokens) for r in reqs}
+
+    # -- phase 1: three-way token parity, greedy and sampled -------------
+    parity = {}
+    for samp in ({}, {"temperature": 0.8, "top_k": 5, "seed": 7}):
+        label = "sampled" if samp else "greedy"
+        outs = {}
+        for name in CONFIGS:
+            reqs = engine(name, **samp).run(workload(immediate=True))
+            outs[name] = toks(reqs)
+        ok = (outs["dense_fifo"] == outs["paged_fifo"]
+              == outs["paged_affinity"])
+        parity[label] = ok
+        print(f"[serve_load] {label} parity "
+              f"dense_fifo == paged_fifo == paged_affinity: {ok}")
+
+    # -- phase 2: timed open-loop replay (warm pass compiles first) ------
+    results = {}
+    for name in ("dense_fifo", "paged_affinity"):
+        eng = engine(name)
+        eng.run(workload(immediate=True))        # warm: compile everything
+        eng.swap_log.clear()
+        eng.wave_log.clear()
+        eng.cache.stats.stack_hits = 0
+        eng.cache.stats.stack_builds = 0
+        reqs = workload()
+        eng.run(reqs)
+        s = eng.swap_summary()
+        results[name] = {"load": traffic.summarize(reqs),
+                         "stack_hit_rate": s["stack_hit_rate"],
+                         "stack_hits": s.get("stack_hits", 0),
+                         "stack_builds": s.get("stack_builds", 0),
+                         "scheduler": s["scheduler"], "kv": s["kv"],
+                         "n_waves": s["n_waves"], "admitted": s["admitted"]}
+        ld = results[name]["load"]
+        print(f"[serve_load] {name:>15s}: ttft p50={ld['ttft_p50_s']:.3f}s "
+              f"p99={ld['ttft_p99_s']:.3f}s tok/s={ld['tokens_per_s']:.1f} "
+              f"stack_hit_rate={s['stack_hit_rate']:.2f} "
+              f"waves={s['n_waves']}")
+
+    # -- phase 3: determinism -------------------------------------------
+    g1, g2 = traffic.generate(tcfg), traffic.generate(tcfg)
+    gen_ok = all(
+        a.uid == b.uid and a.expert == b.expert
+        and a.arrival_s == b.arrival_s and a.priority == b.priority
+        and a.deadline_s == b.deadline_s
+        and a.max_new_tokens == b.max_new_tokens
+        and np.array_equal(np.asarray(a.prompt), np.asarray(b.prompt))
+        for a, b in zip(g1, g2)) and len(g1) == len(g2)
+    ra = engine("paged_affinity").run(workload())
+    rb = engine("paged_affinity").run(workload())
+    replay_ok = (toks(ra) == toks(rb)
+                 and [r.status for r in ra] == [r.status for r in rb])
+    print(f"[serve_load] generator determinism={gen_ok} "
+          f"replay determinism={replay_ok}")
+
+    rec = {"tag": "serve_load", "smoke": smoke, "n_experts": n_experts,
+           "max_batch": B, "max_stack": max_stack,
+           "traffic": dataclasses.asdict(tcfg),
+           "token_parity": parity, "generator_deterministic": gen_ok,
+           "replay_deterministic": replay_ok, "results": results}
+    save_raw("serve_load", [rec])
+    bench_update("BENCH_serve.json", "serve_load", rec)
+
+    assert parity["greedy"], "paged/scheduled engines diverged (greedy)"
+    assert parity["sampled"], "paged/scheduled engines diverged (sampled)"
+    assert gen_ok, "traffic generator is not deterministic"
+    assert replay_ok, "seeded replay is not deterministic"
+    hit_fifo = results["dense_fifo"]["stack_hit_rate"]
+    hit_aff = results["paged_affinity"]["stack_hit_rate"]
+    if smoke:
+        assert hit_aff >= hit_fifo, (hit_aff, hit_fifo)
+    else:
+        assert hit_aff > hit_fifo, (hit_aff, hit_fifo)
+        ld_d = results["dense_fifo"]["load"]
+        ld_a = results["paged_affinity"]["load"]
+        assert ld_a["ttft_p99_s"] <= ld_d["ttft_p99_s"], (ld_a, ld_d)
+        assert ld_a["tokens_per_s"] >= ld_d["tokens_per_s"], (ld_a, ld_d)
+
+
 def exp_remote_fetch(smoke: bool = False):
     """Tentpole measurement: the paper's communication-cost argument as a
     measured curve.
@@ -938,6 +1088,7 @@ EXPS = {
     "compress_swap": exp_compress_swap,
     "mixed_serve": exp_mixed_serve,
     "decode_loop": exp_decode_loop,
+    "serve_load": exp_serve_load,
     "remote_fetch": exp_remote_fetch,
     "chaos_serve": exp_chaos_serve,
     "chaos_cdn": exp_chaos_cdn,

@@ -1,0 +1,172 @@
+"""Seeded open-loop traffic generation for the serving engine.
+
+Production expert-serving traffic is not a batch of identical prompts:
+arrivals are bursty, expert popularity is heavy-tailed (a few hot
+adapters take most requests — the S-LoRA observation), and prompt/output
+lengths are bimodal.  This module synthesises such a workload as a
+deterministic function of a seed, so a load experiment can be replayed
+bit-identically (double-run determinism is a gate of ``perf_lab --exp
+serve_load``):
+
+* **arrivals** — an open-loop (arrival times independent of service
+  rate) inhomogeneous Poisson process: exponential gaps at ``base_rate``
+  req/s, multiplied by ``burst_rate_x`` inside periodic burst windows
+  (``burst_every_s``/``burst_duration_s``).
+* **expert popularity** — Zipf: expert k (1-indexed) drawn with
+  probability ∝ k^-alpha over ``n_experts`` experts.
+* **lengths** — a short/long prompt mix (``long_frac``) with independent
+  short/long output budgets.
+* **SLO metadata** — priority classes drawn from ``priorities`` weights;
+  each class maps to a deadline budget (``deadline_by_priority``,
+  seconds after arrival) consumed by the deadline-aware schedulers.
+
+``generate()`` returns engine :class:`~repro.serve.engine.Request`
+objects with ``arrival_s`` set; the engine's scheduler holds each
+request invisible until its arrival time passes, which is what makes the
+replay open-loop rather than closed-loop.  ``summarize()`` reduces a
+served request list to the latency/throughput record keyed into
+``BENCH_serve.json`` (TTFT p50/p95/p99, tokens/s, per-priority waits,
+deadline violations).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import FAILED, Request
+
+__all__ = ["TrafficConfig", "zipf_weights", "in_burst", "generate",
+           "summarize"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    """Everything the arrival process depends on.  Two equal configs
+    generate bit-identical request timelines."""
+
+    seed: int = 0
+    n_requests: int = 64
+    # -- arrivals (open-loop Poisson + periodic bursts) --
+    base_rate: float = 8.0          # req/s outside bursts
+    burst_every_s: float = 4.0      # burst window period
+    burst_duration_s: float = 1.0   # burst window length
+    burst_rate_x: float = 4.0       # rate multiplier inside a window
+    # -- expert popularity (Zipf over expert0..expert{n-1}) --
+    n_experts: int = 8
+    zipf_alpha: float = 1.1
+    expert_prefix: str = "expert"
+    # -- prompt/output length mix --
+    prompt_len_short: int = 6
+    prompt_len_long: int = 40
+    long_frac: float = 0.25
+    max_new_short: int = 8
+    max_new_long: int = 16
+    long_out_frac: float = 0.25
+    vocab: int = 512
+    # -- SLO metadata --
+    priorities: tuple = ((0, 0.2), (1, 0.8))   # (class, weight)
+    deadline_by_priority: tuple = ((0, 2.0), (1, 10.0))  # class -> budget s
+
+
+def zipf_weights(n: int, alpha: float) -> np.ndarray:
+    """P(expert k) ∝ (k+1)^-alpha, normalised.  ``alpha=0`` is uniform."""
+    w = np.arange(1, n + 1, dtype=np.float64) ** (-alpha)
+    return w / w.sum()
+
+
+def in_burst(t: float, cfg: TrafficConfig) -> bool:
+    """Whether absolute time ``t`` lands inside a periodic burst window."""
+    if cfg.burst_every_s <= 0 or cfg.burst_duration_s <= 0:
+        return False
+    return (t % cfg.burst_every_s) < cfg.burst_duration_s
+
+
+def _rate(t: float, cfg: TrafficConfig) -> float:
+    return cfg.base_rate * (cfg.burst_rate_x if in_burst(t, cfg) else 1.0)
+
+
+def generate(cfg: TrafficConfig) -> list:
+    """Materialise the seeded timeline as engine requests.
+
+    Arrival gaps are sampled from the exponential at the rate *in effect
+    at the current time* (a standard thinning-free approximation that
+    keeps the process a pure function of the seed); expert, lengths,
+    priority and prompt tokens come from the same generator stream, so
+    the whole workload — ordering, content and metadata — replays
+    bit-identically for equal configs.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    pw = zipf_weights(cfg.n_experts, cfg.zipf_alpha)
+    prio_cls = np.asarray([p for p, _ in cfg.priorities], np.int64)
+    prio_w = np.asarray([w for _, w in cfg.priorities], np.float64)
+    prio_w = prio_w / prio_w.sum()
+    budget = dict(cfg.deadline_by_priority)
+
+    out = []
+    t = 0.0
+    for uid in range(cfg.n_requests):
+        t += float(rng.exponential(1.0 / max(_rate(t, cfg), 1e-9)))
+        expert = int(rng.choice(cfg.n_experts, p=pw))
+        lp = (cfg.prompt_len_long if rng.random() < cfg.long_frac
+              else cfg.prompt_len_short)
+        mx = (cfg.max_new_long if rng.random() < cfg.long_out_frac
+              else cfg.max_new_short)
+        prio = int(rng.choice(prio_cls, p=prio_w))
+        prompt = rng.integers(2, cfg.vocab, size=lp)
+        out.append(Request(
+            uid=uid,
+            expert=f"{cfg.expert_prefix}{expert}",
+            prompt=jnp.asarray(prompt, jnp.int32),
+            max_new_tokens=int(mx),
+            priority=prio,
+            deadline_s=t + budget[prio] if prio in budget else None,
+            arrival_s=t,
+        ))
+    return out
+
+
+def _pct(xs: list, q: float) -> Optional[float]:
+    return float(np.percentile(np.asarray(xs), q)) if xs else None
+
+
+def summarize(requests: list) -> dict:
+    """Latency/throughput record for a served request list.
+
+    TTFT is ``t_first_s - arrival_s`` (time to the first *selected*
+    token); tokens/s counts generated tokens over the span from the first
+    arrival to the last completion.  Requests that failed (or never got a
+    first token) are counted but excluded from the percentiles.
+    """
+    served = [r for r in requests
+              if r.status != FAILED and r.t_first_s is not None]
+    ttft = [r.t_first_s - r.arrival_s for r in served]
+    n_tokens = sum(len(r.out_tokens) for r in served)
+    done_t = [r.t_done_s for r in served if r.t_done_s is not None]
+    t0 = min((r.arrival_s for r in served), default=0.0)
+    span = (max(done_t) - t0) if done_t else 0.0
+    by_prio: dict = {}
+    for r in served:
+        b = by_prio.setdefault(r.priority, {"n": 0, "ttft": [], "miss": 0})
+        b["n"] += 1
+        b["ttft"].append(r.t_first_s - r.arrival_s)
+        if (r.deadline_s is not None and r.t_done_s is not None
+                and r.t_done_s > r.deadline_s):
+            b["miss"] += 1
+    return {
+        "n_served": len(served),
+        "n_failed": sum(1 for r in requests if r.status == FAILED),
+        "ttft_p50_s": _pct(ttft, 50),
+        "ttft_p95_s": _pct(ttft, 95),
+        "ttft_p99_s": _pct(ttft, 99),
+        "tokens": n_tokens,
+        "tokens_per_s": n_tokens / span if span > 0 else None,
+        "span_s": span,
+        "per_priority": {
+            str(p): {"n": b["n"], "ttft_p95_s": _pct(b["ttft"], 95),
+                     "deadline_miss": b["miss"]}
+            for p, b in sorted(by_prio.items())},
+    }

@@ -162,7 +162,18 @@ def serve(model, rt, base_params: PyTree, reg, cfg=None,
     can be passed flat — ``temperature`` (0 = greedy), ``top_k`` (0 = full
     vocabulary) and ``seed`` build the engine's
     :class:`~repro.serve.decode_loop.SamplingConfig`; seeded sampling is
-    reproducible across chunk sizes and mid-wave admissions.
+    reproducible across chunk sizes, eager vs compiled loops, and mid-wave
+    admissions.
+
+    ``scheduler=`` picks the admission policy (``"fifo"`` — bit-identical
+    to the historical queue, ``"priority"`` — priority classes +
+    deadline EDF, ``"affinity"`` — priority + expert-affinity wave
+    packing for stacked-plane hits); requests carry ``priority``,
+    ``deadline_s`` and ``arrival_s`` (open-loop replay) fields.
+    ``kv_layout="paged"`` swaps the dense left-padded KV slots for
+    block-table pools (``kv_block_size=`` positions per block,
+    ``kv_blocks=`` pool size) with free-list admission control —
+    see :mod:`repro.serve.paged_kv` and :mod:`repro.serve.scheduler`.
 
     ``degrade="request"`` (default) turns an unavailable expert
     (:class:`~repro.serve.ExpertUnavailable` at admission — dead replica,

@@ -287,6 +287,91 @@ def finalize_partial(o: jax.Array, m: jax.Array, l: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Paged KV (block-table pools; see repro.serve.paged_kv)
+# ---------------------------------------------------------------------------
+
+
+def paged_cache_write(k_pool: jax.Array, v_pool: jax.Array,
+                      tables: jax.Array, lens: jax.Array, active: jax.Array,
+                      k_new: jax.Array, v_new: jax.Array):
+    """Write one token per row into each row's current block.
+
+    ``k_pool``/``v_pool``: [NB, BS, Hkv, D]; ``tables``: [B, MAXB] block
+    lists (-1 unallocated); ``lens``: [B] write positions; ``active``:
+    [B] rows still generating; ``k_new``/``v_new``: [B, 1, Hkv, D].
+
+    Finished rows keep stepping with the batch (host-free inner loop), so
+    their writes are redirected to the reserved trash block — which is
+    never listed in any live table, hence never read.  Duplicate trash
+    indices across dead rows are harmless for the same reason.
+    """
+    B = tables.shape[0]
+    maxb = tables.shape[1]
+    BS = k_pool.shape[1]
+    bidx = jnp.clip(lens // BS, 0, maxb - 1)
+    blk = jnp.take_along_axis(tables, bidx[:, None], axis=1)[:, 0]
+    blk = jnp.where(active & (blk >= 0), blk, 0)
+    slot = jnp.mod(lens, BS)
+    k_pool = k_pool.at[blk, slot].set(k_new[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[blk, slot].set(v_new[:, 0].astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
+def paged_attention_partial(
+    q: jax.Array,        # [B, 1, Hq, D] (rope already applied)
+    k_pool: jax.Array,   # [NB, BS, Hkv, D]
+    v_pool: jax.Array,   # [NB, BS, Hkv, D]
+    tables: jax.Array,   # [B, MAXB] block lists, -1 unallocated
+    lens: jax.Array,     # [B] current write position (== this token's pos)
+    start: jax.Array,    # [B] first real (non-pad) position
+    cfg: AttnCfg,
+):
+    """One-token attention over gathered block-table KV.
+
+    ``pool[tables[b]]`` materialises row ``b``'s positions in order, so
+    position ``s`` of the gathered sequence IS absolute position ``s`` —
+    the validity mask is ``start[b] <= s <= lens[b]`` plus the window and
+    an allocated-block mask.  The score/softmax math mirrors
+    :func:`decode_attention_partial` exactly (same einsums, same masked
+    ``NEG_INF`` max/exp/sum order), which is what makes paged-vs-dense
+    token parity hold bit-for-bit at the argmax level.
+
+    Returns flash partials (o, m, l) like :func:`decode_attention_partial`.
+    """
+    B, _, Hq, D = q.shape
+    BS, Hkv = k_pool.shape[1], k_pool.shape[2]
+    maxb = tables.shape[1]
+    S = maxb * BS
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+
+    safe = jnp.where(tables < 0, 0, tables)
+    kf = k_pool[safe].reshape(B, S, Hkv, D).astype(jnp.float32)
+    vf = v_pool[safe].reshape(B, S, Hkv, D).astype(jnp.float32)
+
+    qf = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, kf, optimize=True) * scale
+    s = softcap(s, cfg.attn_softcap)
+
+    spos = jnp.arange(S)
+    valid = ((spos[None, :] <= lens[:, None])
+             & (spos[None, :] >= start.astype(jnp.int32)[:, None])
+             & jnp.repeat(tables >= 0, BS, axis=1))
+    if cfg.window is not None:
+        valid &= spos[None, :] > (lens[:, None] - cfg.window)
+    vmask = valid[:, None, None, :]
+    s = jnp.where(vmask, s, NEG_INF)
+
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(vmask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, vf, optimize=True)
+    return (o.reshape(B, Hq, D), m.reshape(B, Hq), l.reshape(B, Hq))
+
+
+# ---------------------------------------------------------------------------
 # Projection helpers (shared by every attention block)
 # ---------------------------------------------------------------------------
 

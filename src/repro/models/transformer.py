@@ -28,7 +28,8 @@ from repro.models import rwkv as rwkv_mod
 from repro.models.attention import (KVCache, cache_write,
                                     decode_attention_partial,
                                     finalize_partial, flash_attention,
-                                    out_project, qkv_project)
+                                    out_project, paged_attention_partial,
+                                    paged_cache_write, qkv_project)
 from repro.models.common import (dense_init, dtype_of, embed_init, rms_norm,
                                  softcap, split_keys)
 from repro.models.delta import (add_delta, eff_param, embed_delta_rows,
@@ -489,17 +490,35 @@ def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
 
 
 def _decode_block(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime, st,
-                  cur, cross_kv=None, dp=None, eid=None, start=None):
-    """One-token step through one block.  Returns (x, new_state)."""
+                  cur, cross_kv=None, dp=None, eid=None, start=None,
+                  paged=None):
+    """One-token step through one block.  Returns (x, new_state).
+
+    ``paged`` (optional ``(tables, lens, active)``) switches the attn
+    branch to the block-table KV pools of :mod:`repro.serve.paged_kv`:
+    rope positions become per-row (``lens``), the write lands in each
+    row's current block, and the attend is a gather over the row's block
+    list.  Dense ring-buffer behaviour is untouched when absent."""
     decode_attn = rt.decode_attn or default_decode_cache_attn
     dp = dp or {}
     if b.kind == "attn":
         h = rms_norm(x, eff_param(bp["pre_norm"], dp.get("pre_norm"), eid),
                      cfg.rms_eps, _gemma(cfg))
-        positions = cur[None, None].astype(jnp.int32)  # [1,1] broadcasts to [B,T=1]
+        if paged is not None:
+            tables, lens, active = paged
+            positions = lens[:, None].astype(jnp.int32)      # [B, 1] per row
+        else:
+            positions = cur[None, None].astype(jnp.int32)  # [1,1] broadcasts to [B,T=1]
         q, k, v = qkv_project(h, bp["attn"], b.attn, positions, cfg.rms_eps,
                               dp=dp.get("attn"), eid=eid)
-        if start is None:
+        if paged is not None:
+            ck, cv = paged_cache_write(st["k"], st["v"], tables, lens,
+                                       active, k, v)
+            o, m, l = paged_attention_partial(q, ck, cv, tables, lens,
+                                              start, b.attn)
+            o = finalize_partial(o, m, l)[:, None].astype(q.dtype)
+            pos = None
+        elif start is None:
             o, ck, cv, pos = decode_attn(q, k, v, st["k"], st["v"],
                                          st["pos"], cur, b.attn)
         else:
@@ -522,6 +541,8 @@ def _decode_block(x, bp, b: BlockCfg, cfg: ModelConfig, rt: Runtime, st,
             x = x + out_project(finalize_partial(o2, m2, l2)[:, None]
                                 .astype(x.dtype), bp["cross"])
         x, _ = _apply_ffn(x, bp, b, cfg, rt, dp=dp, eid=eid)
+        if paged is not None:
+            return x, {"k": ck, "v": cv}   # tables/lens live at cache level
         return x, {"k": ck, "v": cv, "pos": pos}
     if b.kind == "mamba":
         h = rms_norm(x, bp["pre_norm"], cfg.rms_eps)
@@ -564,9 +585,18 @@ def decode_step(params, token, cache, cfg: ModelConfig, rt: Runtime,
     if cfg.embed_scale:
         x = (x.astype(jnp.float32) * np.sqrt(cfg.d_model)).astype(x.dtype)
     x = rt.shard(x, ("batch", "seq", "embed_act"))
-    cur = jnp.asarray(cache["cur"], jnp.int32)   # traced scalar position
+    paged = "tables" in cache        # block-table KV (repro.serve.paged_kv)
+    if paged:
+        cur = None
+        lens = jnp.asarray(cache["lens"], jnp.int32)     # [B] per-row pos
+        active = jnp.asarray(cache["active"], bool)
+        start = jnp.asarray(cache["start"], jnp.int32)
+        pg = (cache["tables"], lens, active)
+    else:
+        cur = jnp.asarray(cache["cur"], jnp.int32)   # traced scalar position
+        start = cache.get("start")      # [B] first real position per row
+        pg = None
     cross = cache.get("cross")
-    start = cache.get("start")      # [B] first real position per row
     delta_blocks = delta.get("blocks") if delta is not None else None
 
     def body(carry, xs):
@@ -580,7 +610,7 @@ def decode_step(params, token, cache, cfg: ModelConfig, rt: Runtime,
                   if unit_delta is not None else None)
             h, ns = _decode_block(h, unit_params[f"block{i}"], b, cfg, rt,
                                   unit_cache[f"block{i}"], cur, cross_kv=ck,
-                                  dp=dp, eid=eid, start=start)
+                                  dp=dp, eid=eid, start=start, paged=pg)
             new_states[f"block{i}"] = ns
         return h, new_states
 
@@ -590,7 +620,12 @@ def decode_step(params, token, cache, cfg: ModelConfig, rt: Runtime,
     logits = logits_of(params, x, cfg, rt, delta=delta, eid=eid)
     new_cache = dict(cache)
     new_cache["layers"] = new_layers
-    new_cache["cur"] = cur + 1
+    if paged:
+        # only live rows advance; finished rows' lens freeze so their last
+        # real position stays addressable if the row is ever inspected
+        new_cache["lens"] = lens + active.astype(jnp.int32)
+    else:
+        new_cache["cur"] = cur + 1
     return logits, new_cache
 
 

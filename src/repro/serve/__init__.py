@@ -4,8 +4,15 @@ from repro.serve.engine import (DONE, FAILED, PENDING, EngineConfig, Request,
 from repro.serve.expert_cache import (DeviceCache, ExpertRegistry, ExpertStore,
                                       ExpertUnavailable, RemoteExpertStore,
                                       SwapStats, uncompressed_baseline_bytes)
+from repro.serve.paged_kv import BlockAllocator, blocks_for, init_paged_cache
+from repro.serve.scheduler import (SCHEDULERS, AffinityScheduler,
+                                   FIFOScheduler, PriorityScheduler,
+                                   make_scheduler)
 
 __all__ = ["EngineConfig", "Request", "ServeEngine", "DeviceCache",
            "ExpertRegistry", "ExpertStore", "ExpertUnavailable",
            "RemoteExpertStore", "SwapStats", "SamplingConfig", "PAD_TOKEN",
-           "PENDING", "DONE", "FAILED", "uncompressed_baseline_bytes"]
+           "PENDING", "DONE", "FAILED", "uncompressed_baseline_bytes",
+           "BlockAllocator", "blocks_for", "init_paged_cache",
+           "FIFOScheduler", "PriorityScheduler", "AffinityScheduler",
+           "SCHEDULERS", "make_scheduler"]

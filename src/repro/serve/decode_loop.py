@@ -130,6 +130,12 @@ def make_decode_chunk(api, rt, chunk: int, sampling: SamplingConfig):
             active = remaining > 0
             emit = jnp.where(active, tok[:, 0], PAD_TOKEN)
             remaining = jnp.where(active, remaining - 1, remaining)
+            if "active" in cache:
+                # paged KV: rows whose budget just ran dry flip inactive —
+                # decode_step then redirects their writes to the trash
+                # block and freezes their lens (structure-stable update)
+                cache = dict(cache)
+                cache["active"] = remaining > 0
 
             def step(op):
                 tok, cache, gen = op

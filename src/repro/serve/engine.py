@@ -37,7 +37,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from collections import defaultdict, deque
+from collections import defaultdict
 from typing import Any, Optional
 
 import jax
@@ -47,7 +47,8 @@ import numpy as np
 from repro.models.delta import build_overlay, plan_overlay
 from repro.models.model import ModelApi
 from repro.models.transformer import Runtime
-from repro.serve import decode_loop
+from repro.serve import decode_loop, paged_kv
+from repro.serve import scheduler as scheduler_mod
 from repro.serve.decode_loop import SamplingConfig
 from repro.serve.expert_cache import (BASE, DeviceCache, ExpertRegistry,
                                       ExpertStore, ExpertUnavailable,
@@ -72,6 +73,13 @@ class Request:
     out_tokens: list = dataclasses.field(default_factory=list)
     status: str = PENDING      # PENDING -> DONE | FAILED
     error: Optional[str] = None   # detail when status == FAILED
+    # --- scheduling / SLO metadata (engine clock = seconds since run()) ---
+    priority: int = 1          # lower value = more urgent class
+    deadline_s: Optional[float] = None   # absolute SLO deadline (EDF tiebreak)
+    arrival_s: float = 0.0     # open-loop arrival offset; 0 = already queued
+    t_admit_s: Optional[float] = None    # first placed into a wave
+    t_first_s: Optional[float] = None    # first token selected (TTFT anchor)
+    t_done_s: Optional[float] = None     # generation budget exhausted
 
 
 @dataclasses.dataclass
@@ -85,7 +93,7 @@ class EngineConfig:
     max_stack: int = 8            # max distinct experts stacked per wave
     continuous: bool = True       # refill finished slots mid-wave
     # decode steps per compiled launch (scan-compiled wave loop with one
-    # host sync per chunk); 0 = the eager per-token loop (greedy only)
+    # host sync per chunk); 0 = the eager per-token loop
     decode_chunk: int = 16
     sampling: SamplingConfig = dataclasses.field(
         default_factory=SamplingConfig)
@@ -93,6 +101,19 @@ class EngineConfig:
     # the affected requests (terminal FAILED status, wave proceeds);
     # "raise" propagates — the pre-fault-tolerance behaviour
     degrade: str = "request"
+    # admission policy for the mixed path: "fifo" (bit-identical to the
+    # historical deque), "priority" (classes + deadline EDF), "affinity"
+    # (priority + expert-affinity wave packing) — repro.serve.scheduler
+    scheduler: str = "fifo"
+    # KV memory layout: "dense" = per-wave left-padded slots + ring buffer
+    # (the parity baseline); "paged" = block-table pools with a free-list
+    # allocator (repro.serve.paged_kv) — admission allocates blocks
+    # instead of splicing KV, so any prompt length fits any wave position
+    kv_layout: str = "dense"
+    kv_block_size: int = 16       # token positions per KV block (paged)
+    # total pool blocks (incl. the reserved trash block); None sizes the
+    # pool so a full batch at cache_len never blocks on allocation
+    kv_blocks: Optional[int] = None
 
 
 class ServeEngine:
@@ -121,9 +142,37 @@ class ServeEngine:
         if ecfg.degrade not in ("request", "raise"):
             raise ValueError('degrade must be "request" or "raise", '
                              f"got {ecfg.degrade!r}")
-        if not ecfg.sampling.greedy and not ecfg.decode_chunk:
-            raise ValueError("temperature/top-k sampling needs the compiled "
-                             "decode loop; set decode_chunk > 0")
+        if ecfg.scheduler not in scheduler_mod.SCHEDULERS:
+            raise ValueError(f"unknown scheduler {ecfg.scheduler!r}; "
+                             f"expected one of "
+                             f"{sorted(scheduler_mod.SCHEDULERS)}")
+        if ecfg.kv_layout not in ("dense", "paged"):
+            raise ValueError('kv_layout must be "dense" or "paged", '
+                             f"got {ecfg.kv_layout!r}")
+        if ecfg.kv_layout == "paged":
+            if not ecfg.decode_chunk:
+                raise ValueError("kv_layout='paged' needs the compiled "
+                                 "decode loop; set decode_chunk > 0")
+            if not self._row_mask_ok():
+                raise ValueError("kv_layout='paged' needs a pure-attention "
+                                 "decoder-only pattern (recurrent blocks "
+                                 "and frontends keep state outside KV)")
+            if ecfg.kv_block_size < 1:
+                raise ValueError("kv_block_size must be >= 1")
+            for b in api.cfg.pattern:
+                if b.attn.window is not None and b.attn.window < ecfg.cache_len:
+                    # a window < cache_len shrinks the dense per-layer ring;
+                    # paged prefill needs the full position range resident
+                    raise ValueError(
+                        "kv_layout='paged' needs attention windows >= "
+                        f"cache_len (got window={b.attn.window}, "
+                        f"cache_len={ecfg.cache_len})")
+        self._bs = ecfg.kv_block_size
+        self._max_blocks = -(-ecfg.cache_len // max(self._bs, 1))
+        self._kv_blocks = (ecfg.kv_blocks if ecfg.kv_blocks is not None
+                           else ecfg.max_batch * self._max_blocks + 1)
+        if ecfg.kv_layout == "paged" and self._kv_blocks < 2:
+            raise ValueError("kv_blocks must be >= 2 (block 0 is reserved)")
         self._chunk_fn = (decode_loop.make_decode_chunk(
             api, rt, ecfg.decode_chunk, ecfg.sampling)
             if ecfg.decode_chunk else None)
@@ -131,6 +180,11 @@ class ServeEngine:
         self.swap_log: list = []
         self.wave_log: list = []
         self.failed_log: list[dict] = []
+        self._sched = None                  # last run's scheduler instance
+        self._t0 = time.perf_counter()      # run() resets; engine clock zero
+        self._adm_wait: dict[int, list] = defaultdict(list)
+        self._kv_peak = 0                   # peak pool blocks in use
+        self._kv_in_use = 0
 
     # ---------------- expert management ----------------
 
@@ -169,6 +223,10 @@ class ServeEngine:
             # an eviction of any member drops the underlying stack; the
             # shaped overlay must not outlive it (HBM accounting + staleness)
             if self.cache.has_stack(experts):
+                # overlay reuse rides the resident stack — count it as a
+                # stack hit so stack_hit_rate reflects plane reuse even
+                # when the shaped overlay short-circuits cache.stacked()
+                self.cache.stats.stack_hits += 1
                 return self._overlays[experts]
             del self._overlays[experts]
         stacks = self.cache.stacked(experts)
@@ -199,6 +257,7 @@ class ServeEngine:
 
     def run(self, requests: list[Request],
             scheduling: Optional[str] = None) -> list[Request]:
+        self._t0 = time.perf_counter()     # engine clock zero for arrivals
         mode = scheduling or self.cfg.scheduling
         if mode == "grouped":
             self._run_grouped(requests)
@@ -207,9 +266,32 @@ class ServeEngine:
         for r in requests:
             if r.status == PENDING:
                 r.status = DONE
+        self._export_gauges()
         return requests
 
-    def _prefetch_upcoming(self, queue, extra=()) -> None:
+    # -- engine clock / SLO bookkeeping --
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def _mark_admitted(self, reqs: list[Request]) -> None:
+        now = self._now()
+        for r in reqs:
+            if r.t_admit_s is None:
+                r.t_admit_s = now
+                self._adm_wait[r.priority].append(now - r.arrival_s)
+
+    def _mark_first(self, reqs: list[Request]) -> None:
+        now = self._now()
+        for r in reqs:
+            if r.t_first_s is None and r.max_new_tokens > 0:
+                r.t_first_s = now
+
+    def _mark_done(self, r: Request) -> None:
+        if r.t_done_s is None and len(r.out_tokens) >= r.max_new_tokens:
+            r.t_done_s = self._now()
+
+    def _prefetch_upcoming(self, upcoming, extra=()) -> None:
         """Admission-time prefetch: stage promotions for every distinct
         expert named by queued-but-nonresident requests (bounded
         lookahead), plus ``extra`` (the wave about to be served, so its E
@@ -218,7 +300,7 @@ class ServeEngine:
         could have overlapped the previous wave's decode steps."""
         names = list(dict.fromkeys(extra))
         seen = set(names)
-        for r in itertools.islice(queue, 0, 4 * self.cfg.max_batch):
+        for r in itertools.islice(upcoming, 0, 4 * self.cfg.max_batch):
             if r.expert not in seen:
                 seen.add(r.expert)
                 names.append(r.expert)
@@ -247,24 +329,56 @@ class ServeEngine:
                 self._serve_batch(params, reqs[i:i + self.cfg.max_batch])
         return requests
 
+    def _validate_paged(self, requests: list[Request]) -> None:
+        """Push-time feasibility: a request that can NEVER be placed (needs
+        more blocks than the whole pool, or more positions than
+        ``cache_len``) fails terminally instead of deadlocking the queue."""
+        for r in requests:
+            lp, need = paged_kv.blocks_for(int(r.prompt.shape[0]),
+                                           r.max_new_tokens, self._bs)
+            if (lp + r.max_new_tokens > self._max_blocks * self._bs
+                    or need > min(self._max_blocks, self._kv_blocks - 1)):
+                self._fail([r], ValueError(
+                    f"request {r.uid} needs {need} KV blocks "
+                    f"({lp}+{r.max_new_tokens} positions); pool holds "
+                    f"{self._kv_blocks - 1} usable blocks of {self._bs} "
+                    f"with {self._max_blocks} per row"))
+
     def _run_mixed(self, requests: list[Request]) -> list[Request]:
-        """Continuous mixed-expert batching (zero-merge hot path)."""
+        """Continuous mixed-expert batching (zero-merge hot path).
+
+        Admission order is delegated to the configured scheduler
+        (``scheduler="fifo"`` replicates the historical deque
+        bit-identically); requests with a future ``arrival_s`` are held
+        back until the engine clock reaches them, which is what lets
+        :mod:`benchmarks.traffic` replay open-loop timelines."""
         if self._plan is None:
             # family not coverable at all: hand the WHOLE list to the
             # grouped scheduler so it merges once per expert, not per wave
             return self._run_grouped(requests)
-        queue = deque(requests)
-        while queue:
-            wave, experts = [], []
-            while queue and len(wave) < self.cfg.max_batch:
-                r = queue[0]
-                if (r.expert not in experts
-                        and len(experts) >= self.cfg.max_stack):
-                    break                      # over-capacity: next wave
-                if r.expert not in experts:
-                    experts.append(r.expert)
-                wave.append(queue.popleft())
-            self._prefetch_upcoming(queue, extra=experts)
+        if self.cfg.kv_layout == "paged":
+            self._validate_paged(requests)
+        sched = scheduler_mod.make_scheduler(self.cfg.scheduler)
+        self._sched = sched
+        for r in requests:
+            if r.status == PENDING:
+                sched.push(r)
+        while sched.pending():
+            sched.release(self._now())
+            if not sched.ready_count():
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break
+                # open-loop idle: sleep toward the next arrival (bounded,
+                # so a clock hiccup never wedges the loop)
+                time.sleep(min(max(nxt - self._now(), 0.0), 0.05))
+                continue
+            wave, experts = sched.take_wave(self.cfg.max_batch,
+                                            self.cfg.max_stack)
+            if not wave:
+                continue
+            self._prefetch_upcoming(sched.peek(4 * self.cfg.max_batch),
+                                    extra=experts)
             overlay = None
             while wave:
                 try:
@@ -285,7 +399,7 @@ class ServeEngine:
                 # family/leaf not coverable -> merge-on-swap fallback
                 self._run_grouped(wave)
                 continue
-            self._serve_wave(wave, experts, overlay, queue)
+            self._serve_wave(wave, experts, overlay, sched)
         return requests
 
     def _pad_prompts(self, reqs: list[Request]) -> tuple:
@@ -315,70 +429,133 @@ class ServeEngine:
                 and all(b.kind == "attn" for b in self.api.cfg.pattern))
 
     def _serve_wave(self, wave: list[Request], experts: list[str],
-                    overlay: dict, queue: deque) -> None:
+                    overlay: dict, sched) -> None:
+        if self.cfg.kv_layout == "paged":
+            return self._serve_wave_paged(wave, experts, overlay, sched)
         if self.cfg.decode_chunk:
-            return self._serve_wave_chunked(wave, experts, overlay, queue)
-        return self._serve_wave_eager(wave, experts, overlay, queue)
+            return self._serve_wave_chunked(wave, experts, overlay, sched)
+        return self._serve_wave_eager(wave, experts, overlay, sched)
+
+    def _admission_block_reason(self, nxt: Request, cur: int, slot: dict,
+                                alloc) -> Optional[str]:
+        """Why ``nxt`` cannot be placed into a finished slot right now
+        (None = placeable).  Dense slots are hostage to the wave position
+        (no left-pad down, no ring wrap); paged slots only need free
+        blocks."""
+        if (nxt.expert not in slot
+                and len(slot) >= self.cfg.max_stack):
+            return "stack"
+        if alloc is None:
+            if int(nxt.prompt.shape[0]) > cur:
+                return "position"     # cannot left-pad down
+            if cur + nxt.max_new_tokens > self.cfg.cache_len:
+                return "wrap"         # would wrap the KV ring
+        else:
+            _, need = paged_kv.blocks_for(int(nxt.prompt.shape[0]),
+                                          nxt.max_new_tokens, self._bs)
+            if need > alloc.available:
+                return "kv_blocks"
+        return None
 
     def _try_admissions(self, rows, done, cur, experts, slot, overlay,
-                        eid, tok, keys, cache, queue):
-        """Refill finished slots in place from the queue head (host-side
-        continuous-admission logic, shared by the eager and chunked
-        drivers).  ``cur`` is the host-mirrored wave position — no device
-        round-trip per admission round.  Returns the updated device state
-        plus the list of slots refilled this round."""
+                        eid, tok, keys, cache, sched,
+                        alloc=None, row_blocks=None):
+        """Refill finished slots in place from the scheduler (host-side
+        continuous-admission logic, shared by the eager, chunked and
+        paged drivers).  ``cur`` is the host-mirrored wave position on the
+        dense path (unused when ``alloc`` is given — paged rows carry
+        their own positions).  Returns the updated device state plus the
+        list of slots refilled this round.
+
+        Blocked-head semantics are scheduler-defined: ``strict_fifo``
+        preserves the historical head-of-line block (an unplaceable head
+        stops ALL refills — the bit-identical baseline), while the
+        priority/affinity schedulers scan past a blocked candidate, so a
+        head whose KV blocks are exhausted defers only itself instead of
+        starving placeable requests behind it."""
+        sched.release(self._now())
         refilled = []
-        blocked = False               # head-of-line block: stop all slots
+        if alloc is not None:
+            # reclaim every finished row's blocks up front so this round's
+            # candidates see the whole reclaimable pool
+            for j in done:
+                if j in row_blocks:
+                    alloc.free(row_blocks.pop(j))
+            self._kv_in_use = alloc.in_use
+        blocked = False               # strict-FIFO head-of-line block
         for j in done:
             if blocked:
                 break
-            while queue:
-                nxt = queue[0]
-                if (nxt.expert not in slot
-                        and len(slot) >= self.cfg.max_stack):
-                    blocked = True
+            admitted = rescan = True
+            while rescan and not blocked:
+                admitted = False
+                rescan = False
+                for nxt in sched.candidates(slot):
+                    reason = self._admission_block_reason(nxt, cur, slot,
+                                                          alloc)
+                    if reason is not None:
+                        if sched.strict_fifo:
+                            blocked = True
+                            break
+                        sched.note_deferred(reason)
+                        continue      # try the next placeable candidate
+                    if nxt.expert not in slot:
+                        try:
+                            grown = self._overlay_for(
+                                tuple(experts + [nxt.expert]))
+                        except ExpertUnavailable as e:
+                            # fail ONLY this request and rescan — a dead
+                            # expert must not block the admission queue
+                            sched.remove(nxt)
+                            self._fail([nxt], e)
+                            rescan = True
+                            break
+                        if grown is None:
+                            if sched.strict_fifo:
+                                blocked = True    # newcomer not coverable
+                                break
+                            sched.note_deferred("overlay")
+                            continue
+                        experts.append(nxt.expert)
+                        slot[nxt.expert] = len(experts) - 1
+                        overlay = grown
+                    else:
+                        # the row is served entirely from the wave's
+                        # resident stacked planes — the affinity lever
+                        self.cache.stats.stack_hits += 1
+                    sched.remove(nxt)
+                    rows[j] = nxt
+                    eid = eid.at[j].set(slot[nxt.expert])
+                    key_j = decode_loop.row_keys(self.cfg.sampling.seed,
+                                                 [nxt.uid])
+                    keys = keys.at[j].set(key_j[0])
+                    if alloc is not None:
+                        tok, cache = self._admit_row_paged(
+                            nxt, j, cache, tok, overlay, eid, key_j,
+                            alloc, row_blocks)
+                    else:
+                        tok, cache = self._admit_row(nxt, j, cur, cache,
+                                                     tok, overlay, eid,
+                                                     key_j)
+                    self._mark_admitted([nxt])
+                    self._mark_first([nxt])
+                    refilled.append(j)
+                    admitted = True
+                    break             # slot j filled; move to the next
+                if admitted:
                     break
-                if int(nxt.prompt.shape[0]) > cur:
-                    blocked = True    # cannot left-pad down
-                    break
-                if cur + nxt.max_new_tokens > self.cfg.cache_len:
-                    blocked = True    # would wrap the KV ring
-                    break
-                if nxt.expert not in slot:
-                    try:
-                        grown = self._overlay_for(
-                            tuple(experts + [nxt.expert]))
-                    except ExpertUnavailable as e:
-                        # fail ONLY the head request and try the next one
-                        # for this slot — a dead expert must not block the
-                        # whole admission queue
-                        queue.popleft()
-                        self._fail([nxt], e)
-                        continue
-                    if grown is None:
-                        blocked = True    # newcomer not coverable
-                        break
-                    experts.append(nxt.expert)
-                    slot[nxt.expert] = len(experts) - 1
-                    overlay = grown
-                queue.popleft()
-                rows[j] = nxt
-                eid = eid.at[j].set(slot[nxt.expert])
-                key_j = decode_loop.row_keys(self.cfg.sampling.seed,
-                                             [nxt.uid])
-                keys = keys.at[j].set(key_j[0])
-                tok, cache = self._admit_row(nxt, j, cur, cache, tok,
-                                             overlay, eid, key_j)
-                refilled.append(j)
-                break                 # slot j filled; move to the next
         return rows, experts, overlay, eid, tok, keys, cache, refilled
 
     def _serve_wave_eager(self, wave: list[Request], experts: list[str],
-                          overlay: dict, queue: deque) -> None:
+                          overlay: dict, sched) -> None:
         """PR-2 baseline: one jitted decode dispatch + one host sync per
         generated token.  Kept (``decode_chunk=0``) as the measured
-        baseline of ``perf_lab --exp decode_loop``."""
+        baseline of ``perf_lab --exp decode_loop``.  Token selection goes
+        through the same on-device selector as the compiled loop, so
+        temperature/top-k sampling is eager-vs-chunked reproducible: row
+        streams depend only on (seed, uid, draw index)."""
         t0 = time.perf_counter()
+        self._mark_admitted(wave)
         slot = {e: i for i, e in enumerate(experts)}
         eid = jnp.asarray([slot[r.expert] for r in wave], jnp.int32)
         toks, start = self._pad_prompts(wave)
@@ -388,7 +565,8 @@ class ServeEngine:
                                       eid=eid, start=start)
         keys = decode_loop.row_keys(self.cfg.sampling.seed,
                                     [r.uid for r in wave])
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        tok = self._select(logits, keys, jnp.zeros((len(wave),), jnp.int32))
+        self._mark_first(wave)
         rows: list[Optional[Request]] = list(wave)
         admitted = 0
         while True:
@@ -396,20 +574,22 @@ class ServeEngine:
             for j, r in enumerate(rows):
                 if r is not None and len(r.out_tokens) < r.max_new_tokens:
                     r.out_tokens.append(int(tok_np[j]))
+                    self._mark_done(r)
             done = [j for j, r in enumerate(rows) if r is None
                     or len(r.out_tokens) >= r.max_new_tokens]
             # continuous admission: refill finished slots in place
-            if queue and self._can_admit():
+            if sched is not None and sched.pending() and self._can_admit():
                 (rows, experts, overlay, eid, tok, keys, cache,
                  refilled) = self._try_admissions(
                      rows, done, cur, experts, slot, overlay, eid, tok,
-                     keys, cache, queue)
+                     keys, cache, sched)
                 for j in refilled:
-                    # the newcomer's prefill argmax IS its first generated
-                    # token; record it now — the next loop-top append only
-                    # sees the decode output that consumes it
+                    # the newcomer's prefill selection IS its first
+                    # generated token; record it now — the next loop-top
+                    # append only sees the decode output that consumes it
                     if rows[j].max_new_tokens > 0:
                         rows[j].out_tokens.append(int(tok[j, 0]))
+                        self._mark_done(rows[j])
                 admitted += len(refilled)
                 done = [j for j, r in enumerate(rows) if r is None
                         or len(r.out_tokens) >= r.max_new_tokens]
@@ -417,8 +597,11 @@ class ServeEngine:
                 break
             logits, cache = self._decode(self.base, tok, cache, self.rt,
                                          delta=overlay, eid=eid)
-            tok = jnp.argmax(logits[:, -1],
-                             axis=-1).astype(jnp.int32)[:, None]
+            # draw index = tokens already emitted (pending tok was just
+            # appended above) — matches the compiled loop's gen stream
+            gen = jnp.asarray([len(r.out_tokens) if r is not None else 0
+                               for r in rows], jnp.int32)
+            tok = self._select(logits, keys, gen)
             cur += 1
         self.wave_log.append({"rows": len(wave), "experts": len(experts),
                               "admitted": admitted, "chunks": 0,
@@ -448,16 +631,18 @@ class ServeEngine:
             n = min(K, rem[j])
             if n:
                 r.out_tokens.extend(int(t) for t in buf_np[j, :n])
+                self._mark_done(r)
         return tok, cache, decode_loop.host_decode_steps(max(rem), K), True
 
     def _serve_wave_chunked(self, wave: list[Request], experts: list[str],
-                            overlay: dict, queue: deque) -> None:
+                            overlay: dict, sched) -> None:
         """Device-resident wave loop: K decode steps (stopping masks,
         token selection, KV writes) per compiled launch, ONE host sync per
         chunk to flush the ``[B, K]`` token buffer, then host-side
         admission — the newcomer's first token is folded into the device
         token state instead of being read back row by row."""
         t0 = time.perf_counter()
+        self._mark_admitted(wave)
         slot = {e: i for i, e in enumerate(experts)}
         eid = jnp.asarray([slot[r.expert] for r in wave], jnp.int32)
         toks, start = self._pad_prompts(wave)
@@ -470,6 +655,7 @@ class ServeEngine:
                                     [r.uid for r in rows])
         tok = self._select(logits, keys,
                            jnp.zeros((len(rows),), jnp.int32))
+        self._mark_first(rows)
         admitted = chunks = 0
         while True:
             tok, cache, steps, launched = self._drive_chunk(
@@ -478,11 +664,11 @@ class ServeEngine:
             chunks += int(launched)
             done = [j for j, r in enumerate(rows)
                     if len(r.out_tokens) >= r.max_new_tokens]
-            if queue and self._can_admit():
+            if sched is not None and sched.pending() and self._can_admit():
                 (rows, experts, overlay, eid, tok, keys, cache,
                  refilled) = self._try_admissions(
                      rows, done, cur, experts, slot, overlay, eid, tok,
-                     keys, cache, queue)
+                     keys, cache, sched)
                 # the newcomer's first token stays ON DEVICE: it is the
                 # pending ``tok[j]`` the next chunk emits first — no
                 # int(tok[j, 0]) read-back per admission
@@ -524,8 +710,132 @@ class ServeEngine:
         tok = tok.at[j].set(first[0])
         return tok, new_cache
 
+    # ---------------- paged-KV wave driver ----------------
+
+    def _paged_prefill(self, reqs: list[Request], js: list[int], lp: int,
+                       cache, tok, overlay, eid, keys_rows, row_blocks):
+        """Prefill N rows (all bucketed to prompt width ``lp``) and scatter
+        their KV into the block pool.  The rows run a *dense* prefill at
+        ``cache_len = lp`` — with T == S the ring fill is the identity, so
+        slot order is position order and the per-row caches drop straight
+        into ``lp // block_size`` pool blocks.  No batch re-padding, no
+        per-row splice into a running cache."""
+        jsa = jnp.asarray(js, jnp.int32)
+        toks = jnp.stack([jnp.pad(r.prompt, (lp - r.prompt.shape[0], 0),
+                                  constant_values=1) for r in reqs]
+                         ).astype(jnp.int32)
+        start = jnp.asarray([lp - int(r.prompt.shape[0]) for r in reqs],
+                            jnp.int32)
+        logits, row_cache = self._prefill(self.base, {"tokens": toks},
+                                          self.rt, lp, delta=overlay,
+                                          eid=eid[jsa], start=start)
+        row_layers = {name: {"k": st["k"], "v": st["v"]}
+                      for name, st in row_cache["layers"].items()}
+        N, nbp = len(js), lp // self._bs
+        ptab = np.asarray([row_blocks[j][:nbp] for j in js], np.int32)
+        tables = np.full((N, self._max_blocks), -1, np.int32)
+        for i, j in enumerate(js):
+            tables[i, :len(row_blocks[j])] = row_blocks[j]
+        cache = paged_kv.insert_prefill_rows(
+            cache, row_layers, jsa, jnp.asarray(ptab), jnp.asarray(tables),
+            jnp.full((N,), lp, jnp.int32), start)
+        first = self._select(logits, keys_rows, jnp.zeros((N,), jnp.int32))
+        tok = tok.at[jsa].set(first)
+        return tok, cache
+
+    def _admit_row_paged(self, r: Request, j: int, cache, tok, overlay,
+                         eid, key_row, alloc, row_blocks):
+        """Paged slot refill: allocate the row's blocks and write its
+        prefill KV.  Unlike the dense path there is no wave position to
+        left-pad against and no ring to wrap — any prompt length admits
+        whenever enough blocks are free (the feasibility check already
+        passed in ``_admission_block_reason``)."""
+        lp, need = paged_kv.blocks_for(int(r.prompt.shape[0]),
+                                       r.max_new_tokens, self._bs)
+        row_blocks[j] = alloc.alloc(need)
+        self._kv_in_use = alloc.in_use
+        self._kv_peak = max(self._kv_peak, alloc.peak_in_use)
+        return self._paged_prefill([r], [j], lp, cache, tok, overlay, eid,
+                                   key_row, row_blocks)
+
+    def _serve_wave_paged(self, wave: list[Request], experts: list[str],
+                          overlay: dict, sched) -> None:
+        """Block-table wave loop: per-bucket batched prefill into pool
+        blocks, then the same compiled K-step chunk driver as the dense
+        path (the paged cache rides through ``decode_step`` via its
+        ``tables``/``lens`` fields).  Admission control is the free list:
+        a finished row's blocks return to the pool and any queued request
+        whose block need fits is placeable — regardless of prompt length
+        or how far the wave has decoded."""
+        t0 = time.perf_counter()
+        alloc = paged_kv.BlockAllocator(self._kv_blocks, self._bs)
+        row_blocks: dict[int, list] = {}
+        kept: list[Request] = []
+        buckets: list[int] = []
+        for r in wave:
+            lp, need = paged_kv.blocks_for(int(r.prompt.shape[0]),
+                                           r.max_new_tokens, self._bs)
+            blocks = alloc.alloc(need)
+            if blocks is None:
+                # pool smaller than the wave: the overflow re-queues and
+                # re-enters via a later wave or a slot refill
+                sched.push(r)
+                continue
+            row_blocks[len(kept)] = blocks
+            kept.append(r)
+            buckets.append(lp)
+        if not kept:
+            return
+        wave = kept
+        self._mark_admitted(wave)
+        slot = {e: i for i, e in enumerate(experts)}
+        eid = jnp.asarray([slot[r.expert] for r in wave], jnp.int32)
+        keys = decode_loop.row_keys(self.cfg.sampling.seed,
+                                    [r.uid for r in wave])
+        cache = paged_kv.init_paged_cache(self.api.cfg, len(wave),
+                                          self._kv_blocks, self._bs,
+                                          self._max_blocks)
+        tok = jnp.zeros((len(wave), 1), jnp.int32)
+        rows: list[Request] = list(wave)
+        groups: dict[int, list] = defaultdict(list)
+        for j, lp in enumerate(buckets):
+            groups[lp].append(j)
+        for lp in sorted(groups):
+            js = groups[lp]
+            tok, cache = self._paged_prefill(
+                [rows[j] for j in js], js, lp, cache, tok, overlay, eid,
+                keys[jnp.asarray(js, jnp.int32)], row_blocks)
+        self._mark_first(rows)
+        self._kv_in_use = alloc.in_use
+        self._kv_peak = max(self._kv_peak, alloc.peak_in_use)
+        admitted = chunks = 0
+        while True:
+            tok, cache, _, launched = self._drive_chunk(
+                self.base, overlay, eid, tok, cache, rows, keys)
+            chunks += int(launched)
+            done = [j for j, r in enumerate(rows)
+                    if len(r.out_tokens) >= r.max_new_tokens]
+            if sched is not None and sched.pending() and self._can_admit():
+                (rows, experts, overlay, eid, tok, keys, cache,
+                 refilled) = self._try_admissions(
+                     rows, done, 0, experts, slot, overlay, eid, tok,
+                     keys, cache, sched, alloc=alloc, row_blocks=row_blocks)
+                admitted += len(refilled)
+                done = [j for j, r in enumerate(rows)
+                        if len(r.out_tokens) >= r.max_new_tokens]
+            if len(done) == len(rows):
+                break
+        for j in list(row_blocks):
+            alloc.free(row_blocks.pop(j))
+        self._kv_in_use = alloc.in_use
+        self.wave_log.append({"rows": len(wave), "experts": len(experts),
+                              "admitted": admitted, "chunks": chunks,
+                              "kv_blocks_peak": alloc.peak_in_use,
+                              "seconds": time.perf_counter() - t0})
+
     def _serve_batch(self, params, reqs: list[Request]) -> None:
         """Merge-path batch (single expert): prefill then decode."""
+        self._mark_admitted(reqs)
         toks, start = self._pad_prompts(reqs)
         batch = {"tokens": toks}
         if self.api.cfg.frontend is not None:
@@ -541,15 +851,20 @@ class ServeEngine:
                                              else None))
         if self.cfg.decode_chunk:
             return self._decode_batch_chunked(params, reqs, logits, cache)
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        keys = decode_loop.row_keys(self.cfg.sampling.seed,
+                                    [r.uid for r in reqs])
+        tok = self._select(logits, keys, jnp.zeros((len(reqs),), jnp.int32))
+        self._mark_first(reqs)
         steps = max(r.max_new_tokens for r in reqs)
         for _ in range(steps):
             tok_np = np.asarray(tok).ravel()   # one host sync per step
             for j, r in enumerate(reqs):
                 if len(r.out_tokens) < r.max_new_tokens:
                     r.out_tokens.append(int(tok_np[j]))
+                    self._mark_done(r)
             logits, cache = self._decode(params, tok, cache, self.rt)
-            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            gen = jnp.asarray([len(r.out_tokens) for r in reqs], jnp.int32)
+            tok = self._select(logits, keys, gen)
 
     def _decode_batch_chunked(self, params, reqs: list[Request],
                               logits, cache) -> None:
@@ -559,12 +874,31 @@ class ServeEngine:
         keys = decode_loop.row_keys(self.cfg.sampling.seed,
                                     [r.uid for r in reqs])
         tok = self._select(logits, keys, jnp.zeros((len(reqs),), jnp.int32))
+        self._mark_first(reqs)
         launched = True
         while launched:
             tok, cache, _, launched = self._drive_chunk(
                 params, None, None, tok, cache, reqs, keys)
 
     # ---------------- accounting ----------------
+
+    def _scheduler_stats(self) -> dict:
+        s = self._sched.stats() if self._sched is not None else {
+            "policy": self.cfg.scheduler, "queue_depth_max": 0,
+            "deferred": 0}
+        s["admission_wait_s"] = {
+            str(p): {"n": len(w), "mean": sum(w) / len(w), "max": max(w)}
+            for p, w in sorted(self._adm_wait.items()) if w}
+        return s
+
+    def _kv_stats(self) -> dict:
+        total = (self._kv_blocks - 1 if self.cfg.kv_layout == "paged"
+                 else None)
+        return {"layout": self.cfg.kv_layout,
+                "block_size": self._bs,
+                "blocks_total": total,
+                "blocks_in_use": self._kv_in_use,
+                "blocks_peak": self._kv_peak}
 
     def swap_summary(self) -> dict:
         s = self.cache.stats.as_dict()
@@ -573,4 +907,21 @@ class ServeEngine:
         s["n_waves"] = len(self.wave_log)
         s["admitted"] = sum(x["admitted"] for x in self.wave_log)
         s["failed"] = len(self.failed_log)
+        hits = s.get("stack_hits", 0)
+        builds = s.get("stack_builds", 0)
+        s["stack_hit_rate"] = hits / max(hits + builds, 1)
+        s["scheduler"] = self._scheduler_stats()
+        s["kv"] = self._kv_stats()
         return s
+
+    def _export_gauges(self) -> None:
+        """Publish serving gauges onto the device cache so
+        ``registry.health()`` surfaces them next to swap/straggler state."""
+        s = self.cache.stats
+        hits = getattr(s, "stack_hits", 0)
+        builds = getattr(s, "stack_builds", 0)
+        self.cache.gauges = {
+            "stack_hit_rate": hits / max(hits + builds, 1),
+            "scheduler": self._scheduler_stats(),
+            "kv": self._kv_stats(),
+        }

@@ -453,6 +453,10 @@ class DeviceCache:
         self.straggler = StragglerMonitor()
         self._straggler_lock = threading.Lock()
         self._straggler_obs = 0
+        # serving gauges published by the engine after each run() (queue
+        # depth, KV blocks in use/free, stack hit-rate, per-priority
+        # admission wait) — surfaced through ExpertRegistry.health()
+        self.gauges: dict = {}
 
     def _observe_promotion(self, seconds: float) -> None:
         with self._straggler_lock:
@@ -777,8 +781,11 @@ class ExpertRegistry:
     def health(self) -> dict:
         """Health snapshot: per-expert failure/quarantine accounts (remote
         registries), per-replica health when the transport is replicated
-        (``replicas`` section), and the device tier's promotion-latency
-        straggler verdict (``straggler`` section)."""
+        (``replicas`` section), the device tier's promotion-latency
+        straggler verdict (``straggler`` section), and — once an engine
+        has run — its serving gauges (``serving`` section: queue depth,
+        KV blocks in use/free, stack hit-rate, per-priority admission
+        wait)."""
         h = getattr(self.store, "health", None)
         out = (h() if h is not None
                else {"failures": {}, "quarantined": {}, "quarantines": 0})
@@ -790,6 +797,8 @@ class ExpertRegistry:
                     "flags": len(self._device.straggler.flagged_steps),
                     "ewma_s": self._device.straggler.ewma,
                 }
+            if self._device.gauges:
+                out["serving"] = dict(self._device.gauges)
         return out
 
     def publish(self, expert, rep: Optional[str] = None) -> dict:

@@ -1,0 +1,237 @@
+"""Pluggable admission scheduling for the serving engine.
+
+The engine used to pop a single FIFO deque: the wave builder took from
+the head until the batch or the expert-stack budget filled, and slot
+refills always considered the queue head only — a head that could not be
+placed (over-stack expert, KV exhausted) stalled every placeable request
+behind it.  This module makes that policy a strategy object:
+
+* :class:`FIFOScheduler` — replicates the historical behaviour
+  **bit-identically** (same wave composition, same head-of-line blocking)
+  so ``scheduler="fifo"`` stays the parity baseline.
+* :class:`PriorityScheduler` — priority classes with deadline-aware
+  ordering (EDF within a class); admission candidates are *scanned past*
+  a blocked head, so a stuck high-priority request never starves
+  placeable work behind it.
+* :class:`AffinityScheduler` — priority ordering plus per-expert wave
+  packing: rows naming the same expert land in the same wave, expert
+  tuples are emitted in canonical (sorted) order, and the previous wave's
+  expert set is sticky — three choices that turn repeat traffic into
+  stacked-plane cache hits (``stack_hits`` in ``swap_summary()``) instead
+  of rebuilds.
+
+Schedulers only order and release work; *placement* feasibility (expert
+stack budget, KV blocks, ring position) stays in the engine, which asks
+for ``candidates()`` and reports what it could not place.  Requests carry
+``arrival_s`` (seconds, engine clock) for open-loop replay: a request is
+invisible to wave building until its arrival time has passed —
+:mod:`benchmarks.traffic` generates such timelines.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:                      # avoid a circular engine import
+    from repro.serve.engine import Request
+
+__all__ = ["FIFOScheduler", "PriorityScheduler", "AffinityScheduler",
+           "SCHEDULERS", "make_scheduler"]
+
+
+class FIFOScheduler:
+    """Arrival-order admission; bit-identical to the pre-scheduler engine.
+
+    ``strict_fifo`` tells the engine to preserve head-of-line blocking:
+    when the head candidate cannot be placed, NO later request may jump
+    it (that is what the historical deque did, and what the parity gates
+    compare against).
+    """
+
+    name = "fifo"
+    strict_fifo = True
+
+    def __init__(self):
+        self._ready: deque = deque()
+        self._future: list = []        # arrival_s in the engine's future
+        self.queue_depth_max = 0
+        self.deferred = 0              # placeable-skips (non-FIFO only)
+
+    # -- intake -----------------------------------------------------------
+
+    def push(self, r: Request) -> None:
+        if getattr(r, "arrival_s", 0.0) and r.arrival_s > 0.0:
+            self._future.append(r)
+            self._future.sort(key=lambda x: (x.arrival_s, x.uid))
+        else:
+            self._ready.append(r)
+        self._note_depth()
+
+    def release(self, now: float) -> None:
+        """Move every request whose arrival time has passed into the ready
+        set (arrival order)."""
+        while self._future and self._future[0].arrival_s <= now:
+            self._ready.append(self._future.pop(0))
+        self._note_depth()
+
+    def _note_depth(self) -> None:
+        self.queue_depth_max = max(self.queue_depth_max, len(self._ready))
+
+    # -- queries ----------------------------------------------------------
+
+    def pending(self) -> int:
+        return len(self._ready) + len(self._future)
+
+    def ready_count(self) -> int:
+        return len(self._ready)
+
+    def next_arrival(self) -> Optional[float]:
+        return self._future[0].arrival_s if self._future else None
+
+    def peek(self, n: int) -> list:
+        """Upcoming requests in admission order (for expert prefetch)."""
+        out = list(self._ready)[:n]
+        if len(out) < n:
+            out += self._future[:n - len(out)]
+        return out
+
+    # -- wave building -----------------------------------------------------
+
+    def take_wave(self, max_batch: int, max_stack: int) -> tuple:
+        """Pop the next wave.  Exact replica of the historical loop: take
+        from the head until the batch fills or the head names an expert
+        that would exceed the stack budget."""
+        wave: list = []
+        experts: list = []
+        while self._ready and len(wave) < max_batch:
+            r = self._ready[0]
+            if r.expert not in experts and len(experts) >= max_stack:
+                break                          # over-capacity: next wave
+            if r.expert not in experts:
+                experts.append(r.expert)
+            wave.append(self._ready.popleft())
+        return wave, experts
+
+    # -- slot-refill admission --------------------------------------------
+
+    def candidates(self, slot: dict) -> list:
+        """Requests the engine may place into a finished slot, in order.
+        FIFO considers the head ONLY (head-of-line semantics)."""
+        return [self._ready[0]] if self._ready else []
+
+    def remove(self, r: Request) -> None:
+        try:
+            self._ready.remove(r)
+        except ValueError:
+            self._future.remove(r)
+
+    def note_deferred(self, reason: str = "") -> None:
+        self.deferred += 1
+
+    def stats(self) -> dict:
+        return {"policy": self.name,
+                "queue_depth_max": self.queue_depth_max,
+                "deferred": self.deferred}
+
+
+class PriorityScheduler(FIFOScheduler):
+    """Priority classes (lower value = more urgent) with earliest-deadline
+    ordering inside a class; FIFO inside equal (priority, deadline).
+
+    ``strict_fifo = False``: the engine scans past candidates it cannot
+    place, so a blocked head (KV blocks exhausted, over-stack expert)
+    defers only itself — the fix for the historical head-of-line starve.
+    """
+
+    name = "priority"
+    strict_fifo = False
+
+    @staticmethod
+    def _key(r: Request):
+        dl = r.deadline_s if r.deadline_s is not None else math.inf
+        return (r.priority, dl, r.arrival_s, r.uid)
+
+    def take_wave(self, max_batch: int, max_stack: int) -> tuple:
+        wave: list = []
+        experts: list = []
+        for r in sorted(self._ready, key=self._key):
+            if len(wave) >= max_batch:
+                break
+            if r.expert not in experts and len(experts) >= max_stack:
+                self.deferred += 1             # skipped, not blocking
+                continue
+            if r.expert not in experts:
+                experts.append(r.expert)
+            wave.append(r)
+        for r in wave:
+            self._ready.remove(r)
+        return wave, experts
+
+    def candidates(self, slot: dict) -> list:
+        return sorted(self._ready, key=self._key)
+
+
+class AffinityScheduler(PriorityScheduler):
+    """Priority ordering + expert-affinity wave packing.
+
+    Wave building picks at most ``max_stack`` experts — preferring the
+    previous wave's experts (sticky), then the most-backlogged, then the
+    most urgent — and fills the batch from those experts' requests in
+    priority order.  The expert tuple is emitted in **canonical sorted
+    order**, so two waves serving the same expert set present the same
+    ordered tuple to the overlay cache and hit the stacked planes instead
+    of rebuilding them.  Slot refills prefer requests whose expert is
+    already in the wave (no overlay growth, tuple stays stable).
+    """
+
+    name = "affinity"
+
+    def __init__(self):
+        super().__init__()
+        self._last_experts: frozenset = frozenset()
+
+    def take_wave(self, max_batch: int, max_stack: int) -> tuple:
+        by_expert: dict = {}
+        for r in self._ready:
+            by_expert.setdefault(r.expert, []).append(r)
+        if not by_expert:
+            return [], []
+
+        def escore(e):
+            sticky = 0 if e in self._last_experts else 1
+            best = min(self._key(r) for r in by_expert[e])
+            return (sticky, -len(by_expert[e]), best)
+
+        chosen = set(sorted(by_expert, key=escore)[:max_stack])
+        pool = sorted((r for e in chosen for r in by_expert[e]),
+                      key=self._key)
+        wave = pool[:max_batch]
+        skipped = len(self._ready) - len(pool)
+        if skipped > 0:
+            self.deferred += skipped
+        for r in wave:
+            self._ready.remove(r)
+        # canonical order -> identical expert sets give identical stack
+        # tuples wave after wave (the stack_hits lever)
+        experts = sorted({r.expert for r in wave})
+        self._last_experts = frozenset(experts)
+        return wave, experts
+
+    def candidates(self, slot: dict) -> list:
+        inside = [r for r in self._ready if r.expert in slot]
+        outside = [r for r in self._ready if r.expert not in slot]
+        return sorted(inside, key=self._key) + sorted(outside, key=self._key)
+
+
+SCHEDULERS = {c.name: c for c in
+              (FIFOScheduler, PriorityScheduler, AffinityScheduler)}
+
+
+def make_scheduler(name: str):
+    try:
+        return SCHEDULERS[name]()
+    except KeyError:
+        raise ValueError(f"unknown scheduler {name!r}; "
+                         f"expected one of {sorted(SCHEDULERS)}") from None

@@ -102,11 +102,16 @@ def test_seeded_sampling_reproducible_across_chunk_sizes(smoke_lm):
         assert all(0 <= t < cfg.vocab for t in toks)
 
 
-def test_sampling_requires_compiled_loop(smoke_lm):
-    cfg, api, base = smoke_lm
-    with pytest.raises(ValueError):
-        rapi.serve(api, RT, base, _registry(api, base), decode_chunk=0,
-                   temperature=0.5)
+def test_eager_sampling_matches_chunked(smoke_lm):
+    """Seeded sampling in the eager per-token baseline produces the same
+    streams as the compiled chunk loop: both draw token i of request uid
+    from fold_in(fold_in(seed, uid), i), so the loop form is invisible."""
+    cfg = smoke_lm[0]
+    _, eager = _serve(smoke_lm, _mk_reqs(cfg), decode_chunk=0,
+                      temperature=0.8, top_k=5, seed=7)
+    _, chunked = _serve(smoke_lm, _mk_reqs(cfg), decode_chunk=4,
+                        temperature=0.8, top_k=5, seed=7)
+    assert eager == chunked
 
 
 def test_select_tokens_greedy_is_argmax():

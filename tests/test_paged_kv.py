@@ -1,0 +1,224 @@
+"""Paged KV cache: block allocator invariants, paged-vs-dense token
+parity across schedulers (greedy and sampled, with oversubscription and
+mid-wave admissions), blocked-head non-starvation under KV admission
+control, and the serving observability surface."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api as rapi
+from repro.configs import get_smoke_config
+from repro.models import Runtime, build
+from repro.serve import DONE, FAILED, Request
+from repro.serve.paged_kv import TRASH_BLOCK, BlockAllocator, blocks_for
+
+RT = Runtime(attn_chunk_q=16, attn_chunk_k=16, remat_policy="none")
+
+
+# -- allocator unit tests (no model) -----------------------------------------
+
+def test_allocator_never_hands_out_trash_block():
+    a = BlockAllocator(n_blocks=5, block_size=8)
+    got = a.alloc(4)
+    assert got is not None and TRASH_BLOCK not in got
+    assert sorted(got) == [1, 2, 3, 4]
+    assert a.available == 0
+
+
+def test_allocator_all_or_nothing():
+    a = BlockAllocator(n_blocks=5, block_size=8)
+    first = a.alloc(3)
+    assert a.alloc(2) is None, "over-ask must not partially allocate"
+    assert a.available == 1, "failed alloc must leave the free list intact"
+    more = a.alloc(1)
+    assert more is not None
+    a.free(first + more)
+    assert a.available == 4 and a.in_use == 0
+    assert a.peak_in_use == 4
+
+
+def test_allocator_rejects_double_and_bogus_free():
+    a = BlockAllocator(n_blocks=4, block_size=8)
+    got = a.alloc(2)
+    a.free(got)
+    with pytest.raises(ValueError):
+        a.free(got)                     # double free
+    with pytest.raises(ValueError):
+        a.free([TRASH_BLOCK])           # trash block is not allocatable
+    with pytest.raises(ValueError):
+        a.free([99])                    # out of range
+
+
+def test_blocks_for_rounding():
+    lp, need = blocks_for(prompt_len=6, max_new=4, block_size=8)
+    assert (lp, need) == (8, 2)         # 8 prompt slots + 4 new -> 2 blocks
+    lp, need = blocks_for(prompt_len=16, max_new=0, block_size=8)
+    assert (lp, need) == (16, 2)
+    lp, need = blocks_for(prompt_len=1, max_new=1, block_size=4)
+    assert (lp, need) == (4, 2)
+
+
+# -- engine-level parity ------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_lm():
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    return cfg, api, base
+
+
+def _experts(api, base, n=3, scale=0.03, density=0.2):
+    out = []
+    for i in range(n):
+        leaves, tdef = jax.tree_util.tree_flatten(base)
+        keys = jax.random.split(jax.random.PRNGKey(100 + i), len(leaves))
+        ft = jax.tree_util.tree_unflatten(tdef, [
+            (l.astype(jnp.float32)
+             + scale * jax.random.normal(k, l.shape)).astype(l.dtype)
+            for l, k in zip(leaves, keys)])
+        out.append(rapi.compress(base, ft, name=f"expert{i}",
+                                 density=density))
+    return out
+
+
+def _mk_reqs(cfg, n=6, n_experts=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, expert=f"expert{i % n_experts}",
+                    prompt=jnp.asarray(
+                        rng.integers(1, cfg.vocab, 5 + 3 * (i % 3)),
+                        jnp.int32),
+                    max_new_tokens=2 + i % 3)
+            for i in range(n)]
+
+
+def _run(smoke_lm, reqs, **kw):
+    cfg, api, base = smoke_lm
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("max_stack", 2)
+    kw.setdefault("decode_chunk", 2)
+    eng = rapi.serve(api, RT, base,
+                     rapi.registry(experts=_experts(api, base)), **kw)
+    eng.run(reqs)
+    return eng, {r.uid: list(r.out_tokens) for r in reqs}
+
+
+def test_paged_matches_dense_with_refills(smoke_lm):
+    """Block-table KV is bit-identical to the dense left-pad path on an
+    oversubscribed workload (6 requests, 3 slots => mid-wave admissions),
+    for every scheduler."""
+    cfg = smoke_lm[0]
+    eng_d, dense = _run(smoke_lm, _mk_reqs(cfg), kv_layout="dense")
+    assert sum(w["admitted"] for w in eng_d.wave_log) >= 1
+    for sched in ("fifo", "priority", "affinity"):
+        eng_p, paged = _run(smoke_lm, _mk_reqs(cfg), kv_layout="paged",
+                            kv_block_size=8, scheduler=sched)
+        assert paged == dense, f"paged/{sched} diverged from dense"
+        assert eng_p.swap_summary()["kv"]["layout"] == "paged"
+
+
+def test_paged_sampling_matches_dense(smoke_lm):
+    """Seeded sampling is invariant to the KV layout: streams are keyed
+    by (seed, uid, draw index), not by where the KV rows live."""
+    cfg = smoke_lm[0]
+    samp = dict(temperature=0.8, top_k=5, seed=7)
+    _, dense = _run(smoke_lm, _mk_reqs(cfg), kv_layout="dense", **samp)
+    _, paged = _run(smoke_lm, _mk_reqs(cfg), kv_layout="paged",
+                    kv_block_size=8, scheduler="affinity", **samp)
+    assert paged == dense
+
+
+def test_paged_pool_oversubscription_requeues(smoke_lm):
+    """A pool smaller than the wave's demand re-queues the overflow rows
+    instead of failing them; everything still completes and the tokens
+    still match the dense baseline."""
+    cfg = smoke_lm[0]
+    _, dense = _run(smoke_lm, _mk_reqs(cfg), kv_layout="dense")
+    eng, paged = _run(smoke_lm, _mk_reqs(cfg), kv_layout="paged",
+                      kv_block_size=8, kv_blocks=7, scheduler="priority")
+    assert paged == dense
+    kv = eng.swap_summary()["kv"]
+    assert kv["blocks_total"] == 6 and kv["blocks_peak"] <= 6
+
+
+def test_blocked_head_does_not_starve_followers(smoke_lm):
+    """Satellite fix: a head that cannot be placed (KV blocks exhausted)
+    must not stall placeable requests behind it under the non-FIFO
+    schedulers — FIFO keeps the historical head-of-line blocking."""
+    cfg, api, base = smoke_lm
+
+    def reqs():
+        rng = np.random.default_rng(0)
+        return [
+            Request(uid=0, expert="expert0", max_new_tokens=10,
+                    prompt=jnp.asarray(rng.integers(1, cfg.vocab, 6),
+                                       jnp.int32)),       # 3 blocks, long-run
+            Request(uid=1, expert="expert0", max_new_tokens=2,
+                    prompt=jnp.asarray([5, 6, 7], jnp.int32)),  # 2, quick
+            Request(uid=2, expert="expert0", max_new_tokens=8,
+                    prompt=jnp.asarray(rng.integers(1, cfg.vocab, 30),
+                                       jnp.int32)),       # 5 blocks: big head
+            Request(uid=3, expert="expert0", max_new_tokens=2,
+                    prompt=jnp.asarray([8, 9, 10], jnp.int32)),  # 2, fits
+        ]
+
+    # 6 usable blocks: wave = {uid0 (3), uid1 (2)}; when uid1 frees, the
+    # head uid2 needs 5 > 3 available, but uid3 needs only 2.
+    kw = dict(kv_layout="paged", kv_block_size=8, kv_blocks=7,
+              max_batch=2, decode_chunk=2)
+    rp = reqs()
+    eng_p, toks_p = _run(smoke_lm, rp, scheduler="priority", **kw)
+    assert all(len(t) for t in toks_p.values())
+    assert rp[3].t_first_s < rp[2].t_first_s, \
+        "priority scheduler should admit uid3 past the blocked head uid2"
+    assert eng_p.swap_summary()["scheduler"]["deferred"] >= 1
+
+    rf = reqs()
+    eng_f, toks_f = _run(smoke_lm, rf, scheduler="fifo", **kw)
+    assert toks_f == toks_p, "tokens are scheduler-invariant"
+    assert rf[2].t_first_s < rf[3].t_first_s, \
+        "strict FIFO must keep head-of-line order (uid2 before uid3)"
+
+
+def test_serving_observability_surface(smoke_lm):
+    """swap_summary() and registry.health() expose the new gauges: KV
+    block occupancy, per-priority admission wait, stack hit-rate."""
+    cfg, api, base = smoke_lm
+    reg = rapi.registry(experts=_experts(api, base))
+    eng = rapi.serve(api, RT, base, reg, max_batch=3, cache_len=64,
+                     max_stack=2, decode_chunk=2, kv_layout="paged",
+                     kv_block_size=8, scheduler="affinity")
+    eng.run(_mk_reqs(cfg))
+    s = eng.swap_summary()
+    assert 0.0 <= s["stack_hit_rate"] <= 1.0
+    assert s["scheduler"]["policy"] == "affinity"
+    assert s["scheduler"]["queue_depth_max"] >= 1
+    assert "admission_wait_s" in s["scheduler"]
+    for wait in s["scheduler"]["admission_wait_s"].values():
+        assert wait["n"] >= 1 and wait["max"] >= wait["mean"] >= 0.0
+    kv = s["kv"]
+    assert kv["layout"] == "paged" and kv["block_size"] == 8
+    assert kv["blocks_in_use"] == 0, "end of run must free every block"
+    assert kv["blocks_peak"] >= 1
+    h = reg.health()
+    assert "serving" in h
+    assert h["serving"]["scheduler"]["policy"] == "affinity"
+    assert h["serving"]["kv"]["layout"] == "paged"
+
+
+def test_paged_rejects_impossible_requests(smoke_lm):
+    """A request that can never fit the pool fails terminally instead of
+    deadlocking admission."""
+    cfg, api, base = smoke_lm
+    big = Request(uid=0, expert="expert0", max_new_tokens=60,
+                  prompt=jnp.asarray(np.arange(2, 40), jnp.int32))
+    ok = Request(uid=1, expert="expert0", max_new_tokens=2,
+                 prompt=jnp.asarray([5, 6, 7], jnp.int32))
+    eng, toks = _run(smoke_lm, [big, ok], kv_layout="paged",
+                     kv_block_size=8)
+    assert big.status == FAILED and not toks[0]
+    assert big.error
+    assert ok.status == DONE and len(toks[1]) == 2

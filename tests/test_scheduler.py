@@ -1,0 +1,141 @@
+"""Pluggable admission schedulers: FIFO wave-replica semantics, priority
+classes + deadline EDF ordering, expert-affinity wave packing with
+canonical stack tuples, and arrival-time release gating."""
+
+import jax.numpy as jnp
+
+from repro.serve.engine import Request
+from repro.serve.scheduler import (SCHEDULERS, AffinityScheduler,
+                                   FIFOScheduler, PriorityScheduler,
+                                   make_scheduler)
+
+
+def _req(uid, expert="expert0", priority=1, deadline=None, arrival=0.0,
+         max_new=4):
+    return Request(uid=uid, expert=expert,
+                   prompt=jnp.asarray([1, 2, 3], jnp.int32),
+                   max_new_tokens=max_new, priority=priority,
+                   deadline_s=deadline, arrival_s=arrival)
+
+
+def test_registry_and_factory():
+    assert set(SCHEDULERS) == {"fifo", "priority", "affinity"}
+    assert isinstance(make_scheduler("fifo"), FIFOScheduler)
+    assert isinstance(make_scheduler("priority"), PriorityScheduler)
+    assert isinstance(make_scheduler("affinity"), AffinityScheduler)
+    try:
+        make_scheduler("nope")
+        assert False, "unknown scheduler must raise"
+    except ValueError:
+        pass
+
+
+def test_fifo_wave_replicates_historical_semantics():
+    """FIFO pops in arrival order and stops the wave when the head would
+    introduce expert number max_stack+1 — the head then BLOCKS (strict
+    head-of-line), exactly like the historical deque loop."""
+    s = make_scheduler("fifo")
+    reqs = [_req(0, "a"), _req(1, "b"), _req(2, "c"), _req(3, "a")]
+    for r in reqs:
+        s.push(r)
+    s.release(0.0)
+    wave, experts = s.take_wave(max_batch=8, max_stack=2)
+    # wave stops at uid=2 ("c" would be a third expert) even though
+    # uid=3 ("a") would fit — strict FIFO never reorders.
+    assert [r.uid for r in wave] == [0, 1]
+    assert sorted(experts) == ["a", "b"]
+    assert s.strict_fifo
+    # next wave picks up the rest
+    wave2, experts2 = s.take_wave(max_batch=8, max_stack=2)
+    assert [r.uid for r in wave2] == [2, 3]
+
+
+def test_priority_orders_by_class_then_deadline():
+    s = make_scheduler("priority")
+    s.push(_req(0, priority=2, deadline=None))
+    s.push(_req(1, priority=0, deadline=9.0))
+    s.push(_req(2, priority=0, deadline=1.0))
+    s.push(_req(3, priority=1, deadline=0.5))
+    s.release(0.0)
+    wave, _ = s.take_wave(max_batch=8, max_stack=4)
+    # class asc, then earliest deadline (None == +inf), then arrival
+    assert [r.uid for r in wave] == [2, 1, 3, 0]
+    assert not s.strict_fifo
+
+
+def test_priority_skips_over_stack_instead_of_blocking():
+    """A head whose expert does not fit the stack is skipped (deferred),
+    not allowed to starve placeable requests behind it."""
+    s = make_scheduler("priority")
+    s.push(_req(0, "a", priority=0))
+    s.push(_req(1, "b", priority=0))
+    s.push(_req(2, "c", priority=0))   # third expert: over max_stack=2
+    s.push(_req(3, "a", priority=1))   # placeable, arrived later
+    s.release(0.0)
+    wave, experts = s.take_wave(max_batch=8, max_stack=2)
+    assert [r.uid for r in wave] == [0, 1, 3]
+    assert s.stats()["deferred"] >= 1
+    wave2, _ = s.take_wave(max_batch=8, max_stack=2)
+    assert [r.uid for r in wave2] == [2]
+
+
+def test_affinity_packs_by_expert_with_canonical_tuple():
+    s = make_scheduler("affinity")
+    # backlog: 3x "b", 2x "a", 1x "c" -- affinity should choose the two
+    # biggest backlogs for max_stack=2 and emit a SORTED expert tuple.
+    for uid, e in enumerate(["b", "a", "c", "b", "a", "b"]):
+        s.push(_req(uid, e))
+    s.release(0.0)
+    wave, experts = s.take_wave(max_batch=8, max_stack=2)
+    assert experts == sorted(experts), "stack tuple must be canonical"
+    assert set(experts) == {"a", "b"}
+    assert {r.expert for r in wave} == {"a", "b"}
+    assert len(wave) == 5
+    # stickiness: with fresh backlog on the same experts plus a new one,
+    # the previously-served experts win ties.
+    for uid, e in enumerate(["c", "a", "b"], start=10):
+        s.push(_req(uid, e))
+    s.release(0.0)
+    wave2, experts2 = s.take_wave(max_batch=8, max_stack=2)
+    assert set(experts2) == {"a", "b"}
+
+
+def test_affinity_candidates_prefer_in_slot_experts():
+    s = make_scheduler("affinity")
+    s.push(_req(0, "cold", priority=0))      # best priority, new expert
+    s.push(_req(1, "hot", priority=1))       # in-slot expert
+    s.release(0.0)
+    cands = s.candidates(slot=["hot", "warm"])
+    assert cands[0].uid == 1, "in-slot expert should be offered first"
+    assert [c.uid for c in cands] == [1, 0]
+
+
+def test_arrival_release_gating():
+    """Requests with a future arrival_s stay invisible until release(now)
+    passes their arrival time — the open-loop replay contract."""
+    for name in SCHEDULERS:
+        s = make_scheduler(name)
+        s.push(_req(0, arrival=0.0))
+        s.push(_req(1, arrival=5.0))
+        s.push(_req(2, arrival=2.0))
+        s.release(0.0)
+        assert s.ready_count() == 1 and s.pending() == 3
+        assert s.next_arrival() == 2.0
+        wave, _ = s.take_wave(max_batch=8, max_stack=4)
+        assert [r.uid for r in wave] == [0]
+        s.release(2.5)
+        wave, _ = s.take_wave(max_batch=8, max_stack=4)
+        assert [r.uid for r in wave] == [2]
+        s.release(10.0)
+        wave, _ = s.take_wave(max_batch=8, max_stack=4)
+        assert [r.uid for r in wave] == [1]
+        assert s.pending() == 0
+
+
+def test_remove_reaches_future_items():
+    s = make_scheduler("fifo")
+    r = _req(0, arrival=99.0)
+    s.push(r)
+    s.release(0.0)
+    s.remove(r)
+    assert s.pending() == 0

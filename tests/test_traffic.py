@@ -1,0 +1,106 @@
+"""Seeded open-loop traffic generator: deterministic replay, Zipf expert
+popularity matching the configured skew, and burst windows landing at the
+scheduled offsets with the configured rate multiplier."""
+
+import numpy as np
+
+from benchmarks import traffic
+from repro.serve.engine import Request
+
+
+def _hist(reqs, n):
+    counts = np.zeros(n, np.int64)
+    for r in reqs:
+        counts[int(r.expert.removeprefix("expert"))] += 1
+    return counts
+
+
+def test_generate_is_deterministic():
+    cfg = traffic.TrafficConfig(seed=3, n_requests=40)
+    a, b = traffic.generate(cfg), traffic.generate(cfg)
+    assert len(a) == len(b) == 40
+    for x, y in zip(a, b):
+        assert isinstance(x, Request)
+        assert (x.uid, x.expert, x.arrival_s, x.max_new_tokens,
+                x.priority, x.deadline_s) == \
+               (y.uid, y.expert, y.arrival_s, y.max_new_tokens,
+                y.priority, y.deadline_s)
+        np.testing.assert_array_equal(np.asarray(x.prompt),
+                                      np.asarray(y.prompt))
+    # a different seed moves the timeline
+    c = traffic.generate(traffic.TrafficConfig(seed=4, n_requests=40))
+    assert any(x.arrival_s != y.arrival_s for x, y in zip(a, c))
+
+
+def test_arrivals_monotone_and_metadata_consistent():
+    cfg = traffic.TrafficConfig(seed=0, n_requests=64)
+    reqs = traffic.generate(cfg)
+    ts = [r.arrival_s for r in reqs]
+    assert all(t1 < t2 for t1, t2 in zip(ts, ts[1:]))
+    budget = dict(cfg.deadline_by_priority)
+    for r in reqs:
+        assert len(r.prompt) in (cfg.prompt_len_short, cfg.prompt_len_long)
+        assert r.max_new_tokens in (cfg.max_new_short, cfg.max_new_long)
+        assert r.deadline_s == r.arrival_s + budget[r.priority]
+
+
+def test_zipf_histogram_matches_skew():
+    """Empirical expert counts track k^-alpha: expert0 dominates, the
+    ranking is (statistically) monotone, and the head mass matches the
+    analytic Zipf weights."""
+    n = 6
+    cfg = traffic.TrafficConfig(seed=1, n_requests=4000, n_experts=n,
+                                zipf_alpha=1.3)
+    counts = _hist(traffic.generate(cfg), n)
+    w = traffic.zipf_weights(n, 1.3)
+    assert counts[0] == counts.max()
+    assert counts[0] > 2 * counts[-1]
+    emp = counts / counts.sum()
+    np.testing.assert_allclose(emp, w, atol=0.03)
+    # alpha=0 degenerates to uniform
+    u = traffic.zipf_weights(4, 0.0)
+    np.testing.assert_allclose(u, 0.25)
+
+
+def test_burst_windows_at_scheduled_offsets():
+    cfg = traffic.TrafficConfig(burst_every_s=4.0, burst_duration_s=1.0)
+    assert traffic.in_burst(0.5, cfg)
+    assert traffic.in_burst(4.2, cfg)
+    assert not traffic.in_burst(1.5, cfg)
+    assert not traffic.in_burst(3.99, cfg)
+    off = traffic.TrafficConfig(burst_duration_s=0.0)
+    assert not traffic.in_burst(0.0, off)
+
+
+def test_burst_density_exceeds_off_burst_density():
+    """Arrivals per second inside burst windows approach burst_rate_x
+    times the off-window density."""
+    cfg = traffic.TrafficConfig(seed=5, n_requests=3000, base_rate=10.0,
+                                burst_every_s=2.0, burst_duration_s=0.5,
+                                burst_rate_x=4.0)
+    reqs = traffic.generate(cfg)
+    span = reqs[-1].arrival_s
+    n_in = sum(1 for r in reqs if traffic.in_burst(r.arrival_s, cfg))
+    # window fraction of the timeline
+    frac = cfg.burst_duration_s / cfg.burst_every_s
+    t_in = span * frac
+    t_out = span * (1 - frac)
+    dens_in = n_in / t_in
+    dens_out = (len(reqs) - n_in) / t_out
+    assert dens_in > 2.0 * dens_out, (dens_in, dens_out)
+
+
+def test_summarize_counts_and_percentiles():
+    cfg = traffic.TrafficConfig(seed=0, n_requests=8)
+    reqs = traffic.generate(cfg)
+    for i, r in enumerate(reqs):
+        r.t_first_s = r.arrival_s + 0.1
+        r.t_done_s = r.arrival_s + 0.5
+        r.out_tokens.extend([1] * 3)
+    reqs[0].t_first_s = None            # never served -> excluded
+    s = traffic.summarize(reqs)
+    assert s["n_served"] == 7 and s["n_failed"] == 0
+    np.testing.assert_allclose(s["ttft_p50_s"], 0.1)
+    assert s["tokens"] == 21
+    assert s["tokens_per_s"] > 0
+    assert set(s["per_priority"]) <= {"0", "1"}
