@@ -11,9 +11,35 @@ Each experiment writes benchmarks/results/perf/<name>.json.
 
 from __future__ import annotations
 
-# XLA device count must be set before jax import (same rule as dryrun)
+# XLA device count must be set before jax import (same rule as dryrun) —
+# and scoped PER EXPERIMENT: the dry-run lowering experiments emulate the
+# full 512-chip production pod, the sharded serving sweep needs the
+# 8-device forced-host mesh, and everything else is single-device (a
+# forced 512-device view makes eager CPU jax dispatch pathologically
+# slow, which used to tax every serving/transport experiment).
 import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+import sys
+
+_POD_EXPS = ("compression_ablation", "rwkv_chunk", "llama4_prefill", "all")
+
+
+def _device_count_for(argv) -> int:
+    exp = None
+    for i, a in enumerate(argv):
+        if a == "--exp" and i + 1 < len(argv):
+            exp = argv[i + 1]
+        elif a.startswith("--exp="):
+            exp = a.split("=", 1)[1]
+    if exp in _POD_EXPS:
+        return 512
+    if exp == "sharded_serve":
+        return 8
+    return 1
+
+
+os.environ.setdefault(
+    "XLA_FLAGS",
+    f"--xla_force_host_platform_device_count={_device_count_for(sys.argv)}")
 
 import argparse
 import dataclasses
@@ -1081,6 +1107,118 @@ def exp_chaos_cdn(smoke: bool = False):
             < by[(1, None)]["ttft_cold_s"]), rec
 
 
+def exp_sharded_serve(smoke: bool = False):
+    """Tentpole measurement: the mesh-sharded serving engine swept over
+    mesh shapes on 8 forced host devices.
+
+    Per shape ``(expert, model)`` the same oversubscribed request stream
+    (10 requests into 4 slots — continuous admission exercised) is served
+    greedy AND seeded-sampled on paged KV, timed after a warm pass, and
+    compared token-for-token against the ``mesh=None`` single-device
+    engine.  Gates:
+
+    * **parity** — every swept shape reproduces the single-device token
+      streams bitwise, both sampling modes, admissions included;
+    * **balance** — per-shard resident expert counts stay within 2x on
+      every multi-shard shape (block partition of the stacked planes);
+    * the throughput-vs-mesh-shape curve is merged into
+      ``BENCH_serve.json`` (forced host devices share one CPU, so the
+      curve measures partitioning overhead, not speedup — the point is
+      the *shape* of the cost, and that parity holds while paying it).
+    """
+    import jax.numpy as jnp
+
+    from repro import api as capi
+    from repro.launch.mesh import make_serve_mesh
+    from repro.serve import Request
+
+    if len(jax.devices()) < 8:
+        raise SystemExit("sharded_serve needs 8 devices — run via "
+                         "`--exp sharded_serve` so the XLA flag is set "
+                         "before jax imports")
+
+    n_experts = 6
+    n_reqs = 10 if smoke else 16
+    max_batch = 4
+    max_new = 4 if smoke else 8
+    prompt_len = 12
+    api, rt, cfg, base, experts = _serve_fixture(n_experts=n_experts)
+    rng = np.random.default_rng(0)
+    prompts = [jnp.asarray(rng.integers(1, cfg.vocab, prompt_len), jnp.int32)
+               for _ in range(n_reqs)]
+
+    def mk_reqs():
+        return [Request(uid=i, expert=f"expert{i % n_experts}",
+                        prompt=prompts[i], max_new_tokens=max_new)
+                for i in range(n_reqs)]
+
+    SAMP = {"greedy": {},
+            "sampled": {"temperature": 0.8, "top_k": 5, "seed": 7}}
+
+    def engine(mesh, samp):
+        # fresh registry per engine: per-mesh device caches and stats
+        reg = capi.registry(experts=experts, device_cache_bytes=1 << 18,
+                            mesh=mesh)
+        return capi.serve(api, rt, base, reg, max_batch=max_batch,
+                          cache_len=64, decode_chunk=4, kv_layout="paged",
+                          kv_block_size=8, mesh=mesh, **samp)
+
+    shapes = [(1, 1), (2, 4)] if smoke else \
+        [(1, 1), (2, 1), (1, 2), (2, 2), (2, 4), (4, 2)]
+
+    base_toks = {}
+    for label, samp in SAMP.items():
+        reqs = mk_reqs()
+        engine(None, samp).run(reqs)
+        base_toks[label] = {r.uid: (r.status, list(r.out_tokens))
+                            for r in reqs}
+
+    rows, parity_all, balance_all = [], True, True
+    for shape in shapes:
+        mesh = make_serve_mesh(shape)
+        row = {"mesh": list(shape)}
+        summ = None
+        for label, samp in SAMP.items():
+            eng = engine(mesh, samp)
+            eng.run(mk_reqs())            # warm: compiles on this mesh
+            reqs = mk_reqs()
+            t0 = time.perf_counter()
+            eng.run(reqs)
+            dt = time.perf_counter() - t0
+            toks = {r.uid: (r.status, list(r.out_tokens)) for r in reqs}
+            ok = toks == base_toks[label]
+            parity_all = parity_all and ok
+            total = sum(len(t) for _, t in toks.values())
+            summ = eng.swap_summary()
+            row[label] = {"seconds": dt, "tok_s": total / dt, "parity": ok}
+        row["admitted"] = summ["admitted"]
+        if shape[0] > 1:
+            counts = [s["resident_experts"] for s in summ["shards"]]
+            row["resident_experts_per_shard"] = counts
+            balanced = max(counts) <= 2 * max(min(counts), 1)
+            balance_all = balance_all and balanced
+        rows.append(row)
+        print(f"[mesh={shape}] greedy={row['greedy']['tok_s']:7.1f} tok/s "
+              f"sampled={row['sampled']['tok_s']:7.1f} tok/s "
+              f"parity={row['greedy']['parity'] and row['sampled']['parity']}"
+              + (f" shards={row.get('resident_experts_per_shard')}"
+                 if shape[0] > 1 else ""))
+
+    rec = {"tag": "sharded_serve", "smoke": smoke, "n_experts": n_experts,
+           "n_reqs": n_reqs, "max_batch": max_batch,
+           "max_new_tokens": max_new, "kv_layout": "paged",
+           "rows": rows, "token_parity": parity_all,
+           "shard_balance_within_2x": balance_all}
+    save_raw("sharded_serve", [rec])
+    bench_update("BENCH_serve.json", "sharded_serve", rec)
+    print(f"sharded_serve: parity={parity_all} "
+          f"balance_within_2x={balance_all} over {len(shapes)} shapes")
+    assert parity_all, "a mesh shape diverged from the single-device engine"
+    assert balance_all, "per-shard resident counts exceeded 2x imbalance"
+    assert all(r["admitted"] > 0 for r in rows), \
+        "admission path not exercised"
+
+
 EXPS = {
     "compression_ablation": exp_compression_ablation,
     "rwkv_chunk": exp_rwkv_chunk,
@@ -1092,6 +1230,7 @@ EXPS = {
     "remote_fetch": exp_remote_fetch,
     "chaos_serve": exp_chaos_serve,
     "chaos_cdn": exp_chaos_cdn,
+    "sharded_serve": exp_sharded_serve,
 }
 
 

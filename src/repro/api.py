@@ -96,7 +96,7 @@ def registry(store=None, *, cold_golomb: bool = False,
              retry=None, quarantine_after: Optional[int] = None,
              quarantine_probe_s: Optional[float] = None,
              replicas=None, replication_factor: Optional[int] = None,
-             hedge_ms: Optional[float] = None,
+             hedge_ms: Optional[float] = None, mesh=None,
              experts: Sequence[Any] = ()) -> "ExpertRegistry":
     """A fresh :class:`~repro.serve.expert_cache.ExpertRegistry` (cold
     store + lazy HBM tier), optionally pre-populated with ``experts``.
@@ -126,6 +126,12 @@ def registry(store=None, *, cold_golomb: bool = False,
     mid-stream failover, and optional hedged reads after ``hedge_ms``
     (``None`` disables hedging).  A single-replica blackout then costs
     latency, not availability.
+
+    ``mesh=`` (a serving mesh from :func:`repro.launch.mesh.
+    make_serve_mesh`) makes the HBM tier expert-parallel: stacked
+    ``[E, ...]`` bitplane buffers are partitioned along the mesh's
+    ``expert`` axis and ``device_cache_bytes`` becomes a per-shard
+    budget.  ``mesh=None`` keeps the single-device tier byte-for-byte.
     """
     from repro.serve.expert_cache import (DEFAULT_DEVICE_BYTES,
                                           DEFAULT_QUARANTINE_AFTER,
@@ -136,7 +142,7 @@ def registry(store=None, *, cold_golomb: bool = False,
         cold_budget_bytes=cold_budget_bytes,
         device_cache_bytes=device_cache_bytes or DEFAULT_DEVICE_BYTES,
         retry=retry, replicas=replicas,
-        replication_factor=replication_factor, hedge_ms=hedge_ms,
+        replication_factor=replication_factor, hedge_ms=hedge_ms, mesh=mesh,
         quarantine_after=(DEFAULT_QUARANTINE_AFTER if quarantine_after is None
                           else quarantine_after),
         quarantine_probe_s=(DEFAULT_QUARANTINE_PROBE_S
@@ -181,6 +187,17 @@ def serve(model, rt, base_params: PyTree, reg, cfg=None,
     per-request ``FAILED`` status (``Request.status``/``Request.error``)
     while the rest of the wave serves normally; ``degrade="raise"``
     propagates the error instead.
+
+    ``mesh=`` (from :func:`repro.launch.mesh.make_serve_mesh`, axes
+    ``("expert", "model")``) puts the decode hot path on a device mesh:
+    base params go vocab-parallel and KV pools batch/block-sharded along
+    ``model``, the stacked bitplane buffers expert-parallel along
+    ``expert`` with ``device_cache_bytes`` reinterpreted as a per-shard
+    HBM budget (per-shard gauges land in ``swap_summary()["shards"]``).
+    Only dims where each output element is computed by exactly one device
+    are sharded, so greedy *and* seeded-sampled token streams are
+    bit-identical to ``mesh=None`` — which keeps today's single-device
+    path byte-for-byte.
     """
     import dataclasses
     from repro.serve.decode_loop import SamplingConfig

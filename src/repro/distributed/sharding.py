@@ -281,6 +281,92 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+# ---------------------------------------------------------------------------
+# Serving rules (mesh axes: ("expert", "model"))
+#
+# The serving engine's contract is *bitwise* parity with the single-device
+# path, which rules out any spec that shards a contraction dim (partial
+# sums + psum reorder f32 accumulation).  The rules below only shard dims
+# where every output element is still computed by exactly one device:
+#   - embed / lm_head: vocab-parallel along "model" (the all-gather the
+#     tentpole allows is exactly the logits gather this induces),
+#   - stacked [E, ...] bitplane buffers: expert-parallel along "expert"
+#     (each row contracts against exactly one expert's delta; pad experts
+#     carry zero scales so partial sums only ever add exact zeros),
+#   - KV caches: batch rows along "model" (rows are independent end to
+#     end), paged block pools along the block dim (pure gather/scatter).
+# Verified empirically on forced-host meshes up to (2, 4): full-TP rules
+# from param_pspec diverge (psum reorder), these stay bit-identical.
+# ---------------------------------------------------------------------------
+
+
+def serve_mesh_axes(mesh: Mesh) -> tuple[int, int]:
+    """(n_expert_shards, n_model_shards) of a serving mesh."""
+    shape = dict(mesh.shape)
+    return shape.get("expert", 1), shape.get("model", 1)
+
+
+def serve_param_pspec(path: str, shape: tuple, mesh: Mesh) -> P:
+    n_model = dict(mesh.shape).get("model", 1)
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf == "embed" and len(shape) >= 2 and shape[0] % n_model == 0:
+        return P("model", *([None] * (len(shape) - 1)))
+    if leaf in ("lm_head", "unembed") and len(shape) >= 2 \
+            and shape[-1] % n_model == 0:
+        return P(*([None] * (len(shape) - 1)), "model")
+    return P(*([None] * len(shape)))
+
+
+def serve_param_shardings(params: PyTree, mesh: Mesh) -> PyTree:
+    from repro.peft.lora import _path_str
+
+    def f(path, leaf):
+        return NamedSharding(mesh, serve_param_pspec(
+            _path_str(path), tuple(leaf.shape), mesh))
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def serve_stack_shardings(mesh: Mesh) -> tuple[NamedSharding, NamedSharding]:
+    """(plane_sharding, scale_sharding) for one stacked-plane entry.
+
+    Planes are ``[E, W]`` uint32 bitplanes (or ``[E, ...]`` dense deltas);
+    scales are ``[E]``.  Both shard dim 0 along "expert"; ``build_overlay``
+    propagates the expert axis onto every overlay leaf it stacks."""
+    return (NamedSharding(mesh, P("expert")),
+            NamedSharding(mesh, P("expert")))
+
+
+def serve_kv_sharding(mesh: Mesh, shape: tuple, *,
+                      layout: str = "dense") -> NamedSharding:
+    """Sharding for one 5-D KV buffer on the serving mesh.
+
+    dense  [U, B,  S,  Hkv, D]: shard batch rows along "model" — rows are
+           independent through attention, so this is exact.
+    paged  [U, NB, BS, Hkv, D]: shard the block pool along "model" — block
+           reads/writes are gathers/scatters, also exact.
+    Non-dividing dims fall back to replication (smoke configs are tiny)."""
+    n_model = dict(mesh.shape).get("model", 1)
+    if len(shape) == 5 and shape[1] % n_model == 0:
+        return NamedSharding(mesh, P(None, "model", None, None, None))
+    return NamedSharding(mesh, P(*([None] * len(shape))))
+
+
+def serve_cache_shardings(cache: PyTree, mesh: Mesh, *,
+                          layout: str = "dense") -> PyTree:
+    """Shardings for a whole decode-cache pytree: 5-D KV buffers get
+    :func:`serve_kv_sharding`; everything else (lens, starts, tables,
+    active flags) stays replicated — they are host-roundtripped scalars
+    and row vectors."""
+
+    def f(leaf):
+        if hasattr(leaf, "ndim") and leaf.ndim == 5:
+            return serve_kv_sharding(mesh, tuple(leaf.shape), layout=layout)
+        return NamedSharding(mesh, P(*([None] * getattr(leaf, "ndim", 0))))
+
+    return jax.tree_util.tree_map(f, cache)
+
+
 def train_state_shardings(state_shape: PyTree, cfg: ModelConfig,
                           mesh: Mesh) -> PyTree:
     """Shardings for a full TrainState (params / optimizer slots / EF).

@@ -14,6 +14,35 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+SERVE_AXES = ("expert", "model")
+
+
+def make_serve_mesh(shape=(1, 1)):
+    """Serving mesh: (expert, model).
+
+    The ``expert`` axis shards the stacked ``[E, ...]`` bitplane buffers
+    (each device group holds a contiguous block of the resident expert
+    set); the ``model`` axis shards the base model tensor-parallel along
+    dims where every output element is still computed by exactly one
+    device (vocab-parallel embed/lm_head, batch-sharded KV) so that token
+    streams stay bit-identical to the single-device engine.
+
+    ``shape=(1, 1)`` is a degenerate single-device mesh — useful for
+    exercising the mesh code path without multiple devices.
+    """
+    import jax
+
+    if len(shape) != 2:
+        raise ValueError(f"serve mesh shape must be (expert, model), got {shape!r}")
+    n = shape[0] * shape[1]
+    avail = len(jax.devices())
+    if n > avail:
+        raise ValueError(
+            f"serve mesh {shape} needs {n} devices but only {avail} are "
+            "visible (set --xla_force_host_platform_device_count for CPU)")
+    return jax.make_mesh(tuple(shape), SERVE_AXES)
+
+
 # TPU v5e hardware constants used by the roofline (benchmarks/roofline.py)
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

@@ -89,14 +89,14 @@ def build(cfg: ModelConfig) -> ModelApi:
         return loss, (logits_text, aux)
 
     def prefill_fn(params, batch, rt: Runtime, cache_len: int,
-                   delta=None, eid=None, start=None):
+                   delta=None, eid=None, start=None, kv_sharding=None):
         enc_out = None
         if is_encdec:
             enc_out = tf.encode(params, batch["frames"], cfg, rt)
         mm = batch.get("mm_embeds") if is_vlm else None
         return tf.prefill(params, batch["tokens"], cfg, rt, cache_len,
                           mm_embeds=mm, enc_out=enc_out, delta=delta,
-                          eid=eid, start=start)
+                          eid=eid, start=start, kv_sharding=kv_sharding)
 
     def decode_fn(params, token, cache, rt: Runtime, delta=None, eid=None):
         return tf.decode_step(params, token, cache, cfg, rt, delta=delta,

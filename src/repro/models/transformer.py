@@ -647,7 +647,8 @@ def _ring_fill(full: jax.Array, pos_abs: int, S: int):
 
 
 def prefill(params, tokens, cfg: ModelConfig, rt: Runtime, cache_len: int,
-            mm_embeds=None, enc_out=None, delta=None, eid=None, start=None):
+            mm_embeds=None, enc_out=None, delta=None, eid=None, start=None,
+            kv_sharding=None):
     """Run the full prompt, returning (last-token logits, filled cache).
 
     ``start`` (optional, [B] int32) marks each row's first real token:
@@ -655,6 +656,13 @@ def prefill(params, tokens, cfg: ModelConfig, rt: Runtime, cache_len: int,
     is carried in the cache (``cache["start"]``) so decode steps keep
     ignoring them.  Only meaningful for pure-attention stacks — recurrent
     blocks consume pad tokens through their state.
+
+    ``kv_sharding`` (optional, a ``NamedSharding`` over the serving mesh,
+    static under jit) constrains every 5-D cache buffer — KV rings, rwkv
+    state, cross-KV, all ``[U, B, ...]`` with batch at dim 1 — inside this
+    launch, so the wave's cache comes out batch-sharded without a
+    post-prefill reshard.  Rows are independent through decode, so this
+    placement cannot change any computed value.
     """
     x = embed_tokens(params, tokens, cfg, rt, mm_embeds, delta=delta,
                      eid=eid)
@@ -687,6 +695,15 @@ def prefill(params, tokens, cfg: ModelConfig, rt: Runtime, cache_len: int,
         cache["start"] = jnp.asarray(start, jnp.int32)
     if enc_out is not None:
         cache["cross"] = cross_cache_from_encoder(params, enc_out, cfg)
+    if kv_sharding is not None:
+        n = dict(kv_sharding.mesh.shape).get("model", 1)
+
+        def _place(leaf):
+            if getattr(leaf, "ndim", 0) == 5 and leaf.shape[1] % n == 0:
+                return jax.lax.with_sharding_constraint(leaf, kv_sharding)
+            return leaf
+
+        cache = jax.tree_util.tree_map(_place, cache)
     logits = logits_of(params, x[:, -1:], cfg, rt, delta=delta, eid=eid)
     return logits, cache
 

@@ -71,13 +71,20 @@ def row_keys(seed: int, uids) -> jax.Array:
 
 
 def select_tokens(logits: jax.Array, keys: jax.Array, gen: jax.Array,
-                  sampling: SamplingConfig) -> jax.Array:
+                  sampling: SamplingConfig, mesh=None) -> jax.Array:
     """logits [B, V] -> next token [B] int32, on device.
 
     ``gen`` is each row's position in its own token stream (number of
     tokens generated so far); token *i* is drawn with
     ``fold_in(keys[row], i)``, which makes sampled streams independent of
     chunk size and admission timing.
+
+    On a serving mesh the vocab-parallel lm_head leaves ``logits`` sharded
+    along V.  Greedy argmax is layout-invariant, but the PRNG behind
+    ``jax.random.categorical`` draws *different bits* when its operand is
+    sharded — so with ``mesh=`` the sampled path all-gathers the scaled
+    logits (the one collective the serve design allows) before drawing,
+    which restores the exact single-device bit stream.
     """
     logits = logits.astype(jnp.float32)
     if sampling.greedy:
@@ -86,16 +93,21 @@ def select_tokens(logits: jax.Array, keys: jax.Array, gen: jax.Array,
     if sampling.top_k and sampling.top_k < logits.shape[-1]:
         kth = lax.top_k(scaled, sampling.top_k)[0][..., -1:]
         scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        scaled = jax.lax.with_sharding_constraint(
+            scaled, NamedSharding(mesh, PartitionSpec(None, None)))
     step_keys = jax.vmap(jax.random.fold_in)(keys, gen.astype(jnp.uint32))
     draw = jax.vmap(lambda k, l: jax.random.categorical(k, l))
     return draw(step_keys, scaled).astype(jnp.int32)
 
 
-def make_token_select(sampling: SamplingConfig):
+def make_token_select(sampling: SamplingConfig, mesh=None):
     """Jitted first-token selector over prefill logits [B, T, V]."""
 
     def first(logits, keys, gen):
-        return select_tokens(logits[:, -1], keys, gen, sampling)[:, None]
+        return select_tokens(logits[:, -1], keys, gen, sampling,
+                             mesh=mesh)[:, None]
 
     return jax.jit(first)
 
@@ -109,7 +121,8 @@ def host_decode_steps(max_remaining: int, chunk: int) -> int:
     return min(chunk, max(max_remaining - 1, 0))
 
 
-def make_decode_chunk(api, rt, chunk: int, sampling: SamplingConfig):
+def make_decode_chunk(api, rt, chunk: int, sampling: SamplingConfig,
+                      mesh=None):
     """Compile the K-step wave loop body for one engine.
 
     Returns a jitted ``run(params, overlay, eid, tok, cache, remaining,
@@ -122,7 +135,18 @@ def make_decode_chunk(api, rt, chunk: int, sampling: SamplingConfig):
 
     One launch serves up to K tokens per row; the engine syncs once on the
     returned buffer, refills finished slots, and launches the next chunk.
+
+    ``mesh`` (a serving mesh, or None) pins the per-chunk host-visible
+    outputs — the pending token and the ``[B, K]`` emit buffer — to a
+    fully-replicated layout, so the engine's once-per-chunk sync reads one
+    local buffer instead of gathering token shards off every device.
+    Placement only: selected token *values* are unchanged.
     """
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        rep = NamedSharding(mesh, PartitionSpec())
+    else:
+        rep = None
 
     def run(params, overlay, eid, tok, cache, remaining, gen, keys):
         def body(carry, _):
@@ -141,7 +165,8 @@ def make_decode_chunk(api, rt, chunk: int, sampling: SamplingConfig):
                 tok, cache, gen = op
                 logits, cache = api.decode_step(params, tok, cache, rt,
                                                 delta=overlay, eid=eid)
-                nxt = select_tokens(logits[:, -1], keys, gen, sampling)
+                nxt = select_tokens(logits[:, -1], keys, gen, sampling,
+                                    mesh=mesh)
                 return nxt[:, None].astype(jnp.int32), cache, gen + 1
 
             # all-rows-done predicate ON DEVICE: once every budget is
@@ -153,7 +178,11 @@ def make_decode_chunk(api, rt, chunk: int, sampling: SamplingConfig):
 
         (tok, cache, _, _), buf = lax.scan(
             body, (tok, cache, remaining, gen), length=chunk)
-        return tok, cache, buf.T          # tokens as [B, K]
+        buf = buf.T                       # tokens as [B, K]
+        if rep is not None:
+            tok = jax.lax.with_sharding_constraint(tok, rep)
+            buf = jax.lax.with_sharding_constraint(buf, rep)
+        return tok, cache, buf
 
     # donate the KV cache (arg 4): the scan's functional updates then reuse
     # the same HBM buffers across all K steps and across chunk launches

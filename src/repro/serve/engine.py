@@ -114,6 +114,13 @@ class EngineConfig:
     # total pool blocks (incl. the reserved trash block); None sizes the
     # pool so a full batch at cache_len never blocks on allocation
     kv_blocks: Optional[int] = None
+    # serving mesh (repro.launch.mesh.make_serve_mesh, axes
+    # ("expert", "model")): base params go vocab-parallel, KV pools
+    # batch/block-sharded, stacked [E, ...] bitplanes expert-parallel —
+    # all along dims where every output element is computed by exactly
+    # one device, so token streams stay bit-identical to mesh=None.
+    # None keeps today's single-device placement byte-for-byte.
+    mesh: Optional[Any] = None
 
 
 class ServeEngine:
@@ -128,14 +135,33 @@ class ServeEngine:
         self.registry = as_registry(registry)
         self.store = self.registry.store
         self.cfg = ecfg
-        self.cache = self.registry.device(ecfg.device_cache_bytes)
+        self.mesh = ecfg.mesh
+        if self.mesh is not None:
+            axes = dict(self.mesh.shape)
+            if "expert" not in axes or "model" not in axes:
+                raise ValueError(
+                    "EngineConfig.mesh needs ('expert', 'model') axes "
+                    f"(make_serve_mesh); got {tuple(axes)}")
+            from repro.distributed import sharding as shard_rules
+            self._shard_rules = shard_rules
+            # vocab-parallel embed / lm_head; everything else replicated
+            # (contraction-dim TP would break bitwise parity — see the
+            # serve rules in distributed/sharding.py)
+            self.base = jax.device_put(
+                base_params,
+                shard_rules.serve_param_shardings(base_params, self.mesh))
+        self.cache = self.registry.device(ecfg.device_cache_bytes,
+                                          mesh=self.mesh)
         self._merged_name: Optional[str] = None
         self._merged_params: Optional[PyTree] = None
         self._plan = plan_overlay(base_params, api.cfg)
         self._overlays: dict[tuple, Any] = {}
         # the serve step functions are jitted once per (batch shape, overlay
-        # structure); rt and cache_len are static
-        self._prefill = jax.jit(api.prefill, static_argnums=(2, 3))
+        # structure); rt and cache_len are static — as is kv_sharding, a
+        # hashable NamedSharding the mesh path uses to place the wave's KV
+        # inside the prefill launch itself
+        self._prefill = jax.jit(api.prefill, static_argnums=(2, 3),
+                                static_argnames=("kv_sharding",))
         self._decode = jax.jit(api.decode_step, static_argnums=(3,))
         if ecfg.decode_chunk < 0:
             raise ValueError("decode_chunk must be >= 0")
@@ -174,9 +200,10 @@ class ServeEngine:
         if ecfg.kv_layout == "paged" and self._kv_blocks < 2:
             raise ValueError("kv_blocks must be >= 2 (block 0 is reserved)")
         self._chunk_fn = (decode_loop.make_decode_chunk(
-            api, rt, ecfg.decode_chunk, ecfg.sampling)
+            api, rt, ecfg.decode_chunk, ecfg.sampling, mesh=self.mesh)
             if ecfg.decode_chunk else None)
-        self._select = decode_loop.make_token_select(ecfg.sampling)
+        self._select = decode_loop.make_token_select(ecfg.sampling,
+                                                     mesh=self.mesh)
         self.swap_log: list = []
         self.wave_log: list = []
         self.failed_log: list[dict] = []
@@ -413,6 +440,21 @@ class ServeEngine:
                             jnp.int32)
         return toks, start
 
+    def _kv_sharding_for(self, batch: int):
+        """Static ``kv_sharding`` for a wave prefill: batch rows sharded
+        along the mesh's ``model`` axis when they divide evenly (rows are
+        independent end to end, so placement never changes a value).
+        None on the single-device path and for single-row admission
+        prefills — their KV is spliced/scattered into the wave cache,
+        which keeps its own placement."""
+        if self.mesh is None:
+            return None
+        n = dict(self.mesh.shape).get("model", 1)
+        if n <= 1 or batch % n != 0:
+            return None
+        return self._shard_rules.serve_kv_sharding(
+            self.mesh, (0, batch, 0, 0, 0))
+
     def _row_mask_ok(self) -> bool:
         # per-row left-pad masking needs every position to live in
         # attention KV state (recurrent blocks consume pads through their
@@ -562,7 +604,9 @@ class ServeEngine:
         cur = int(toks.shape[1])           # host mirror of cache["cur"]
         logits, cache = self._prefill(self.base, {"tokens": toks}, self.rt,
                                       self.cfg.cache_len, delta=overlay,
-                                      eid=eid, start=start)
+                                      eid=eid, start=start,
+                                      kv_sharding=self._kv_sharding_for(
+                                          len(wave)))
         keys = decode_loop.row_keys(self.cfg.sampling.seed,
                                     [r.uid for r in wave])
         tok = self._select(logits, keys, jnp.zeros((len(wave),), jnp.int32))
@@ -649,7 +693,9 @@ class ServeEngine:
         cur = int(toks.shape[1])           # host mirror of cache["cur"]
         logits, cache = self._prefill(self.base, {"tokens": toks}, self.rt,
                                       self.cfg.cache_len, delta=overlay,
-                                      eid=eid, start=start)
+                                      eid=eid, start=start,
+                                      kv_sharding=self._kv_sharding_for(
+                                          len(wave)))
         rows: list[Request] = list(wave)
         keys = decode_loop.row_keys(self.cfg.sampling.seed,
                                     [r.uid for r in rows])
@@ -794,7 +840,7 @@ class ServeEngine:
                                     [r.uid for r in wave])
         cache = paged_kv.init_paged_cache(self.api.cfg, len(wave),
                                           self._kv_blocks, self._bs,
-                                          self._max_blocks)
+                                          self._max_blocks, mesh=self.mesh)
         tok = jnp.zeros((len(wave), 1), jnp.int32)
         rows: list[Request] = list(wave)
         groups: dict[int, list] = defaultdict(list)
@@ -848,7 +894,9 @@ class ServeEngine:
         logits, cache = self._prefill(params, batch, self.rt,
                                       self.cfg.cache_len,
                                       start=(start if self._row_mask_ok()
-                                             else None))
+                                             else None),
+                                      kv_sharding=self._kv_sharding_for(
+                                          len(reqs)))
         if self.cfg.decode_chunk:
             return self._decode_batch_chunked(params, reqs, logits, cache)
         keys = decode_loop.row_keys(self.cfg.sampling.seed,
@@ -912,6 +960,9 @@ class ServeEngine:
         s["stack_hit_rate"] = hits / max(hits + builds, 1)
         s["scheduler"] = self._scheduler_stats()
         s["kv"] = self._kv_stats()
+        if self.mesh is not None:
+            s["mesh"] = dict(self.mesh.shape)
+            s["shards"] = self.cache.shard_summary()
         return s
 
     def _export_gauges(self) -> None:
@@ -925,3 +976,5 @@ class ServeEngine:
             "scheduler": self._scheduler_stats(),
             "kv": self._kv_stats(),
         }
+        if self.mesh is not None:
+            self.cache.gauges["shards"] = self.cache.shard_summary()

@@ -64,6 +64,8 @@ BASE = "__base__"   # pseudo-expert: serve the unmodified base weights
 
 DEFAULT_DEVICE_BYTES = 1 << 28
 
+_UNSET = object()   # "caller did not pass mesh=" sentinel (None is a value)
+
 DEFAULT_QUARANTINE_AFTER = 3     # consecutive fetch failures -> quarantine
 DEFAULT_QUARANTINE_PROBE_S = 30.0
 
@@ -121,6 +123,8 @@ class SwapStats:
                                      # of the transport's ledger)
     straggler_flags: int = 0        # promotions flagged slow vs the EWMA
     straggler_recommendation: str = "healthy"   # StragglerMonitor verdict
+    n_expert_shards: int = 1        # expert-parallel shards of the stacked
+                                    # planes (1 = single-device cache)
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -432,20 +436,35 @@ class DeviceCache:
     """LRU cache of *packed bitplane trees* under a byte budget (HBM
     residency of ComPEFT experts; 2 bits/param instead of dense deltas),
     plus stacked per-path plane buffers for mixed-expert batches.  Stack
-    bytes share the budget: over-capacity builds trigger eviction."""
+    bytes share the budget: over-capacity builds trigger eviction.
+
+    With ``mesh=`` (a serving mesh from :func:`repro.launch.mesh.
+    make_serve_mesh`) the stacked ``[E, ...]`` buffers are partitioned
+    expert-parallel along the mesh's ``expert`` axis: E is padded to a
+    multiple of the shard count with inert zero-scale slots, planes and
+    scales are placed with ``PartitionSpec("expert", ...)``, and
+    ``capacity_bytes`` becomes a **per-shard** budget — each device pays
+    its packed-tree replicas in full plus ``1/n_shards`` of every resident
+    stack, and eviction triggers when any shard's share exceeds the
+    budget.  ``mesh=None`` keeps the single-device accounting (shard count
+    1) byte-for-byte."""
 
     MAX_STACKS = 4       # LRU bound on distinct expert-set stacks kept resident
     PREFETCH_WORKERS = 4  # concurrent fetch→decode stages (pipeline depth)
 
-    def __init__(self, store: ExpertStore, capacity_bytes: int):
+    def __init__(self, store: ExpertStore, capacity_bytes: int, mesh=None):
         self.store = store
         self.capacity = capacity_bytes
+        self.mesh = mesh
+        self.n_shards = dict(mesh.shape).get("expert", 1) \
+            if mesh is not None else 1
+        self._stack_real: dict[tuple, int] = {}   # key -> unpadded E
         self._cache: OrderedDict[str, PyTree] = OrderedDict()
         self._sizes: dict[str, int] = {}
         self._stacks: OrderedDict[tuple, dict] = OrderedDict()
         self._pending: dict[str, Future] = {}
         self._pool: Optional[ThreadPoolExecutor] = None
-        self.stats = SwapStats()
+        self.stats = SwapStats(n_expert_shards=self.n_shards)
         # promotion-latency health: every fetch/decode stage (prefetch
         # worker or synchronous) feeds the EWMA; a stage much slower than
         # the running average is flagged and the monitor's
@@ -467,9 +486,18 @@ class DeviceCache:
         """Packed trees + stacked buffers — everything under the budget."""
         return sum(self._sizes.values()) + self.stats.stack_bytes
 
+    def shard_resident_bytes(self) -> int:
+        """Bytes resident on ONE expert shard: packed trees are replicated
+        (staging tier — every shard pays them in full), stacks are
+        partitioned evenly along E.  Equals :meth:`resident_bytes` on a
+        single-device cache, so budget checks reduce to today's."""
+        return sum(self._sizes.values()) \
+            + self.stats.stack_bytes // self.n_shards
+
     def _drop_stack(self, key: tuple) -> None:
         self.stats.stack_bytes -= stacked_bytes(self._stacks.pop(key))
         self.stats.stack_evictions += 1
+        self._stack_real.pop(key, None)
 
     def _evict_one(self) -> None:
         old, _ = self._cache.popitem(last=False)
@@ -484,7 +512,7 @@ class DeviceCache:
         their stack (the expert set being served right now)."""
         protect_key = tuple(protect)
         members = set(protect)
-        while self.resident_bytes() > self.capacity:
+        while self.shard_resident_bytes() > self.capacity:
             other_stacks = [k for k in self._stacks if k != protect_key]
             if other_stacks:
                 self._drop_stack(other_stacks[0])
@@ -593,7 +621,8 @@ class DeviceCache:
             jax.device_put, host_packed,
             is_leaf=lambda x: hasattr(x, "pos"))
         size = tree_packed_bytes(packed)
-        while self._cache and (self.resident_bytes() + size > self.capacity):
+        while self._cache and (self.shard_resident_bytes() + size
+                               > self.capacity):
             self._evict_one()
         self._cache[name] = packed
         self._sizes[name] = size
@@ -642,6 +671,9 @@ class DeviceCache:
         # fail loudly, exactly like the merge path's store.get
         trees = [{} if n == BASE else self.fetch(n) for n in key]
         stacks = stack_packed(trees)
+        self._stack_real[tuple(key)] = len(key)
+        if self.mesh is not None:
+            stacks = self._shard_stacks(stacks, len(key))
         while len(self._stacks) >= self.MAX_STACKS:
             self._drop_stack(next(iter(self._stacks)))
         self._stacks[key] = stacks
@@ -649,6 +681,52 @@ class DeviceCache:
         self.stats.stack_bytes += stacked_bytes(stacks)
         self._enforce_budget(protect=key)
         return stacks
+
+    def _shard_stacks(self, stacks: dict, n_real: int) -> dict:
+        """Partition stacked plane buffers expert-parallel along the mesh's
+        ``expert`` axis.  E is padded up to a multiple of the shard count
+        with zero planes and zero scales — inert slots: every grouped
+        contraction multiplies them by an exact 0.0, so the overlay math
+        (and therefore the token stream) is unchanged bit-for-bit."""
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        n = self.n_shards
+        pad = (-n_real) % n
+        plane_sh = NamedSharding(self.mesh, P("expert"))
+        out = {}
+        for path, (pos, neg, scales, shape) in stacks.items():
+            if pad:
+                zrow = jnp.zeros((pad,) + tuple(pos.shape[1:]), pos.dtype)
+                pos = jnp.concatenate([pos, zrow], axis=0)
+                neg = jnp.concatenate([neg, jnp.zeros_like(zrow)], axis=0)
+                scales = jnp.concatenate(
+                    [scales, jnp.zeros((pad,), scales.dtype)], axis=0)
+            out[path] = (jax.device_put(pos, plane_sh),
+                         jax.device_put(neg, plane_sh),
+                         jax.device_put(scales, plane_sh), shape)
+        return out
+
+    def shard_summary(self) -> list[dict]:
+        """Per-shard gauges for the expert-parallel stacks: how many *real*
+        (non-pad) experts of each resident stack live on each shard, and
+        the shard's byte accounting against its budget.  E rows are
+        block-partitioned, so shard ``s`` of a stack padded to ``Ep`` rows
+        holds rows ``[s*Ep/n, (s+1)*Ep/n)``."""
+        shards = [{"shard": s, "resident_experts": 0,
+                   "stack_bytes": self.stats.stack_bytes // self.n_shards,
+                   "tree_bytes": sum(self._sizes.values()),
+                   "capacity_bytes": self.capacity}
+                  for s in range(self.n_shards)]
+        for key in self._stacks:
+            n_real = self._stack_real.get(key, len(key))
+            n_pad = n_real + ((-n_real) % self.n_shards)
+            per = n_pad // self.n_shards
+            for s in range(self.n_shards):
+                lo, hi = s * per, (s + 1) * per
+                shards[s]["resident_experts"] += \
+                    max(0, min(hi, n_real) - lo)
+        return shards
 
     def has_stack(self, names: tuple) -> bool:
         """True while the stack for this expert set is still resident (an
@@ -684,7 +762,7 @@ class ExpertRegistry:
                  quarantine_after: int = DEFAULT_QUARANTINE_AFTER,
                  quarantine_probe_s: float = DEFAULT_QUARANTINE_PROBE_S,
                  replicas=None, replication_factor: Optional[int] = None,
-                 hedge_ms: Optional[float] = None):
+                 hedge_ms: Optional[float] = None, mesh=None):
         if store is not None and (transport is not None
                                   or replicas is not None):
             raise ValueError("pass either store= or transport=/replicas=, "
@@ -709,6 +787,7 @@ class ExpertRegistry:
             store.budget_bytes = cold_budget_bytes
         self.store = store
         self.device_cache_bytes = device_cache_bytes
+        self.mesh = mesh
         self._device: Optional[DeviceCache] = None
 
     # ---- library management -------------------------------------------
@@ -742,13 +821,22 @@ class ExpertRegistry:
         return self.store.nbytes(name)
 
     # ---- device tier ---------------------------------------------------
-    def device(self, capacity_bytes: Optional[int] = None) -> DeviceCache:
+    def device(self, capacity_bytes: Optional[int] = None,
+               mesh=_UNSET) -> DeviceCache:
         """The HBM tier (created on first call).  ``capacity_bytes=None``
         keeps the registry's configured budget; an explicit value sets (or
-        retargets) the budget — the most recent explicit request wins."""
+        retargets) the budget — the most recent explicit request wins.
+        ``mesh=`` defaults to the registry's mesh; passing a *different*
+        mesh rebuilds the tier (resident arrays are placed per-mesh, so
+        they cannot be carried across)."""
+        mesh = self.mesh if mesh is _UNSET else mesh
+        if self._device is not None and mesh is not self._device.mesh:
+            self._device.close()
+            self._device = None
         if self._device is None:
             self._device = DeviceCache(
-                self.store, capacity_bytes or self.device_cache_bytes)
+                self.store, capacity_bytes or self.device_cache_bytes,
+                mesh=mesh)
         elif (capacity_bytes is not None
               and capacity_bytes != self._device.capacity):
             self._device.capacity = capacity_bytes

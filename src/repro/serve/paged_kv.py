@@ -111,25 +111,40 @@ class BlockAllocator:
 
 
 def init_paged_cache(cfg: ModelConfig, batch: int, n_blocks: int,
-                     block_size: int, max_blocks: int, dtype=None) -> PyTree:
+                     block_size: int, max_blocks: int, dtype=None,
+                     mesh=None) -> PyTree:
     """Empty paged decode state (pure-attention patterns only).
 
     The returned dict is what :func:`repro.models.transformer.decode_step`
     dispatches on: the presence of ``"tables"`` selects the paged
     write/attend path and per-row positions (``lens``) instead of the
     dense ring buffer's shared scalar ``cur``.
+
+    With ``mesh=`` the per-layer block pools are partitioned along the
+    mesh's ``model`` axis on their block dim (each device owns a shard of
+    the pool; paged reads/writes are gathers/scatters, so sharding the
+    storage dim leaves the math bit-identical).  Tables / lens / start /
+    active stay replicated — they are host-roundtripped row vectors.
     """
     dtype = dtype or dtype_of(cfg)
+
+    def place(z):
+        if mesh is None:
+            return z
+        from repro.distributed.sharding import serve_kv_sharding
+        return jax.device_put(
+            z, serve_kv_sharding(mesh, tuple(z.shape), layout="paged"))
+
     layers = {}
     for i, b in enumerate(cfg.pattern):
         if b.kind != "attn":
             raise ValueError("paged KV covers pure-attention patterns only; "
                              f"block {i} is {b.kind!r}")
         layers[f"block{i}"] = {
-            "k": jnp.zeros((cfg.n_units, n_blocks, block_size, b.attn.n_kv,
-                            b.attn.head_dim), dtype),
-            "v": jnp.zeros((cfg.n_units, n_blocks, block_size, b.attn.n_kv,
-                            b.attn.head_dim), dtype),
+            "k": place(jnp.zeros((cfg.n_units, n_blocks, block_size,
+                                  b.attn.n_kv, b.attn.head_dim), dtype)),
+            "v": place(jnp.zeros((cfg.n_units, n_blocks, block_size,
+                                  b.attn.n_kv, b.attn.head_dim), dtype)),
         }
     return {
         "layers": layers,

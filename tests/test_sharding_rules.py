@@ -1,0 +1,161 @@
+"""Sharding-rule coverage across every registry architecture.
+
+Every parameter path of every arch must resolve to a PartitionSpec whose
+sharded dims divide evenly by the mesh extents they map to — on the
+production mesh, the multi-pod mesh, and under every combination of the
+``ShardingOverrides`` escape hatches (head_tp / expert_parallel).  The
+serving rules (``serve_param_pspec``) get the same treatment plus their
+semantic contract: only vocab-parallel embed / lm_head shard, everything
+else replicates.
+"""
+
+import dataclasses
+import math
+
+import jax
+import pytest
+
+from repro.configs.registry import ARCHS, get_config
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_serve_mesh
+from repro.models import build
+from repro.peft.lora import _path_str
+
+
+class FakeMesh:
+    """Shape-only stand-in: the spec rules read ``mesh.shape`` (a dict of
+    axis -> extent) and ``axis_names``; no devices needed."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+PROD = FakeMesh({"data": 16, "model": 16})
+PROD_POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+SERVE = FakeMesh({"expert": 2, "model": 4})
+
+
+def _extent(mesh, entry) -> int:
+    """Product of mesh extents one spec entry maps to."""
+    if entry is None:
+        return 1
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _axes_of(entry):
+    if entry is None:
+        return ()
+    return (entry,) if isinstance(entry, str) else tuple(entry)
+
+
+def _param_shapes(cfg):
+    api = build(cfg)
+    shapes = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    out = {}
+    jax.tree_util.tree_map_with_path(
+        lambda p, l: out.setdefault(_path_str(p), tuple(l.shape)), shapes)
+    return out
+
+
+def _check_spec(path, shape, spec, mesh):
+    assert len(spec) <= len(shape), \
+        f"{path}: spec {spec} longer than shape {shape}"
+    used = []
+    for i, entry in enumerate(tuple(spec)):
+        for a in _axes_of(entry):
+            assert a in mesh.shape, f"{path}: unknown mesh axis {a!r}"
+            assert a not in used, f"{path}: axis {a!r} used twice in {spec}"
+            used.append(a)
+        ext = _extent(mesh, entry)
+        assert shape[i] % ext == 0, (
+            f"{path}: dim {i} of {shape} not divisible by mesh extent "
+            f"{ext} ({spec})")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_specs_divide_evenly(arch):
+    cfg = get_config(arch)
+    shapes = _param_shapes(cfg)
+    assert shapes, f"{arch}: empty param tree"
+    for mesh in (PROD, PROD_POD):
+        for path, shape in shapes.items():
+            spec = sh.param_pspec(path, shape, cfg, mesh)
+            _check_spec(path, shape, spec, mesh)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_override_escape_hatches(arch):
+    """Every head_tp x expert_parallel combination must still produce
+    evenly-dividing specs — the escape hatches may change layouts, never
+    break them."""
+    cfg = get_config(arch)
+    shapes = _param_shapes(cfg)
+    for head_tp in (True, False):
+        for ep in (True, False):
+            c = dataclasses.replace(
+                cfg, sharding=dataclasses.replace(
+                    cfg.sharding, head_tp=head_tp, expert_parallel=ep))
+            for path, shape in shapes.items():
+                spec = sh.param_pspec(path, shape, c, PROD)
+                _check_spec(path, shape, spec, PROD)
+                if not head_tp and path.rsplit("/", 1)[-1] in (
+                        "wq", "wk", "wv", "bq", "bk", "bv"):
+                    assert "model" not in _flat_axes(spec), (
+                        f"{path}: head_tp=False must not shard heads over "
+                        f"'model' ({spec})")
+
+
+def _flat_axes(spec):
+    out = []
+    for entry in tuple(spec):
+        out.extend(_axes_of(entry))
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serve_param_specs(arch):
+    """Serving rules: vocab-parallel embed / lm_head only; every other
+    leaf fully replicated (the bitwise-parity contract forbids sharding
+    contraction dims)."""
+    cfg = get_config(arch)
+    shapes = _param_shapes(cfg)
+    for path, shape in shapes.items():
+        spec = sh.serve_param_pspec(path, shape, SERVE)
+        _check_spec(path, shape, spec, SERVE)
+        axes = _flat_axes(spec)
+        assert "expert" not in axes, \
+            f"{path}: base params must never shard over 'expert'"
+        leaf = path.rsplit("/", 1)[-1]
+        if leaf not in ("embed", "lm_head", "unembed"):
+            assert not axes, f"{path}: serve rules must replicate ({spec})"
+        elif axes:
+            assert axes == ["model"]
+            if leaf == "embed":
+                assert tuple(spec)[0] == "model" and shape[0] % 4 == 0
+            else:
+                assert tuple(spec)[-1] == "model" and shape[-1] % 4 == 0
+
+
+def test_serve_stack_and_kv_shardings():
+    """NamedSharding-producing serve helpers on a real (1, 1) mesh."""
+    mesh = make_serve_mesh((1, 1))
+    plane, scale = sh.serve_stack_shardings(mesh)
+    assert tuple(plane.spec) == ("expert",)
+    assert tuple(scale.spec) == ("expert",)
+
+    assert sh.serve_mesh_axes(mesh) == (1, 1)
+
+    dense = sh.serve_kv_sharding(mesh, (2, 4, 64, 2, 8), layout="dense")
+    assert tuple(dense.spec) == (None, "model", None, None, None)
+    # non-5D / non-dividing shapes fall back to full replication
+    odd = sh.serve_kv_sharding(mesh, (2, 3, 64), layout="dense")
+    assert all(e is None for e in tuple(odd.spec))
+
+    import numpy as np
+    cache = {"k": np.zeros((2, 4, 8, 2, 4)), "lens": np.zeros((4,)),
+             "cur": np.zeros(())}
+    placed = sh.serve_cache_shardings(cache, mesh, layout="paged")
+    assert tuple(placed["k"].spec) == (None, "model", None, None, None)
+    assert all(e is None for e in tuple(placed["lens"].spec))
