@@ -32,7 +32,7 @@ def _device_count_for(argv) -> int:
             exp = a.split("=", 1)[1]
     if exp in _POD_EXPS:
         return 512
-    if exp == "sharded_serve":
+    if exp in ("sharded_serve", "chaos_restart"):
         return 8
     return 1
 
@@ -1219,6 +1219,178 @@ def exp_sharded_serve(smoke: bool = False):
         "admission path not exercised"
 
 
+_RESTART_SCENARIOS = {
+    # engine kwargs per chaos_restart scenario; "mesh_shape" is popped and
+    # turned into a live mesh by _restart_setup
+    "dense_greedy": {},
+    "paged_sampled": {"kv_layout": "paged", "kv_block_size": 8,
+                      "temperature": 0.8, "top_k": 20, "seed": 7},
+    "paged_greedy_mesh": {"kv_layout": "paged", "kv_block_size": 8,
+                          "mesh_shape": (2, 4)},
+}
+
+
+def _restart_setup(scenario: str, smoke: bool, mesh_shape=None,
+                   fixture=None):
+    """Deterministic engine ingredients for one chaos_restart scenario.
+
+    Shared between the parent experiment and the SIGKILL child process
+    (``benchmarks/restart_child.py``): both sides must build the exact
+    same model, experts, registry and request stream so the journal +
+    snapshot written by the killed child replays cleanly in the parent.
+    ``mesh_shape`` overrides the scenario's default mesh — the parent
+    uses this to resume onto a DIFFERENT shape than the one that
+    crashed.  ``fixture`` reuses a prebuilt ``_serve_fixture(3)`` (the
+    parent amortises the model compile across scenarios and trials).
+    Returns ``(api, rt, base, reg, mk_reqs, engine_kw)``.
+    """
+    import jax.numpy as jnp
+
+    from repro import api as capi
+    from repro.serve import Request
+
+    kw = dict(_RESTART_SCENARIOS[scenario])
+    if mesh_shape is None:
+        mesh_shape = kw.pop("mesh_shape", None)
+    else:
+        kw.pop("mesh_shape", None)
+    n_experts = 3
+    n_reqs = 6 if smoke else 9
+    # max_new chosen so rows are mid-generation at the kill chunk: the
+    # run must cross the snapshot-REPLAY tier, not just journal +
+    # re-prefill (4 chunks per wave at decode_chunk=2, kill at 3)
+    max_new = 8 if smoke else 10
+    api, rt, cfg, base, experts = \
+        fixture if fixture is not None else _serve_fixture(n_experts)
+    rng = np.random.default_rng(0)
+    prompts = [jnp.asarray(rng.integers(1, cfg.vocab, 8), jnp.int32)
+               for _ in range(n_reqs)]
+
+    def mk_reqs():
+        return [Request(uid=i, expert=f"expert{i % n_experts}",
+                        prompt=prompts[i], max_new_tokens=max_new)
+                for i in range(n_reqs)]
+
+    reg_kw = {}
+    if mesh_shape is not None:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(tuple(mesh_shape))
+        kw["mesh"] = mesh
+        reg_kw["mesh"] = mesh
+    reg = capi.registry(experts=experts, **reg_kw)
+    engine_kw = dict(max_batch=4, cache_len=48, decode_chunk=2, **kw)
+    return api, rt, base, reg, mk_reqs, engine_kw
+
+
+def exp_chaos_restart(smoke: bool = False):
+    """Robustness gate: kill–restart recovery with bit-identical resume.
+
+    For each scenario (dense+greedy, paged+sampled, paged+greedy on a
+    (2,4) mesh) a child process serves the seeded stream with per-chunk
+    snapshots and ``SIGKILL``s itself from a chunk hook at a seeded
+    chunk index — no atexit, no flush-on-exit: whatever survives is what
+    the journal/snapshot machinery made durable.  The parent then
+    resumes from the child's snapshot directory in-process and gates:
+
+    * **kill** — the child really died by signal (``-SIGKILL``), having
+      journaled at least one chunk first;
+    * **parity** — every resumed request finishes with tokens
+      bit-identical to an uninterrupted in-process run (the mesh
+      scenario resumes onto a DIFFERENT shape, (4,2), than it crashed
+      on);
+    * **determinism** — a second kill–resume trial reproduces the same
+      tokens, statuses and recovery plan;
+    * **recovery time** — resume seconds and time-to-first-resumed-token
+      are recorded per trial and merged into ``BENCH_serve.json``.
+    """
+    import signal as _signal
+    import subprocess
+    import sys as _sys
+    import tempfile
+
+    from repro import api as capi
+    from repro.serve import DONE
+
+    if len(jax.devices()) < 8:
+        raise SystemExit("chaos_restart needs 8 devices — run via "
+                         "`--exp chaos_restart` so the XLA flag is set "
+                         "before jax imports")
+
+    child = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "restart_child.py")
+    kill_at = 3
+    n_trials = 2
+    resume_mesh = {"paged_greedy_mesh": (4, 2)}
+    fixture = _serve_fixture(n_experts=3)
+    rows, parity_all, determ_all = [], True, True
+
+    for scenario in _RESTART_SCENARIOS:
+        # uninterrupted baseline (scenario's own mesh shape)
+        api, rt, base, reg, mk_reqs, engine_kw = _restart_setup(
+            scenario, smoke, fixture=fixture)
+        reqs = mk_reqs()
+        capi.serve(api, rt, base, reg, **engine_kw).run(reqs)
+        assert all(r.status == DONE for r in reqs)
+        want = {r.uid: (r.status, list(r.out_tokens)) for r in reqs}
+        reg.close()
+
+        trials, outcomes = [], []
+        for trial in range(n_trials):
+            with tempfile.TemporaryDirectory() as snap_dir:
+                env = dict(os.environ)
+                env.pop("XLA_FLAGS", None)    # child picks its own count
+                proc = subprocess.run(
+                    [_sys.executable, child, snap_dir, scenario,
+                     str(kill_at), str(int(smoke))],
+                    env=env, capture_output=True, text=True, timeout=1800)
+                assert proc.returncode == -_signal.SIGKILL, (
+                    f"{scenario}: child survived or failed "
+                    f"(rc={proc.returncode})\n{proc.stdout}\n{proc.stderr}")
+
+                api, rt, base, reg, mk_reqs, engine_kw = _restart_setup(
+                    scenario, smoke,
+                    mesh_shape=resume_mesh.get(scenario), fixture=fixture)
+                eng = capi.serve(api, rt, base, reg, snapshot_dir=snap_dir,
+                                 snapshot_every_chunks=1, **engine_kw)
+                out = eng.resume()
+                reg.close()
+            got = {r.uid: (r.status, list(r.out_tokens)) for r in out}
+            plan = eng.recovery_stats["plan"]
+            ok = got == want
+            parity_all = parity_all and ok
+            outcomes.append((sorted(got.items()), plan.as_dict()))
+            trials.append({
+                "parity": ok,
+                "resume_seconds": eng.recovery_stats["resume_seconds"],
+                "first_resumed_token_s":
+                    eng.recovery_stats.get("first_resumed_token_s"),
+                **plan.as_dict()})
+        deterministic = outcomes[0] == outcomes[-1]
+        determ_all = determ_all and deterministic
+        row = {"scenario": scenario, "kill_at": kill_at,
+               "resume_mesh": list(resume_mesh.get(scenario) or []),
+               "trials": trials, "deterministic": deterministic}
+        rows.append(row)
+        t = trials[0]
+        print(f"[{scenario:>18s}] parity={t['parity']} "
+              f"resume={t['resume_seconds']:.2f}s "
+              f"first_tok={t['first_resumed_token_s']:.2f}s "
+              f"replayed={t['replayed_rows']} "
+              f"reprefilled={t['reprefilled_rows']} "
+              f"deterministic={deterministic}")
+
+    rec = {"tag": "chaos_restart", "smoke": smoke, "kill_at": kill_at,
+           "n_trials": n_trials, "scenarios": rows,
+           "token_parity": parity_all, "deterministic": determ_all}
+    save_raw("chaos_restart", [rec])
+    bench_update("BENCH_serve.json", "chaos_restart", rec)
+    assert parity_all, "a resumed run diverged from the uninterrupted run"
+    assert determ_all, "kill-resume trials were not deterministic"
+    assert all(t["replayed_rows"] > 0
+               for row in rows for t in row["trials"]), \
+        "snapshot-replay tier never exercised (rows all re-prefilled)"
+
+
 EXPS = {
     "compression_ablation": exp_compression_ablation,
     "rwkv_chunk": exp_rwkv_chunk,
@@ -1231,6 +1403,7 @@ EXPS = {
     "chaos_serve": exp_chaos_serve,
     "chaos_cdn": exp_chaos_cdn,
     "sharded_serve": exp_sharded_serve,
+    "chaos_restart": exp_chaos_restart,
 }
 
 

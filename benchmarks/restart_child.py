@@ -1,0 +1,52 @@
+"""SIGKILL child for ``perf_lab --exp chaos_restart``.
+
+Serves one chaos_restart scenario with per-chunk snapshots, then kills
+its own process — ``SIGKILL``, so no atexit handler, no buffered flush,
+no __del__ runs — from a chunk hook at the requested chunk index.  The
+parent asserts the death was by signal and resumes from whatever the
+journal/snapshot machinery made durable before the kill.
+
+Usage: ``restart_child.py <snapshot_dir> <scenario> <kill_at> <smoke>``
+
+Exits 3 if the run completes without being killed (kill_at was past the
+end of the workload) so the parent can distinguish that from a crash.
+"""
+
+import os
+import signal
+import sys
+
+
+def main() -> int:
+    snap_dir, scenario, kill_at, smoke = sys.argv[1:5]
+    kill_at = int(kill_at)
+    smoke = bool(int(smoke))
+
+    # Env BEFORE jax (via perf_lab) imports: the mesh scenario needs 8
+    # forced host devices, everything else runs single-device.
+    ndev = 8 if "mesh" in scenario else 1
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={ndev}"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+    from benchmarks.perf_lab import _restart_setup
+
+    from repro import api as capi
+
+    api, rt, base, reg, mk_reqs, engine_kw = _restart_setup(scenario, smoke)
+    eng = capi.serve(api, rt, base, reg, snapshot_dir=snap_dir,
+                     snapshot_every_chunks=1, **engine_kw)
+
+    def die(i):
+        if i == kill_at:
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    eng.chunk_hooks.append(die)
+    eng.run(mk_reqs())
+    return 3          # survived: kill_at never fired
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -198,10 +198,27 @@ def serve(model, rt, base_params: PyTree, reg, cfg=None,
     are sharded, so greedy *and* seeded-sampled token streams are
     bit-identical to ``mesh=None`` — which keeps today's single-device
     path byte-for-byte.
+
+    ``snapshot_dir=`` arms crash consistency: every ``run()`` writes an
+    append-only CRC-framed journal there (admissions, scheduler
+    decisions, per-chunk tokens — flushed at every chunk boundary), and
+    ``snapshot_every_chunks=N`` additionally commits an atomic engine
+    snapshot (KV cache + pending tokens + allocator state) every N
+    compiled chunks.  ``resume=True`` rebuilds a killed run instead of
+    returning an idle engine: the engine replays the journal, restores
+    the latest snapshot, refetches evicted experts through the normal
+    registry tiers, re-runs prefill for rows whose KV postdates the
+    snapshot, and continues every in-flight request **bit-identically**
+    (greedy and seeded-sampled, dense and paged, on any mesh shape) —
+    results land in ``engine.resumed_requests`` and timing in
+    ``engine.recovery_stats``.  Engine latency accounting is
+    ``time.monotonic()``-based (NTP-immune); each request carries one
+    epoch stamp, ``Request.t_wall``, for external correlation.
     """
     import dataclasses
     from repro.serve.decode_loop import SamplingConfig
     from repro.serve.engine import EngineConfig, ServeEngine
+    do_resume = engine_kw.pop("resume", False)
     samp_kw = {k: engine_kw.pop(k)
                for k in ("temperature", "top_k", "seed") if k in engine_kw}
     if samp_kw:
@@ -214,7 +231,10 @@ def serve(model, rt, base_params: PyTree, reg, cfg=None,
         cfg = EngineConfig(**engine_kw)
     elif engine_kw:
         cfg = dataclasses.replace(cfg, **engine_kw)
-    return ServeEngine(model, rt, base_params, reg, cfg)
+    eng = ServeEngine(model, rt, base_params, reg, cfg)
+    if do_resume:
+        eng.resume()
+    return eng
 
 
 def load(path: str, name: Optional[str] = None) -> Expert:

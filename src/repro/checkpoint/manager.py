@@ -50,13 +50,23 @@ def _to_numpy(x) -> tuple[np.ndarray, str]:
     return arr, str(arr.dtype)
 
 
-def save(state: PyTree, ckpt_dir: str, step: int) -> str:
-    """Write an exact checkpoint; atomic via tmp+rename.  Returns path."""
+def save(state: PyTree, ckpt_dir: str, step: int,
+         extra_meta: Optional[dict] = None) -> str:
+    """Write an exact checkpoint; atomic via tmp+rename.  Returns path.
+
+    ``extra_meta`` (JSON-serializable) rides inside ``manifest.json`` —
+    under the same atomic rename as the arrays, so consumers that need
+    host-side metadata committed *with* the arrays (serve snapshots:
+    row/slot composition, allocator free lists) never observe one
+    without the other.
+    """
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = path + ".tmp"
     os.makedirs(tmp, exist_ok=True)
     flat, _ = jax.tree_util.tree_flatten_with_path(state)
     manifest = {"step": step, "leaves": []}
+    if extra_meta is not None:
+        manifest["extra"] = extra_meta
     arrays = {}
     for i, (p, leaf) in enumerate(flat):
         ps = _path_str(p)
@@ -111,6 +121,31 @@ def restore(like: PyTree, ckpt_dir: str, step: Optional[int] = None,
         else:
             out.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def load_raw(ckpt_dir: str, step: Optional[int] = None
+             ) -> tuple[dict, dict]:
+    """-> (manifest, {leaf path: np.ndarray}) without a ``like`` tree.
+
+    For consumers that reconstruct structure from the manifest itself
+    (serve snapshots restore into an engine that was never prefilled, so
+    there is no live pytree to mirror).  bf16 leaves come back as
+    bfloat16 ndarrays, exactly as :func:`restore` would produce them.
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    out = {}
+    for leaf in manifest["leaves"]:
+        arr = data[leaf["key"]]
+        if leaf["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        out[leaf["path"]] = arr
+    return manifest, out
 
 
 def _gc(ckpt_dir: str, keep: int) -> None:

@@ -11,6 +11,7 @@ asserts exactly that (tests/test_fault_tolerance.py).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Optional, Sequence
@@ -43,15 +44,21 @@ class StragglerMonitor:
     slowdown_threshold: flag a step slower than threshold x EWMA.
     """
 
+    MAX_FLAGGED = 256        # ring cap: week-long runs must not leak
+
     alpha: float = 0.2
     slowdown_threshold: float = 2.0
     ewma: Optional[float] = None
     flagged_steps: list = dataclasses.field(default_factory=list)
+    flags: int = 0           # total flag count (survives the ring cap)
 
     def observe(self, step: int, seconds: float) -> bool:
         is_straggler = (self.ewma is not None
                         and seconds > self.slowdown_threshold * self.ewma)
         if is_straggler:
+            self.flags += 1
+            if len(self.flagged_steps) >= self.MAX_FLAGGED:
+                del self.flagged_steps[0]
             self.flagged_steps.append((step, seconds, self.ewma))
         # stragglers don't poison the EWMA
         if not is_straggler:
@@ -60,10 +67,21 @@ class StragglerMonitor:
                          + (1 - self.alpha) * self.ewma)
         return is_straggler
 
+    @contextlib.contextmanager
+    def probe(self, step: int):
+        """Time a step with the monotonic clock and observe it.  EWMA
+        probes must never see a wall-clock jump (NTP slew, manual reset)
+        as a straggler — ``time.monotonic`` is immune by definition."""
+        t0 = time.monotonic()
+        try:
+            yield
+        finally:
+            self.observe(step, time.monotonic() - t0)
+
     def recommendation(self) -> str:
-        if len(self.flagged_steps) >= 3:
+        if self.flags >= 3:
             return "exclude-host-and-reshard"
-        if self.flagged_steps:
+        if self.flags:
             return "monitor"
         return "healthy"
 
@@ -82,3 +100,26 @@ class ElasticPlan:
     def valid(self) -> bool:
         # any mesh works as long as batch divides the new dp extent
         return all(x > 0 for x in self.new_shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPlan:
+    """Serve-side restart accounting (snapshot → journal → replay).
+
+    The serving analogue of :class:`ElasticPlan`: a killed engine
+    resumes when (1) the journal names every request and every emitted
+    token, (2) the snapshot restores the in-flight wave's KV at a chunk
+    boundary, and (3) streams are pure functions of (seed, uid, draw
+    index) so everything past the restored state regenerates
+    bit-identically — on any mesh shape, since snapshot arrays are
+    logical.  ``ServeEngine.resume`` returns one of these in
+    ``recovery_stats["plan"]``.
+    """
+
+    snapshot_step: Optional[int]   # restored snapshot (None = journal-only)
+    journal_records: int           # intact WAL records replayed
+    replayed_rows: int             # rows continued from restored KV
+    reprefilled_rows: int          # rows whose KV postdated the snapshot
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)

@@ -4,10 +4,13 @@ from repro.serve.engine import (DONE, FAILED, PENDING, EngineConfig, Request,
 from repro.serve.expert_cache import (DeviceCache, ExpertRegistry, ExpertStore,
                                       ExpertUnavailable, RemoteExpertStore,
                                       SwapStats, uncompressed_baseline_bytes)
+from repro.serve.journal import (JournalState, JournalWriter, read_records,
+                                 replay)
 from repro.serve.paged_kv import BlockAllocator, blocks_for, init_paged_cache
 from repro.serve.scheduler import (SCHEDULERS, AffinityScheduler,
                                    FIFOScheduler, PriorityScheduler,
                                    make_scheduler)
+from repro.serve.snapshot import Snapshot, load_snapshot, write_snapshot
 
 __all__ = ["EngineConfig", "Request", "ServeEngine", "DeviceCache",
            "ExpertRegistry", "ExpertStore", "ExpertUnavailable",
@@ -15,4 +18,6 @@ __all__ = ["EngineConfig", "Request", "ServeEngine", "DeviceCache",
            "PENDING", "DONE", "FAILED", "uncompressed_baseline_bytes",
            "BlockAllocator", "blocks_for", "init_paged_cache",
            "FIFOScheduler", "PriorityScheduler", "AffinityScheduler",
-           "SCHEDULERS", "make_scheduler"]
+           "SCHEDULERS", "make_scheduler",
+           "JournalState", "JournalWriter", "read_records", "replay",
+           "Snapshot", "load_snapshot", "write_snapshot"]

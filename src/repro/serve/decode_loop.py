@@ -62,6 +62,20 @@ class SamplingConfig:
     def greedy(self) -> bool:
         return self.temperature <= 0.0
 
+    def to_meta(self) -> dict:
+        """JSON round-trip for the serve journal.  The sampled-stream
+        contract is exactly these three numbers — per-row streams are
+        pure functions of ``(seed, uid, draw index)`` under a fixed
+        (temperature, top_k) — so resume() can refuse a mismatched
+        engine before emitting a single token."""
+        return {"temperature": self.temperature, "top_k": self.top_k,
+                "seed": self.seed}
+
+    @classmethod
+    def from_meta(cls, d: dict) -> "SamplingConfig":
+        return cls(temperature=float(d["temperature"]),
+                   top_k=int(d["top_k"]), seed=int(d["seed"]))
+
 
 def row_keys(seed: int, uids) -> jax.Array:
     """Per-request PRNG keys [B, 2]: ``fold_in(PRNGKey(seed), uid)``."""

@@ -36,19 +36,23 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
 import time
-from collections import defaultdict
+from collections import defaultdict, deque
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.fault import RecoveryPlan
 from repro.models.delta import build_overlay, plan_overlay
 from repro.models.model import ModelApi
 from repro.models.transformer import Runtime
 from repro.serve import decode_loop, paged_kv
+from repro.serve import journal as journal_mod
 from repro.serve import scheduler as scheduler_mod
+from repro.serve import snapshot as snapshot_mod
 from repro.serve.decode_loop import SamplingConfig
 from repro.serve.expert_cache import (BASE, DeviceCache, ExpertRegistry,
                                       ExpertStore, ExpertUnavailable,
@@ -74,9 +78,13 @@ class Request:
     status: str = PENDING      # PENDING -> DONE | FAILED
     error: Optional[str] = None   # detail when status == FAILED
     # --- scheduling / SLO metadata (engine clock = seconds since run()) ---
+    # All engine timing below is time.monotonic() based (immune to NTP
+    # slew / wall-clock resets); t_wall is the ONE epoch stamp per
+    # request, taken at run() entry, for correlating with external logs.
     priority: int = 1          # lower value = more urgent class
     deadline_s: Optional[float] = None   # absolute SLO deadline (EDF tiebreak)
     arrival_s: float = 0.0     # open-loop arrival offset; 0 = already queued
+    t_wall: Optional[float] = None       # epoch seconds at arrival
     t_admit_s: Optional[float] = None    # first placed into a wave
     t_first_s: Optional[float] = None    # first token selected (TTFT anchor)
     t_done_s: Optional[float] = None     # generation budget exhausted
@@ -121,6 +129,13 @@ class EngineConfig:
     # one device, so token streams stay bit-identical to mesh=None.
     # None keeps today's single-device placement byte-for-byte.
     mesh: Optional[Any] = None
+    # crash consistency: a directory arms the write-ahead journal
+    # (repro.serve.journal) for every run() and receives periodic
+    # engine snapshots (repro.serve.snapshot); snapshot_every_chunks=N
+    # commits one atomic snapshot every N compiled chunks (0 = journal
+    # only — resume then replays from the prompt instead of from KV)
+    snapshot_dir: Optional[str] = None
+    snapshot_every_chunks: int = 0
 
 
 class ServeEngine:
@@ -199,19 +214,40 @@ class ServeEngine:
                            else ecfg.max_batch * self._max_blocks + 1)
         if ecfg.kv_layout == "paged" and self._kv_blocks < 2:
             raise ValueError("kv_blocks must be >= 2 (block 0 is reserved)")
+        if ecfg.snapshot_dir is not None and not ecfg.decode_chunk:
+            raise ValueError("snapshot_dir needs the compiled decode loop "
+                             "(journal/snapshot commit at chunk "
+                             "boundaries); set decode_chunk > 0")
+        if ecfg.snapshot_every_chunks < 0:
+            raise ValueError("snapshot_every_chunks must be >= 0")
+        if ecfg.snapshot_every_chunks and ecfg.snapshot_dir is None:
+            raise ValueError("snapshot_every_chunks needs snapshot_dir")
         self._chunk_fn = (decode_loop.make_decode_chunk(
             api, rt, ecfg.decode_chunk, ecfg.sampling, mesh=self.mesh)
             if ecfg.decode_chunk else None)
         self._select = decode_loop.make_token_select(ecfg.sampling,
                                                      mesh=self.mesh)
-        self.swap_log: list = []
-        self.wave_log: list = []
-        self.failed_log: list[dict] = []
+        # bounded rings: a long-lived engine must not grow host memory
+        # with its own accounting.  Evictions are counted per ring and
+        # surfaced via swap_summary()["log_dropped"]; counters that must
+        # survive eviction (failed_total) are kept separately.
+        self.swap_log: deque = deque(maxlen=512)
+        self.wave_log: deque = deque(maxlen=4096)
+        self.failed_log: deque = deque(maxlen=1024)
+        self.failed_total = 0
+        self._log_dropped = {"swap": 0, "wave": 0, "failed": 0}
         self._sched = None                  # last run's scheduler instance
-        self._t0 = time.perf_counter()      # run() resets; engine clock zero
+        self._t0 = time.monotonic()         # run() resets; engine clock zero
         self._adm_wait: dict[int, list] = defaultdict(list)
         self._kv_peak = 0                   # peak pool blocks in use
         self._kv_in_use = 0
+        # --- crash consistency (repro.serve.journal / .snapshot) ---
+        self._journal = None                # JournalWriter while run() lives
+        self._chunk_idx = 0                 # global chunk counter = snap step
+        self.chunk_hooks: list = []         # fired(chunk_idx) after a flush
+        self._recovery_t0: Optional[float] = None
+        self.recovery_stats: dict = {}
+        self.resumed_requests: list = []
 
     # ---------------- expert management ----------------
 
@@ -226,12 +262,12 @@ class ServeEngine:
             return self.base
         if self._merged_name == expert:
             return self._merged_params
-        t0 = time.perf_counter()
+        t0 = time.monotonic()
         params = self.registry.merged_params(self.base, [expert])
         self._merged_name = expert
         self._merged_params = params
-        self.swap_log.append({"expert": expert,
-                              "seconds": time.perf_counter() - t0})
+        self._ring_append("swap", {"expert": expert,
+                                   "seconds": time.monotonic() - t0})
         return params
 
     def merged_ensemble_params(self, experts: list[str],
@@ -277,29 +313,325 @@ class ServeEngine:
         for r in reqs:
             r.status = FAILED
             r.error = str(err)
-            self.failed_log.append({"uid": r.uid, "expert": r.expert,
-                                    "error": str(err)})
+            self.failed_total += 1
+            self._ring_append("failed", {"uid": r.uid, "expert": r.expert,
+                                         "error": str(err)})
+            self._journal_append("fail", {"uid": r.uid, "expert": r.expert,
+                                          "error": str(err)}, flush=True)
+
+    # ---------------- bounded accounting rings ----------------
+
+    def _ring_append(self, name: str, item: dict) -> None:
+        """Append to one of the bounded logs, counting evictions (the
+        ``log_dropped`` gauge) so a capped ring is never mistaken for a
+        complete history."""
+        ring = getattr(self, f"{name}_log")
+        if getattr(ring, "maxlen", None) is not None \
+                and len(ring) == ring.maxlen:
+            self._log_dropped[name] += 1
+        ring.append(item)
+
+    # ---------------- write-ahead journal ----------------
+
+    def _journal_append(self, kind: str, data: dict,
+                        flush: bool = False) -> None:
+        if self._journal is not None:
+            self._journal.append(kind, data, t=self._now())
+            if flush:
+                self._journal.flush()
+
+    def _journal_admit(self, r: Request, j: int) -> None:
+        self._journal_append("admit", {
+            "uid": r.uid, "expert": r.expert, "slot": j,
+            "arrival_s": r.arrival_s,
+            "prompt_len": int(r.prompt.shape[0])})
+
+    def _run_meta(self, requests: list[Request], mode: str) -> dict:
+        """run_start payload: everything needed to rebuild every Request
+        from the journal alone (prompts included — a resumed process has
+        no other source for them)."""
+        return {
+            "sampling": self.cfg.sampling.to_meta(),
+            "scheduler": self.cfg.scheduler,
+            "scheduling": mode,
+            "kv_layout": self.cfg.kv_layout,
+            "decode_chunk": self.cfg.decode_chunk,
+            "max_batch": self.cfg.max_batch,
+            "cache_len": self.cfg.cache_len,
+            "wall": time.time(),
+            "requests": [{
+                "uid": r.uid, "expert": r.expert,
+                "prompt": [int(t) for t in np.asarray(r.prompt)],
+                "max_new": r.max_new_tokens, "priority": r.priority,
+                "deadline_s": r.deadline_s, "arrival_s": r.arrival_s,
+                "t_wall": r.t_wall,
+            } for r in requests],
+        }
+
+    def _open_journal(self, requests: list[Request], mode: str) -> None:
+        if self.cfg.snapshot_dir is None:
+            return
+        path = os.path.join(self.cfg.snapshot_dir,
+                            journal_mod.JOURNAL_NAME)
+        self._journal = journal_mod.JournalWriter(path, fresh=True)
+        self._journal.append("run_start", self._run_meta(requests, mode))
+        self._journal.sync()
+
+    def _close_journal(self) -> None:
+        if self._journal is not None:
+            self._journal.close()
+            self._journal = None
 
     # ---------------- serving loop ----------------
 
     def run(self, requests: list[Request],
             scheduling: Optional[str] = None) -> list[Request]:
-        self._t0 = time.perf_counter()     # engine clock zero for arrivals
+        self._t0 = time.monotonic()     # engine clock zero for arrivals
+        wall = time.time()              # the one epoch stamp per run
+        for r in requests:
+            if r.t_wall is None:
+                r.t_wall = wall + r.arrival_s
         mode = scheduling or self.cfg.scheduling
-        if mode == "grouped":
-            self._run_grouped(requests)
-        else:
-            self._run_mixed(requests)
+        self._open_journal(requests, mode)
+        try:
+            if mode == "grouped":
+                self._run_grouped(requests)
+            else:
+                self._run_mixed(requests)
+            for r in requests:
+                if r.status == PENDING:
+                    r.status = DONE
+            self._journal_append("run_end", {"requests": len(requests)},
+                                 flush=True)
+        finally:
+            self._close_journal()
+        self._export_gauges()
+        return requests
+
+    # ---------------- kill–restart recovery ----------------
+
+    def resume(self) -> list[Request]:
+        """Recover a killed run from ``snapshot_dir``'s journal (+ latest
+        snapshot, if any) and serve it to completion.
+
+        The determinism foundation makes this exact: every row's token
+        stream is a pure function of (sampling seed, uid, draw index)
+        plus prompt and expert — invariant to chunk size, admission
+        timing, KV layout and mesh shape.  So recovery is:
+
+        1. replay the journal → which requests existed, what each had
+           emitted, which finished/failed (``run_end`` absent = crash);
+        2. restore the last snapshot's wave (KV + pending token at a
+           chunk boundary, allocator free list on the paged path) and
+           continue it — the regenerated tail is verified against the
+           journaled suffix;
+        3. every other incomplete request re-serves from its prompt
+           (its KV postdates the snapshot, or it was never admitted) —
+           bit-identical because streams are uid-keyed.
+
+        Experts are refetched through the normal registry tiers (an
+        unavailable expert degrades to per-request FAILED, exactly like
+        live serving).  The resumed run does NOT journal or snapshot —
+        single-crash tolerance; re-arm with a fresh ``run()``.  Returns
+        the rebuilt request list; ``recovery_stats`` carries timing and
+        the :class:`~repro.distributed.fault.RecoveryPlan`.
+        """
+        cfg = self.cfg
+        if cfg.snapshot_dir is None:
+            raise ValueError("resume() needs EngineConfig.snapshot_dir")
+        if self._plan is None:
+            raise ValueError("resume() supports the mixed overlay path "
+                             "only (this model family is not coverable)")
+        t_resume0 = time.monotonic()
+        self._recovery_t0 = t_resume0
+        self.recovery_stats = {}
+        path = os.path.join(cfg.snapshot_dir, journal_mod.JOURNAL_NAME)
+        state = journal_mod.replay(path)
+        meta = state.meta
+        if SamplingConfig.from_meta(meta["sampling"]) != cfg.sampling:
+            raise ValueError(
+                "resume(): sampling mismatch — journaled "
+                f"{meta['sampling']}, engine {cfg.sampling.to_meta()}; "
+                "token streams would diverge")
+        if meta.get("scheduling") == "grouped":
+            raise ValueError("resume() supports mixed scheduling only")
+        if meta["scheduler"] != cfg.scheduler:
+            raise ValueError(f"resume(): scheduler mismatch — journaled "
+                             f"{meta['scheduler']!r}, engine "
+                             f"{cfg.scheduler!r}")
+        if meta["kv_layout"] != cfg.kv_layout:
+            raise ValueError(f"resume(): kv_layout mismatch — journaled "
+                             f"{meta['kv_layout']!r}, engine "
+                             f"{cfg.kv_layout!r}")
+        snap = None
+        if state.snapshots:
+            snap = snapshot_mod.load_snapshot(
+                cfg.snapshot_dir, int(state.snapshots[-1]["step"]))
+
+        # rebuild every Request from the run_start manifest, then apply
+        # the journaled facts (tokens / terminal states)
+        requests: list[Request] = []
+        for d in meta["requests"]:
+            requests.append(Request(
+                uid=int(d["uid"]), expert=d["expert"],
+                prompt=jnp.asarray(d["prompt"], jnp.int32),
+                max_new_tokens=int(d["max_new"]),
+                priority=int(d.get("priority", 1)),
+                deadline_s=d.get("deadline_s"),
+                arrival_s=float(d.get("arrival_s", 0.0)),
+                t_wall=d.get("t_wall")))
+        by_uid = {r.uid: r for r in requests}
+        snap_uids = set(snap.row_uids) if snap is not None else set()
+        replayed: list[Request] = []
+        reserve: list[Request] = []
+        for r in requests:
+            toks = state.tokens.get(r.uid, [])
+            if r.uid in state.failed:
+                r.status = FAILED
+                r.error = state.failed[r.uid]
+                r.out_tokens = list(toks)
+            elif len(toks) >= r.max_new_tokens:
+                r.status = DONE
+                r.out_tokens = list(toks[:r.max_new_tokens])
+            elif snap is not None and r.uid in snap_uids:
+                # continue from restored KV: tokens past the snapshot
+                # regenerate deterministically (verified against the
+                # journaled suffix below)
+                r.out_tokens = list(toks[:snap.emitted[r.uid]])
+                replayed.append(r)
+            else:
+                # KV postdates the snapshot (admitted after it) or the
+                # request was never admitted: full re-serve, prefill
+                # re-runs — bit-identical because streams are uid-keyed
+                r.out_tokens = []
+                reserve.append(r)
+
+        self._t0 = time.monotonic()        # resume-run engine clock zero
+        sched = scheduler_mod.make_scheduler(cfg.scheduler)
+        self._sched = sched
+        if cfg.kv_layout == "paged":
+            self._validate_paged(reserve)
+        for r in reserve:
+            if r.status == PENDING:
+                # arrival offsets are relative to the ORIGINAL clock zero;
+                # anything already due at crash time is due now
+                r.arrival_s = max(0.0, r.arrival_s - state.last_t)
+                sched.push(r)
+        if snap is not None:
+            resident = [n for n in snap.meta.get("resident", ())
+                        if n != BASE]
+            if resident:
+                try:          # warm the device cache; purely opportunistic
+                    self.registry.prefetch(resident)
+                except ExpertUnavailable:
+                    pass
+        continued = demoted = 0
+        if snap is not None and any(by_uid[u].status == PENDING
+                                    for u in snap_uids):
+            continued, demoted = self._resume_wave(snap, by_uid, sched)
+        self._drain(sched)
         for r in requests:
             if r.status == PENDING:
                 r.status = DONE
+        self._verify_journal_prefix(requests, state)
+        self.recovery_stats.update({
+            "resume_seconds": time.monotonic() - t_resume0,
+            "plan": RecoveryPlan(
+                snapshot_step=snap.step if snap is not None else None,
+                journal_records=state.n_records,
+                replayed_rows=continued,
+                reprefilled_rows=len(reserve) + demoted)})
+        self._recovery_t0 = None
+        self.resumed_requests = requests
         self._export_gauges()
         return requests
+
+    def _resume_wave(self, snap, by_uid: dict, sched) -> tuple:
+        """Restore the snapshotted in-flight wave (KV, pending tokens,
+        slot composition, paged allocator) and run it to completion via
+        the shared chunk loop.  Returns ``(continued, demoted)`` row
+        counts; on a failed expert refetch the dead expert's rows FAIL
+        and every other incomplete row is demoted to a full re-serve."""
+        t0 = time.monotonic()
+        experts = list(snap.meta["experts"])
+        live = [u for u in snap.row_uids
+                if by_uid[u].status == PENDING]
+        try:
+            overlay = self._overlay_for(tuple(experts))
+        except ExpertUnavailable as e:
+            demoted = 0
+            for u in live:
+                r = by_uid[u]
+                if r.expert == e.name:
+                    self._fail([r], e)
+                else:
+                    r.out_tokens = []
+                    sched.push(r)
+                    demoted += 1
+            return 0, demoted
+        if overlay is None:
+            raise RuntimeError("resume(): snapshotted wave is not "
+                               "coverable by the zero-merge overlay")
+        rows = [by_uid[u] for u in snap.row_uids]
+        self._mark_admitted(rows)
+        slot = {e: i for i, e in enumerate(experts)}
+        eid = jnp.asarray([slot[r.expert] for r in rows], jnp.int32)
+        keys = decode_loop.row_keys(self.cfg.sampling.seed,
+                                    [r.uid for r in rows])
+        # logical arrays -> this engine's placement (possibly a different
+        # mesh shape than the writer's; values are placement-invariant)
+        cache, tok = snap.device_state(self)
+        if self.cfg.kv_layout == "paged":
+            alloc = paged_kv.BlockAllocator.from_state(
+                self._kv_blocks, self._bs, snap.meta["alloc_free"])
+            row_blocks = {int(j): [int(b) for b in bl]
+                          for j, bl in snap.meta["row_blocks"].items()}
+            self._kv_in_use = alloc.in_use
+            self._kv_peak = max(self._kv_peak, alloc.peak_in_use)
+            try:
+                admitted, chunks = self._chunk_loop(
+                    rows, experts, slot, overlay, eid, tok, keys, cache,
+                    sched, alloc=alloc, row_blocks=row_blocks)
+            finally:
+                for j in list(row_blocks):
+                    alloc.free(row_blocks.pop(j))
+                self._kv_in_use = alloc.in_use
+                assert alloc.in_use == 0, (
+                    f"paged KV leak on resume: {alloc.in_use} blocks "
+                    "still allocated at wave teardown")
+        else:
+            admitted, chunks = self._chunk_loop(
+                rows, experts, slot, overlay, eid, tok, keys, cache,
+                sched, cur=int(snap.meta["cur"]))
+        self._ring_append("wave", {"rows": len(rows),
+                                   "experts": len(experts),
+                                   "admitted": admitted, "chunks": chunks,
+                                   "resumed": True,
+                                   "seconds": time.monotonic() - t0})
+        return len(live), 0
+
+    @staticmethod
+    def _verify_journal_prefix(requests: list[Request], state) -> None:
+        """Bit-identity guard: every journaled token must be a prefix of
+        the post-resume stream.  A mismatch means the restored state or
+        the refetched experts diverged — the resume is unsound and must
+        fail loudly rather than return silently different tokens."""
+        for r in requests:
+            if r.status == FAILED:
+                continue
+            pre = [int(t) for t in
+                   state.tokens.get(r.uid, [])][:r.max_new_tokens]
+            got = [int(t) for t in r.out_tokens[:len(pre)]]
+            if got != pre:
+                raise RuntimeError(
+                    f"resume(): request {r.uid} diverged from the "
+                    f"journal (journaled {pre[:8]}, regenerated "
+                    f"{got[:8]})")
 
     # -- engine clock / SLO bookkeeping --
 
     def _now(self) -> float:
-        return time.perf_counter() - self._t0
+        return time.monotonic() - self._t0
 
     def _mark_admitted(self, reqs: list[Request]) -> None:
         now = self._now()
@@ -387,9 +719,17 @@ class ServeEngine:
             self._validate_paged(requests)
         sched = scheduler_mod.make_scheduler(self.cfg.scheduler)
         self._sched = sched
+        sched.on_decision = lambda d: self._journal_append("sched", d)
         for r in requests:
             if r.status == PENDING:
                 sched.push(r)
+        self._drain(sched)
+        return requests
+
+    def _drain(self, sched) -> None:
+        """Serve the scheduler dry: build waves, serve them, honor future
+        arrivals.  Shared by :meth:`_run_mixed` and :meth:`resume` (which
+        seeds the scheduler with re-served requests by hand)."""
         while sched.pending():
             sched.release(self._now())
             if not sched.ready_count():
@@ -427,7 +767,6 @@ class ServeEngine:
                 self._run_grouped(wave)
                 continue
             self._serve_wave(wave, experts, overlay, sched)
-        return requests
 
     def _pad_prompts(self, reqs: list[Request]) -> tuple:
         """Left-pad prompts to one width.  Returns (tokens [B, T],
@@ -581,6 +920,7 @@ class ServeEngine:
                                                      key_j)
                     self._mark_admitted([nxt])
                     self._mark_first([nxt])
+                    self._journal_admit(nxt, j)
                     refilled.append(j)
                     admitted = True
                     break             # slot j filled; move to the next
@@ -596,7 +936,7 @@ class ServeEngine:
         through the same on-device selector as the compiled loop, so
         temperature/top-k sampling is eager-vs-chunked reproducible: row
         streams depend only on (seed, uid, draw index)."""
-        t0 = time.perf_counter()
+        t0 = time.monotonic()
         self._mark_admitted(wave)
         slot = {e: i for i, e in enumerate(experts)}
         eid = jnp.asarray([slot[r.expert] for r in wave], jnp.int32)
@@ -620,6 +960,7 @@ class ServeEngine:
                     r.out_tokens.append(int(tok_np[j]))
                     self._mark_done(r)
             done = [j for j, r in enumerate(rows) if r is None
+                    or r.status == FAILED
                     or len(r.out_tokens) >= r.max_new_tokens]
             # continuous admission: refill finished slots in place
             if sched is not None and sched.pending() and self._can_admit():
@@ -636,6 +977,7 @@ class ServeEngine:
                         self._mark_done(rows[j])
                 admitted += len(refilled)
                 done = [j for j, r in enumerate(rows) if r is None
+                        or r.status == FAILED
                         or len(r.out_tokens) >= r.max_new_tokens]
             if len(done) == len(rows):
                 break
@@ -647,9 +989,10 @@ class ServeEngine:
                                for r in rows], jnp.int32)
             tok = self._select(logits, keys, gen)
             cur += 1
-        self.wave_log.append({"rows": len(wave), "experts": len(experts),
-                              "admitted": admitted, "chunks": 0,
-                              "seconds": time.perf_counter() - t0})
+        self._ring_append("wave", {"rows": len(wave),
+                                   "experts": len(experts),
+                                   "admitted": admitted, "chunks": 0,
+                                   "seconds": time.monotonic() - t0})
 
     def _drive_chunk(self, params, overlay, eid, tok, cache, rows, keys):
         """Launch ONE compiled K-step chunk and flush its ``[B, K]`` token
@@ -661,7 +1004,11 @@ class ServeEngine:
         advances the host-side position mirror and ``launched`` is False
         when every row was already done (no launch happened)."""
         K = self.cfg.decode_chunk
-        rem = [max(r.max_new_tokens - len(r.out_tokens), 0) for r in rows]
+        # FAILED rows are terminal mid-wave (resume can restore a wave
+        # containing them): they emit nothing and free their slot
+        rem = [0 if r.status == FAILED
+               else max(r.max_new_tokens - len(r.out_tokens), 0)
+               for r in rows]
         if max(rem) == 0:
             return tok, cache, 0, False
         # gen = tokens each row has generated so far (the pending ``tok``
@@ -671,21 +1018,86 @@ class ServeEngine:
                                          jnp.asarray(rem, jnp.int32), gen,
                                          keys)
         buf_np = np.asarray(buf)           # ONE host sync per K steps
+        flushed = []
         for j, r in enumerate(rows):
             n = min(K, rem[j])
             if n:
-                r.out_tokens.extend(int(t) for t in buf_np[j, :n])
+                toks = [int(t) for t in buf_np[j, :n]]
+                r.out_tokens.extend(toks)
                 self._mark_done(r)
+                flushed.append({"uid": r.uid, "n": n, "toks": toks,
+                                "total": len(r.out_tokens)})
+        self._chunk_idx += 1
+        # the chunk boundary IS the WAL sync point: tokens reach the OS
+        # before the next launch, so a SIGKILL costs at most one chunk
+        self._journal_append("chunk", {"i": self._chunk_idx,
+                                       "rows": flushed}, flush=True)
+        if (self._recovery_t0 is not None
+                and "first_resumed_token_s" not in self.recovery_stats):
+            self.recovery_stats["first_resumed_token_s"] = (
+                time.monotonic() - self._recovery_t0)
+        for hook in list(self.chunk_hooks):
+            hook(self._chunk_idx)
         return tok, cache, decode_loop.host_decode_steps(max(rem), K), True
+
+    @staticmethod
+    def _done_rows(rows) -> list:
+        """Slots eligible for refill: budget exhausted OR terminally
+        FAILED (a failed row must never keep decoding — without the
+        status check a restored FAILED row would spin the wave loop
+        forever at rem=0)."""
+        return [j for j, r in enumerate(rows)
+                if r.status == FAILED
+                or len(r.out_tokens) >= r.max_new_tokens]
+
+    def _maybe_snapshot(self, rows, experts, cache, tok, cur,
+                        alloc=None, row_blocks=None) -> None:
+        """Commit a crash-consistent snapshot at the configured chunk
+        cadence (post-flush device state = the exact restart point)."""
+        every = self.cfg.snapshot_every_chunks
+        if (self._journal is None or not every
+                or self._chunk_idx % every != 0):
+            return
+        snapshot_mod.write_snapshot(self, rows=rows, experts=experts,
+                                    cache=cache, tok=tok, cur=cur,
+                                    alloc=alloc, row_blocks=row_blocks)
+
+    def _chunk_loop(self, rows, experts, slot, overlay, eid, tok, keys,
+                    cache, sched, cur=0, alloc=None, row_blocks=None):
+        """Shared chunked wave driver (dense and paged): launch a chunk,
+        flush + journal its tokens, snapshot at the configured cadence,
+        then refill finished slots from the scheduler.  The newcomer's
+        first token stays ON DEVICE: it is the pending ``tok[j]`` the next
+        chunk emits first — no int(tok[j, 0]) read-back per admission.
+        Returns ``(admitted, chunks)``."""
+        admitted = chunks = 0
+        while True:
+            tok, cache, steps, launched = self._drive_chunk(
+                self.base, overlay, eid, tok, cache, rows, keys)
+            cur += steps                   # host mirror (dense path only)
+            chunks += int(launched)
+            if launched:
+                self._maybe_snapshot(rows, experts, cache, tok, cur,
+                                     alloc=alloc, row_blocks=row_blocks)
+            done = self._done_rows(rows)
+            if sched is not None and sched.pending() and self._can_admit():
+                (rows, experts, overlay, eid, tok, keys, cache,
+                 refilled) = self._try_admissions(
+                     rows, done, cur, experts, slot, overlay, eid, tok,
+                     keys, cache, sched, alloc=alloc,
+                     row_blocks=row_blocks)
+                admitted += len(refilled)
+                done = self._done_rows(rows)
+            if len(done) == len(rows):
+                return admitted, chunks
 
     def _serve_wave_chunked(self, wave: list[Request], experts: list[str],
                             overlay: dict, sched) -> None:
         """Device-resident wave loop: K decode steps (stopping masks,
         token selection, KV writes) per compiled launch, ONE host sync per
         chunk to flush the ``[B, K]`` token buffer, then host-side
-        admission — the newcomer's first token is folded into the device
-        token state instead of being read back row by row."""
-        t0 = time.perf_counter()
+        admission via the shared :meth:`_chunk_loop` driver."""
+        t0 = time.monotonic()
         self._mark_admitted(wave)
         slot = {e: i for i, e in enumerate(experts)}
         eid = jnp.asarray([slot[r.expert] for r in wave], jnp.int32)
@@ -702,30 +1114,15 @@ class ServeEngine:
         tok = self._select(logits, keys,
                            jnp.zeros((len(rows),), jnp.int32))
         self._mark_first(rows)
-        admitted = chunks = 0
-        while True:
-            tok, cache, steps, launched = self._drive_chunk(
-                self.base, overlay, eid, tok, cache, rows, keys)
-            cur += steps
-            chunks += int(launched)
-            done = [j for j, r in enumerate(rows)
-                    if len(r.out_tokens) >= r.max_new_tokens]
-            if sched is not None and sched.pending() and self._can_admit():
-                (rows, experts, overlay, eid, tok, keys, cache,
-                 refilled) = self._try_admissions(
-                     rows, done, cur, experts, slot, overlay, eid, tok,
-                     keys, cache, sched)
-                # the newcomer's first token stays ON DEVICE: it is the
-                # pending ``tok[j]`` the next chunk emits first — no
-                # int(tok[j, 0]) read-back per admission
-                admitted += len(refilled)
-                done = [j for j, r in enumerate(rows)
-                        if len(r.out_tokens) >= r.max_new_tokens]
-            if len(done) == len(rows):
-                break
-        self.wave_log.append({"rows": len(wave), "experts": len(experts),
-                              "admitted": admitted, "chunks": chunks,
-                              "seconds": time.perf_counter() - t0})
+        for j, r in enumerate(rows):
+            self._journal_admit(r, j)
+        admitted, chunks = self._chunk_loop(rows, experts, slot, overlay,
+                                            eid, tok, keys, cache, sched,
+                                            cur=cur)
+        self._ring_append("wave", {"rows": len(wave),
+                                   "experts": len(experts),
+                                   "admitted": admitted, "chunks": chunks,
+                                   "seconds": time.monotonic() - t0})
 
     def _admit_row(self, r: Request, j: int, cur: int, cache, tok,
                    overlay, eid, key_row):
@@ -813,7 +1210,7 @@ class ServeEngine:
         a finished row's blocks return to the pool and any queued request
         whose block need fits is placeable — regardless of prompt length
         or how far the wave has decoded."""
-        t0 = time.perf_counter()
+        t0 = time.monotonic()
         alloc = paged_kv.BlockAllocator(self._kv_blocks, self._bs)
         row_blocks: dict[int, list] = {}
         kept: list[Request] = []
@@ -852,32 +1249,29 @@ class ServeEngine:
                 [rows[j] for j in js], js, lp, cache, tok, overlay, eid,
                 keys[jnp.asarray(js, jnp.int32)], row_blocks)
         self._mark_first(rows)
+        for j, r in enumerate(rows):
+            self._journal_admit(r, j)
         self._kv_in_use = alloc.in_use
         self._kv_peak = max(self._kv_peak, alloc.peak_in_use)
-        admitted = chunks = 0
-        while True:
-            tok, cache, _, launched = self._drive_chunk(
-                self.base, overlay, eid, tok, cache, rows, keys)
-            chunks += int(launched)
-            done = [j for j, r in enumerate(rows)
-                    if len(r.out_tokens) >= r.max_new_tokens]
-            if sched is not None and sched.pending() and self._can_admit():
-                (rows, experts, overlay, eid, tok, keys, cache,
-                 refilled) = self._try_admissions(
-                     rows, done, 0, experts, slot, overlay, eid, tok,
-                     keys, cache, sched, alloc=alloc, row_blocks=row_blocks)
-                admitted += len(refilled)
-                done = [j for j, r in enumerate(rows)
-                        if len(r.out_tokens) >= r.max_new_tokens]
-            if len(done) == len(rows):
-                break
-        for j in list(row_blocks):
-            alloc.free(row_blocks.pop(j))
-        self._kv_in_use = alloc.in_use
-        self.wave_log.append({"rows": len(wave), "experts": len(experts),
-                              "admitted": admitted, "chunks": chunks,
-                              "kv_blocks_peak": alloc.peak_in_use,
-                              "seconds": time.perf_counter() - t0})
+        try:
+            admitted, chunks = self._chunk_loop(
+                rows, experts, slot, overlay, eid, tok, keys, cache,
+                sched, alloc=alloc, row_blocks=row_blocks)
+        finally:
+            # leak-proof teardown: every live row's blocks return to the
+            # pool on ANY exit (fault paths included), and the allocator
+            # must balance — a leak here would starve every later wave
+            for j in list(row_blocks):
+                alloc.free(row_blocks.pop(j))
+            self._kv_in_use = alloc.in_use
+            assert alloc.in_use == 0, (
+                f"paged KV leak: {alloc.in_use} blocks still allocated "
+                "at wave teardown")
+        self._ring_append("wave", {"rows": len(wave),
+                                   "experts": len(experts),
+                                   "admitted": admitted, "chunks": chunks,
+                                   "kv_blocks_peak": alloc.peak_in_use,
+                                   "seconds": time.monotonic() - t0})
 
     def _serve_batch(self, params, reqs: list[Request]) -> None:
         """Merge-path batch (single expert): prefill then decode."""
@@ -954,7 +1348,8 @@ class ServeEngine:
         s["swap_seconds"] = sum(x["seconds"] for x in self.swap_log)
         s["n_waves"] = len(self.wave_log)
         s["admitted"] = sum(x["admitted"] for x in self.wave_log)
-        s["failed"] = len(self.failed_log)
+        s["failed"] = self.failed_total
+        s["log_dropped"] = dict(self._log_dropped)
         hits = s.get("stack_hits", 0)
         builds = s.get("stack_builds", 0)
         s["stack_hit_rate"] = hits / max(hits + builds, 1)

@@ -355,7 +355,7 @@ class RemoteExpertStore(ExpertStore):
             if ex is None:
                 self._check_quarantine(name)
         if ex is None:
-            t0 = time.perf_counter()
+            t0 = time.monotonic()
             try:
                 # the transport's RetryPolicy spans decode: a corrupt
                 # blob (ChecksumError) is refetched, not surfaced
@@ -369,7 +369,7 @@ class RemoteExpertStore(ExpertStore):
             except TransportError as e:
                 self._record_failure(name)
                 raise ExpertUnavailable(name, str(e)) from e
-            dt = time.perf_counter() - t0
+            dt = time.monotonic() - t0
             self._record_success(name)
             with self._lock:
                 if not self._local(name):   # lost a race: keep first copy
@@ -557,10 +557,10 @@ class DeviceCache:
     def _stage(self, name: str):
         """Worker-thread half of a promotion: everything up to (but not
         including) the device transfer."""
-        t0 = time.perf_counter()
+        t0 = time.monotonic()
         art = self.store.get(name)      # remote fetch / cold Golomb decode
         packed_host = art.packed        # plane build (host)
-        dt = time.perf_counter() - t0
+        dt = time.monotonic() - t0
         self._observe_promotion(dt)
         return packed_host, dt
 
@@ -585,7 +585,7 @@ class DeviceCache:
             self.stats.hits += 1
             return self._cache[name]
         self.stats.misses += 1
-        t0 = time.perf_counter()
+        t0 = time.monotonic()
         host_packed = None
         fut = self._pending.pop(name, None)
         if fut is not None:
@@ -612,9 +612,9 @@ class DeviceCache:
                 self._sync_remote_stats()    # failures still hit the ledger
                 raise
             if self.store.cold_golomb:
-                self.stats.golomb_decode_seconds += time.perf_counter() - t0
+                self.stats.golomb_decode_seconds += time.monotonic() - t0
             host_packed = art.packed
-            self._observe_promotion(time.perf_counter() - t0)
+            self._observe_promotion(time.monotonic() - t0)
         self._sync_remote_stats()
         self.stats.store_to_host_bytes += self.store.nbytes(name)
         packed = jax.tree_util.tree_map(
@@ -628,7 +628,7 @@ class DeviceCache:
         self._sizes[name] = size
         self.stats.host_to_device_bytes += size        # packed, not dense
         self.stats.promotions += 1
-        self.stats.seconds += time.perf_counter() - t0
+        self.stats.seconds += time.monotonic() - t0
         return packed
 
     def _sync_remote_stats(self) -> None:
@@ -647,7 +647,7 @@ class DeviceCache:
             self.stats.retries = transport.stats.retries
             self.stats.transport_bytes_wasted = transport.stats.bytes_wasted
         with self._straggler_lock:
-            self.stats.straggler_flags = len(self.straggler.flagged_steps)
+            self.stats.straggler_flags = self.straggler.flags
             self.stats.straggler_recommendation = \
                 self.straggler.recommendation()
 
@@ -882,7 +882,7 @@ class ExpertRegistry:
                 out["straggler"] = {
                     "recommendation":
                         self._device.straggler.recommendation(),
-                    "flags": len(self._device.straggler.flagged_steps),
+                    "flags": self._device.straggler.flags,
                     "ewma_s": self._device.straggler.ewma,
                 }
             if self._device.gauges:

@@ -109,6 +109,27 @@ class BlockAllocator:
                 raise ValueError(f"double free of block {b}")
             self._free.append(b)
 
+    # -- crash-consistency (repro.serve.snapshot) -------------------------
+
+    def state(self) -> list:
+        """Free-list snapshot in exact order.  ``alloc`` pops from the
+        tail, so the order IS the future allocation order — restoring it
+        verbatim makes post-resume block assignment deterministic."""
+        return list(self._free)
+
+    @classmethod
+    def from_state(cls, n_blocks: int, block_size: int,
+                   free: list) -> "BlockAllocator":
+        """Rebuild an allocator from a snapshotted free list."""
+        a = cls(n_blocks, block_size)
+        ids = [int(b) for b in free]
+        if len(set(ids)) != len(ids) or any(
+                not (0 < b < n_blocks) for b in ids):
+            raise ValueError(f"invalid snapshotted free list: {ids}")
+        a._free = ids
+        a.peak_in_use = a.in_use
+        return a
+
 
 def init_paged_cache(cfg: ModelConfig, batch: int, n_blocks: int,
                      block_size: int, max_blocks: int, dtype=None,

@@ -58,6 +58,16 @@ class FIFOScheduler:
         self._future: list = []        # arrival_s in the engine's future
         self.queue_depth_max = 0
         self.deferred = 0              # placeable-skips (non-FIFO only)
+        # journal hook (repro.serve.journal): the engine sets this to
+        # record wave-building decisions as WAL events; None = no-op
+        self.on_decision = None
+
+    def _note_wave(self, wave: list, experts: list) -> None:
+        """Report one take_wave decision to the journal hook."""
+        if self.on_decision is not None and wave:
+            self.on_decision({"event": "take_wave", "policy": self.name,
+                              "uids": [r.uid for r in wave],
+                              "experts": list(experts)})
 
     # -- intake -----------------------------------------------------------
 
@@ -112,6 +122,7 @@ class FIFOScheduler:
             if r.expert not in experts:
                 experts.append(r.expert)
             wave.append(self._ready.popleft())
+        self._note_wave(wave, experts)
         return wave, experts
 
     # -- slot-refill admission --------------------------------------------
@@ -167,6 +178,7 @@ class PriorityScheduler(FIFOScheduler):
             wave.append(r)
         for r in wave:
             self._ready.remove(r)
+        self._note_wave(wave, experts)
         return wave, experts
 
     def candidates(self, slot: dict) -> list:
@@ -217,6 +229,7 @@ class AffinityScheduler(PriorityScheduler):
         # tuples wave after wave (the stack_hits lever)
         experts = sorted({r.expert for r in wave})
         self._last_experts = frozenset(experts)
+        self._note_wave(wave, experts)
         return wave, experts
 
     def candidates(self, slot: dict) -> list:

@@ -1,0 +1,152 @@
+"""Crash-consistent serving snapshots, written through checkpoint.manager.
+
+A snapshot captures everything a resumed engine cannot re-derive cheaply
+at a chunk boundary:
+
+* the in-flight wave — the full KV cache pytree (dense ring slots *or*
+  paged block pools + tables/lens/active) and the pending ``tok`` [B, 1]
+  (generated but not yet emitted), as logical/unsharded arrays so the
+  restore side may place them on any mesh shape (PR 9's cross-mesh
+  parity makes the continuation bitwise-identical either way);
+* row composition metadata — slot order (uids), the wave's ordered
+  expert tuple, per-row emitted-token counts, the dense host position
+  mirror ``cur``, and on the paged path the allocator free list (exact
+  LIFO order — the allocation-order contract) plus per-row block lists;
+* the device-cache residency manifest (which experts were HBM-resident —
+  resume prefetches them so recovery does not serialize cold fetches),
+  cumulative :class:`~repro.serve.expert_cache.SwapStats`, and the
+  sampling config whose ``seed`` roots every row's fold-in RNG stream
+  (per-row keys are pure functions of ``(seed, uid)``, so "RNG state" is
+  two integers per row, not a device buffer).
+
+Persistence goes through :func:`repro.checkpoint.manager.save`: arrays
+land in one npz, metadata rides the manifest (``extra_meta``), and the
+tmp-dir + ``os.rename`` commit makes the snapshot atomic — a SIGKILL
+mid-write leaves either the previous complete snapshot or none.  The
+engine appends a ``snap`` journal record (and fsyncs) only *after* the
+rename returns, so a journal that names a step always names a complete
+snapshot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager
+
+PyTree = Any
+
+
+def write_snapshot(engine, *, rows, experts, cache, tok, cur: int = 0,
+                   alloc=None, row_blocks=None) -> str:
+    """Commit one engine snapshot at the current chunk boundary.
+
+    Called by the engine's chunk loop right after a chunk's tokens were
+    flushed (and journaled), with the post-chunk device state — ``tok``
+    is the pending token the *next* chunk will emit first, which is
+    exactly the restart point.  Returns the committed directory.
+    """
+    step = engine._chunk_idx
+    meta = {
+        "kind": "serve_snapshot",
+        "chunk": step,
+        "kv_layout": engine.cfg.kv_layout,
+        "experts": list(experts),
+        "row_uids": [r.uid for r in rows],
+        "row_emitted": {str(r.uid): len(r.out_tokens) for r in rows},
+        "cur": int(cur),
+        "sampling": engine.cfg.sampling.to_meta(),
+        "scheduler": engine.cfg.scheduler,
+        "resident": list(engine.cache.resident()),
+        "stats": engine.cache.stats.as_dict(),
+    }
+    if alloc is not None:
+        meta["alloc_free"] = alloc.state()
+        meta["row_blocks"] = {str(j): list(b)
+                              for j, b in row_blocks.items()}
+    state = {"cache": cache, "tok": tok}
+    path = manager.save(state, engine.cfg.snapshot_dir, step,
+                        extra_meta=meta)
+    if engine._journal is not None:
+        engine._journal.append("snap", {"step": step,
+                                        "rows": meta["row_emitted"]},
+                               t=engine._now())
+        engine._journal.sync()
+    return path
+
+
+@dataclasses.dataclass
+class Snapshot:
+    """A loaded snapshot: metadata + logical (numpy) arrays."""
+
+    step: int
+    meta: dict
+    cache_np: dict                     # nested KV cache pytree of ndarrays
+    tok_np: np.ndarray                 # [B, 1] pending tokens
+
+    @property
+    def row_uids(self) -> list:
+        return list(self.meta["row_uids"])
+
+    @property
+    def emitted(self) -> dict:
+        return {int(u): int(n)
+                for u, n in self.meta["row_emitted"].items()}
+
+    def device_state(self, engine) -> tuple:
+        """-> (cache, tok) placed for ``engine`` — possibly a different
+        mesh shape than the writer's (elastic restore: arrays on disk are
+        logical, so placement is free to differ; values cannot)."""
+        mesh = engine.mesh
+        paged = self.meta["kv_layout"] == "paged"
+        if mesh is not None and paged:
+            from repro.distributed.sharding import serve_kv_sharding
+
+            def place_pool(z):
+                return jax.device_put(
+                    z, serve_kv_sharding(mesh, tuple(z.shape),
+                                         layout="paged"))
+        else:
+            place_pool = jnp.asarray
+        cache: dict = {}
+        for key, val in self.cache_np.items():
+            if key == "layers":
+                cache["layers"] = {
+                    name: {kv: place_pool(arr) if paged else jnp.asarray(arr)
+                           for kv, arr in st.items()}
+                    for name, st in val.items()}
+            else:
+                cache[key] = jnp.asarray(val)
+        return cache, jnp.asarray(self.tok_np, jnp.int32)
+
+
+def _unflatten(arrays: dict) -> dict:
+    """``{"a/b/c": arr}`` -> nested dicts (inverse of the manager's
+    path-string flatten for the dict-only snapshot pytree)."""
+    out: dict = {}
+    for path, arr in arrays.items():
+        node = out
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return out
+
+
+def load_snapshot(snapshot_dir: str, step: Optional[int] = None
+                  ) -> Snapshot:
+    """Load a committed snapshot (latest step if unspecified)."""
+    manifest, arrays = manager.load_raw(snapshot_dir, step)
+    meta = manifest.get("extra")
+    if not meta or meta.get("kind") != "serve_snapshot":
+        raise ValueError(f"{snapshot_dir} step {manifest['step']}: "
+                         "not a serve snapshot")
+    tree = _unflatten(arrays)
+    return Snapshot(step=int(manifest["step"]), meta=meta,
+                    cache_np=tree["cache"],
+                    tok_np=np.asarray(tree["tok"]))

@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from collections import defaultdict
+from collections import defaultdict, deque
 from typing import Iterable, Optional
 
 import numpy as np
@@ -128,7 +128,11 @@ class ChaosTransport(ExpertTransport):
         self._counts: defaultdict[str, int] = defaultdict(int)
         self._rng = np.random.default_rng(seed)
         self._chaos_lock = threading.Lock()
-        self.log: list[dict] = []
+        # bounded ring: a chaos schedule under a week-long soak must not
+        # grow host memory without bound; ``log_dropped`` counts evictions
+        self.log: deque = deque(maxlen=1024)
+        self.log_dropped = 0
+        self._saw_replica_blackout = False
 
     # ---- fault scheduling ----------------------------------------------
     def _replica_kind(self, idx: int) -> tuple[Optional[str], float]:
@@ -167,6 +171,12 @@ class ChaosTransport(ExpertTransport):
             if kind is None:
                 kind, delay = self._replica_kind(idx)
             if kind is not None:
+                if kind == "replica_blackout":
+                    # sticky flag: _replica_dark must keep answering True
+                    # even after the ring evicts the triggering event
+                    self._saw_replica_blackout = True
+                if len(self.log) == self.log.maxlen:
+                    self.log_dropped += 1
                 self.log.append({"name": name, "fetch": idx, "kind": kind})
             return kind, delay
 
@@ -267,8 +277,7 @@ class ChaosTransport(ExpertTransport):
         for f in self.replica_faults:
             if f.kind != "blackout":
                 continue
-            if f.at == 0 or any(e["kind"] == "replica_blackout"
-                                for e in self.log):
+            if f.at == 0 or self._saw_replica_blackout:
                 return True
         return False
 

@@ -229,10 +229,10 @@ class ReplicatedTransport(ExpertTransport):
         r = self.replicas[ri]
         if st.raw_head is None or len(st.raw_head) < _HEADER.size:
             have = len(st.raw_head) if st.raw_head else 0
-            t0 = time.perf_counter()
+            t0 = time.monotonic()
             chunk = r.get_range(name, have, max(self.probe_bytes - have,
                                                 _HEADER.size))
-            self._observe(ri, time.perf_counter() - t0)
+            self._observe(ri, time.monotonic() - t0)
             st.fetched += len(chunk)
             st.raw_head = (st.raw_head or b"") + chunk
         if len(st.raw_head) < _HEADER.size:
@@ -240,10 +240,10 @@ class ReplicatedTransport(ExpertTransport):
                 f"blob for {name!r} shorter than the wire header")
         need = payload_offset(st.raw_head)      # validates magic too
         if len(st.raw_head) < need:
-            t0 = time.perf_counter()
+            t0 = time.monotonic()
             more = r.get_range(name, len(st.raw_head),
                                need - len(st.raw_head))
-            self._observe(ri, time.perf_counter() - t0)
+            self._observe(ri, time.monotonic() - t0)
             st.fetched += len(more)
             st.raw_head += more
             if len(st.raw_head) < need:
@@ -285,9 +285,9 @@ class ReplicatedTransport(ExpertTransport):
                 head_part = st.prefix[off:pref] if off < pref else b""
                 start_abs = st.payload_abs + max(off, pref)
                 need = n - len(head_part)
-                t0 = time.perf_counter()
+                t0 = time.monotonic()
                 chunk = r.get_range(name, start_abs, need)
-                self._observe(ri, time.perf_counter() - t0)
+                self._observe(ri, time.monotonic() - t0)
                 st.fetched += len(chunk)
                 pulled = len(chunk)
                 if len(chunk) != need:
@@ -461,7 +461,7 @@ class ReplicatedTransport(ExpertTransport):
         prev = getattr(_DEADLINE, "until", None)
         if pol.deadline_s is not None:
             _DEADLINE.until = time.monotonic() + pol.deadline_s
-        t0 = time.perf_counter()
+        t0 = time.monotonic()
         try:
             if self.hedge_ms is not None and len(self.replicas) > 1:
                 blob, st = self._hedged_fetch(name, pol)
@@ -472,11 +472,11 @@ class ReplicatedTransport(ExpertTransport):
                 # a failed fetch bought nothing: everything it pulled
                 # (including verified leaves) is waste
                 self.stats.bytes_wasted += st.fetched
-                self.stats.fetch_seconds += time.perf_counter() - t0
+                self.stats.fetch_seconds += time.monotonic() - t0
             raise
         finally:
             _DEADLINE.until = prev
-        dt = time.perf_counter() - t0
+        dt = time.monotonic() - t0
         with self._stats_lock:
             self.stats.fetches += 1
             self.stats.bytes_in += st.fetched
@@ -543,7 +543,7 @@ class ReplicatedTransport(ExpertTransport):
                 reps.append({"replica": i, "id": self.replica_ids[i],
                              "ewma_s": st.monitor.ewma,
                              "failures": st.failures,
-                             "flagged": len(st.monitor.flagged_steps),
+                             "flagged": st.monitor.flags,
                              "recommendation": st.monitor.recommendation(),
                              "quarantined_for_s": q_for,
                              "quarantines": st.quarantines,

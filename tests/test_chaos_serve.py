@@ -146,6 +146,46 @@ def test_degrade_raise_propagates(fixture):
     reg.close()
 
 
+def test_blackout_paged_affinity_survivors_exact(fixture):
+    """Chaos on the hard path: paged KV + AffinityScheduler + a
+    blacked-out expert arriving mid-wave.  The dead expert's requests
+    must FAIL with the typed error, survivors must stay bit-identical to
+    the no-fault run, the block allocator must balance at teardown (no
+    leaked KV blocks on the failure path), and no queued request may
+    starve behind the failures."""
+    api, base, experts, prompts = fixture
+    stream = ["expert0", "expert1", "expert0", "expert2", "expert1",
+              "expert2", "expert0", "expert1"]
+    kw = dict(max_batch=3, cache_len=32, kv_layout="paged",
+              scheduler="affinity")
+
+    reg0, _ = _registry(experts)
+    eng0 = rapi.serve(api, RT, base, reg0, **kw)
+    clean = _reqs(prompts, stream)
+    eng0.run(clean)
+    assert all(r.status == DONE for r in clean)
+    want = {r.uid: list(r.out_tokens) for r in clean}
+    reg0.close()
+
+    reg, _ = _registry(experts, blackout=["expert2"])
+    eng = rapi.serve(api, RT, base, reg, **kw)
+    reqs = _reqs(prompts, stream)
+    eng.run(reqs)
+    for r in reqs:
+        if r.expert == "expert2":
+            assert r.status == FAILED            # typed, terminal
+            assert "expert2" in r.error and "unavailable" in r.error
+        else:
+            # no starvation: every healthy request completes, exactly
+            assert r.status == DONE
+            assert r.out_tokens == want[r.uid]
+    s = eng.swap_summary()
+    assert s["failed"] == 2
+    assert s["kv"]["blocks_in_use"] == 0         # free list balanced
+    assert s["log_dropped"] == {"swap": 0, "wave": 0, "failed": 0}
+    reg.close()
+
+
 def test_quarantine_reprobe_recovers():
     """After the probe window a restored replica serves again and its
     health account resets (no engine needed: store-level contract)."""

@@ -1,0 +1,294 @@
+"""Kill–restart recovery: a crashed engine resumed from its journal (+
+snapshot) must produce bit-identical continuation tokens to the
+uninterrupted run — greedy AND sampled, dense AND paged KV — and the
+journal itself must be torn-tail tolerant (the WAL property).  The
+subprocess SIGKILL variant of these gates lives in ``perf_lab --exp
+chaos_restart``; here the crash is an exception raised from a chunk hook,
+which exercises the same journal/snapshot/replay machinery in-process."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api as rapi
+from repro.configs import get_smoke_config
+from repro.models import Runtime, build
+from repro.serve import (DONE, FAILED, JournalWriter, Request, read_records,
+                         replay)
+from repro.serve.paged_kv import BlockAllocator
+from repro.transport import InMemoryTransport
+
+RT = Runtime(attn_chunk_q=16, attn_chunk_k=16, remat_policy="none")
+N_EXPERTS = 3
+
+
+# ---------------------------------------------------------------------------
+# journal container (no model needed)
+# ---------------------------------------------------------------------------
+
+
+def test_journal_roundtrip_and_torn_tail(tmp_path):
+    path = str(tmp_path / "journal.bin")
+    w = JournalWriter(path)
+    w.append("run_start", {"requests": []}, t=0.0)
+    w.append("chunk", {"i": 1, "rows": [{"uid": 0, "n": 2,
+                                         "toks": [5, 7], "total": 2}]},
+             t=0.5)
+    w.append("run_end", {"requests": 1}, t=1.0)
+    w.close()
+    recs = read_records(path)
+    assert [r["k"] for r in recs] == ["run_start", "chunk", "run_end"]
+    assert recs[1]["d"]["rows"][0]["toks"] == [5, 7]
+
+    # torn tail: truncate mid-frame — the intact prefix must survive
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size - 3)
+    recs = read_records(path)
+    assert [r["k"] for r in recs] == ["run_start", "chunk"]
+
+    # CRC corruption ends the scan at the damaged frame
+    w = JournalWriter(path, fresh=True)
+    w.append("run_start", {"requests": []})
+    w.append("chunk", {"i": 1, "rows": []})
+    w.close()
+    with open(path, "r+b") as f:
+        f.seek(-2, os.SEEK_END)
+        f.write(b"\xff")
+    assert [r["k"] for r in read_records(path)] == ["run_start"]
+
+
+def test_journal_replay_folds_tokens(tmp_path):
+    path = str(tmp_path / "journal.bin")
+    w = JournalWriter(path)
+    w.append("run_start", {"requests": [{"uid": 0}, {"uid": 1}]}, t=0.0)
+    w.append("chunk", {"i": 1, "rows": [
+        {"uid": 0, "n": 2, "toks": [1, 2], "total": 2}]}, t=0.1)
+    w.append("chunk", {"i": 2, "rows": [
+        {"uid": 0, "n": 1, "toks": [3], "total": 3},
+        {"uid": 1, "n": 2, "toks": [9, 9], "total": 2}]}, t=0.2)
+    w.append("fail", {"uid": 1, "error": "boom"}, t=0.3)
+    w.close()                              # no run_end: a crashed run
+    st = replay(path)
+    assert st.tokens == {0: [1, 2, 3], 1: [9, 9]}
+    assert st.failed == {1: "boom"}
+    assert st.chunks == 2 and not st.clean_end
+    assert st.last_t == pytest.approx(0.3)
+
+
+def test_journal_requires_run_start(tmp_path):
+    path = str(tmp_path / "journal.bin")
+    w = JournalWriter(path)
+    w.append("chunk", {"i": 1, "rows": []})
+    w.close()
+    with pytest.raises(ValueError, match="run_start"):
+        replay(path)
+
+
+def test_allocator_state_roundtrip():
+    a = BlockAllocator(9, 4)
+    first = a.alloc(3)
+    restored = BlockAllocator.from_state(9, 4, a.state())
+    assert restored.in_use == a.in_use
+    # the restored free list must replay the SAME allocation order
+    assert restored.alloc(2) == a.alloc(2)
+    with pytest.raises(ValueError):
+        BlockAllocator.from_state(9, 4, [1, 1, 2])     # duplicate id
+    with pytest.raises(ValueError):
+        BlockAllocator.from_state(9, 4, [0, 2])        # reserved block
+    assert first is not None
+
+
+# ---------------------------------------------------------------------------
+# crash -> resume parity (engine-level)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    cfg = get_smoke_config("qwen2_5_3b", n_units=1)
+    api = build(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    experts = []
+    for i in range(N_EXPERTS):
+        leaves, tdef = jax.tree_util.tree_flatten(base)
+        keys = jax.random.split(jax.random.PRNGKey(100 + i), len(leaves))
+        ft = jax.tree_util.tree_unflatten(tdef, [
+            (l.astype(jnp.float32)
+             + 0.01 * jax.random.normal(k, l.shape)).astype(l.dtype)
+            for l, k in zip(leaves, keys)])
+        experts.append(rapi.compress(base, ft, name=f"expert{i}",
+                                     density=0.2))
+    rng = np.random.default_rng(0)
+    prompts = [jnp.asarray(rng.integers(1, cfg.vocab, 6), jnp.int32)
+               for _ in range(8)]
+    return api, base, experts, prompts
+
+
+def _registry(experts):
+    inner = InMemoryTransport()
+    for e in experts:
+        rapi.publish(e, inner)
+    return rapi.registry(transport=inner)
+
+
+STREAM = ["expert0", "expert1", "expert2", "expert0", "expert1", "expert2"]
+
+
+def _reqs(prompts, max_new=8):
+    # 8 tokens = 4 chunks at decode_chunk=2, so a kill at chunk 3 lands
+    # MID-generation: resume must restore KV from the snapshot (the
+    # replay tier), not just fold the journal and re-prefill
+    return [Request(uid=i, expert=e, prompt=prompts[i],
+                    max_new_tokens=max_new)
+            for i, e in enumerate(STREAM)]
+
+
+class _Crash(Exception):
+    pass
+
+
+def _crash_at(eng, chunk_idx):
+    def hook(i):
+        if i == chunk_idx:
+            raise _Crash(f"injected crash at chunk {i}")
+    eng.chunk_hooks.append(hook)
+
+
+def _run_pair(api, base, experts, prompts, tmp_path, kill_at, **kw):
+    """(baseline tokens, resumed requests, resumed engine)."""
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("cache_len", 32)
+    kw.setdefault("decode_chunk", 2)
+    reg0 = _registry(experts)
+    eng0 = rapi.serve(api, RT, base, reg0, **kw)
+    clean = _reqs(prompts)
+    eng0.run(clean)
+    assert all(r.status == DONE for r in clean)
+    want = {r.uid: list(r.out_tokens) for r in clean}
+    reg0.close()
+
+    snap_dir = str(tmp_path / "snap")
+    reg1 = _registry(experts)
+    eng1 = rapi.serve(api, RT, base, reg1, snapshot_dir=snap_dir,
+                      snapshot_every_chunks=1, **kw)
+    _crash_at(eng1, kill_at)
+    with pytest.raises(_Crash):
+        eng1.run(_reqs(prompts))
+    reg1.close()
+
+    reg2 = _registry(experts)
+    eng2 = rapi.serve(api, RT, base, reg2, snapshot_dir=snap_dir,
+                      snapshot_every_chunks=1, **kw)
+    out = eng2.resume()
+    reg2.close()
+    return want, out, eng2
+
+
+def test_crash_resume_dense_greedy(fixture, tmp_path):
+    api, base, experts, prompts = fixture
+    want, out, eng = _run_pair(api, base, experts, prompts, tmp_path,
+                               kill_at=3)
+    assert all(r.status == DONE for r in out)
+    assert {r.uid: r.out_tokens for r in out} == want
+    plan = eng.recovery_stats["plan"]
+    assert plan.snapshot_step is not None
+    assert plan.replayed_rows > 0          # snapshot KV actually restored
+    assert plan.journal_records > 0
+    assert eng.recovery_stats["resume_seconds"] > 0
+    assert "first_resumed_token_s" in eng.recovery_stats
+
+
+def test_crash_resume_paged_sampled_affinity(fixture, tmp_path):
+    """The hard quadrant: paged KV + affinity scheduler + temperature
+    sampling.  Resume must restore the allocator free list (allocation
+    order is part of the determinism contract) and the sampled streams
+    must continue bit-identically."""
+    api, base, experts, prompts = fixture
+    want, out, eng = _run_pair(api, base, experts, prompts, tmp_path,
+                               kill_at=3, kv_layout="paged",
+                               scheduler="affinity",
+                               temperature=0.8, top_k=20, seed=7)
+    assert all(r.status == DONE for r in out)
+    assert {r.uid: r.out_tokens for r in out} == want
+    # allocator balanced after the resumed run (leak gate)
+    assert eng.swap_summary()["kv"]["blocks_in_use"] == 0
+
+
+def test_resume_journal_only(fixture, tmp_path):
+    """snapshot_every_chunks=0: no KV snapshot exists, so every
+    incomplete request re-serves from its prompt — still bit-identical,
+    and the plan records the journal-only tier."""
+    api, base, experts, prompts = fixture
+    kw = dict(max_batch=4, cache_len=32, decode_chunk=2)
+    reg0 = _registry(experts)
+    eng0 = rapi.serve(api, RT, base, reg0, **kw)
+    clean = _reqs(prompts)
+    eng0.run(clean)
+    want = {r.uid: list(r.out_tokens) for r in clean}
+    reg0.close()
+
+    snap_dir = str(tmp_path / "snap")
+    reg1 = _registry(experts)
+    eng1 = rapi.serve(api, RT, base, reg1, snapshot_dir=snap_dir, **kw)
+    _crash_at(eng1, 2)
+    with pytest.raises(_Crash):
+        eng1.run(_reqs(prompts))
+    reg1.close()
+
+    reg2 = _registry(experts)
+    # api.serve(resume=True) is the one-call restart path
+    eng2 = rapi.serve(api, RT, base, reg2, snapshot_dir=snap_dir,
+                      resume=True, **kw)
+    out = eng2.resumed_requests
+    assert all(r.status == DONE for r in out)
+    assert {r.uid: r.out_tokens for r in out} == want
+    plan = eng2.recovery_stats["plan"]
+    assert plan.snapshot_step is None
+    assert plan.replayed_rows == 0
+    reg2.close()
+
+
+def test_resume_refuses_mismatched_sampling(fixture, tmp_path):
+    api, base, experts, prompts = fixture
+    kw = dict(max_batch=4, cache_len=32, decode_chunk=2)
+    snap_dir = str(tmp_path / "snap")
+    reg1 = _registry(experts)
+    eng1 = rapi.serve(api, RT, base, reg1, snapshot_dir=snap_dir,
+                      seed=7, temperature=0.8, **kw)
+    _crash_at(eng1, 2)
+    with pytest.raises(_Crash):
+        eng1.run(_reqs(prompts))
+    reg1.close()
+
+    reg2 = _registry(experts)
+    eng2 = rapi.serve(api, RT, base, reg2, snapshot_dir=snap_dir,
+                      seed=8, temperature=0.8, **kw)
+    with pytest.raises(ValueError, match="sampling mismatch"):
+        eng2.resume()
+    reg2.close()
+
+
+def test_completed_run_resumes_from_journal_alone(fixture, tmp_path):
+    """A clean run's journal fully reconstructs the results (run_end +
+    all tokens journaled) without re-serving anything."""
+    api, base, experts, prompts = fixture
+    kw = dict(max_batch=4, cache_len=32, decode_chunk=2)
+    snap_dir = str(tmp_path / "snap")
+    reg = _registry(experts)
+    eng = rapi.serve(api, RT, base, reg, snapshot_dir=snap_dir, **kw)
+    reqs = _reqs(prompts)
+    eng.run(reqs)
+    want = {r.uid: list(r.out_tokens) for r in reqs}
+    n_waves_before = len(eng.wave_log)
+
+    eng2 = rapi.serve(api, RT, base, reg, snapshot_dir=snap_dir, **kw)
+    out = eng2.resume()
+    assert {r.uid: r.out_tokens for r in out} == want
+    assert all(r.status == DONE for r in out)
+    assert len(eng2.wave_log) == 0         # nothing re-served
+    assert n_waves_before > 0
+    reg.close()
